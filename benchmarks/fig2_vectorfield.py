@@ -1,0 +1,40 @@
+"""Paper Figure 2: vector-field evaluation time vs N is O(N^2).
+
+Times a single LLG field evaluation (with coupling) for random m across N,
+fits the log-log slope, and emits CSV. The paper's figure shows the same
+quadratic growth for its NumPy implementation.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import csv_row, time_fn
+from repro.core import default_params, llg_field, make_coupling_matrix
+
+NS = [64, 128, 256, 512, 1024, 2048, 4096]
+
+
+def run(print_fn=print):
+    p = default_params(jnp.float32)
+    rows, times = [], []
+    for n in NS:
+        w = jnp.asarray(make_coupling_matrix(n, seed=0), jnp.float32)
+        m = jax.random.normal(jax.random.PRNGKey(0), (n, 3), jnp.float32)
+        m = m / jnp.linalg.norm(m, axis=-1, keepdims=True)
+        f = jax.jit(lambda mm: llg_field(mm, p, w))
+        t = time_fn(f, m, reps=5, warmup=2)
+        times.append(t)
+        rows.append(csv_row(f"fig2_field_eval_n{n}", t * 1e6, "o_n2_scaling"))
+        print_fn(rows[-1])
+    # log-log slope over the largest Ns (small Ns are overhead-dominated)
+    slope = np.polyfit(np.log(NS[-4:]), np.log(times[-4:]), 1)[0]
+    rows.append(csv_row("fig2_loglog_slope", slope, "expect_~2_quadratic"))
+    print_fn(rows[-1])
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,43 @@
+"""Reservoir-quality benchmark (supports the paper's application context):
+NARMA-2 NMSE and memory capacity for a small STO reservoir — the numbers a
+parameter sweep optimizes, produced end-to-end by this framework."""
+
+from __future__ import annotations
+
+import numpy as np
+import jax.numpy as jnp
+
+from benchmarks.common import csv_row, time_fn
+from repro.core import drive, fit_ridge, make_reservoir, nmse, predict, tasks
+
+
+def run(print_fn=print):
+    rows = []
+    u, y = tasks.narma_series(400, order=2, seed=0)
+    res = make_reservoir(n=32, n_in=1, hold_steps=30, dtype=jnp.float64)
+
+    t = time_fn(lambda: drive(res, jnp.asarray(u[:, None]))[1], reps=2)
+    _, states = drive(res, jnp.asarray(u[:, None]))
+    rows.append(csv_row("reservoir_drive_400samples", t * 1e6,
+                        f"us_per_sample_{t/400*1e6:.1f}"))
+    print_fn(rows[-1])
+
+    washout = 60
+    ro = fit_ridge(states, jnp.asarray(y[:, None]), washout=washout, reg=1e-8)
+    err = nmse(predict(ro, states), jnp.asarray(y[washout:, None]))
+    rows.append(csv_row("reservoir_narma2_nmse", err * 1e6, "nmse_x1e6_lower_better"))
+    print_fn(rows[-1])
+
+    rng = np.random.default_rng(1)
+    u2 = rng.uniform(-1, 1, 400)
+    _, st2 = drive(res, jnp.asarray(u2[:, None]))
+    tg = tasks.delay_memory_targets(u2, 8)
+    ro2 = fit_ridge(st2, jnp.asarray(tg), washout=washout, reg=1e-8)
+    mc = tasks.memory_capacity(np.asarray(predict(ro2, st2)), tg[washout:])
+    rows.append(csv_row("reservoir_memory_capacity_d8", mc, "sum_corr2_8_delays"))
+    print_fn(rows[-1])
+    return rows
+
+
+if __name__ == "__main__":
+    run()

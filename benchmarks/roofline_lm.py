@@ -1,0 +1,37 @@
+"""Roofline summary for the assigned (arch x shape) cells: reads the JSON
+artifacts produced by launch/dryrun.py + launch/roofline.py and emits the
+per-cell terms as CSV (also the source of the EXPERIMENTS.md table)."""
+
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+from benchmarks.common import csv_row
+
+ROOT = Path(__file__).resolve().parents[1] / "experiments"
+
+
+def run(print_fn=print):
+    rows = []
+    roof = sorted((ROOT / "roofline").glob("*.json")) if (ROOT / "roofline").exists() else []
+    for f in roof:
+        r = json.loads(f.read_text())
+        name = f"roofline_{r['arch']}_{r['shape']}"
+        dom = r["dominant"]
+        t_dom = max(r["t_compute_s"], r["t_memory_s"], r["t_collective_s"])
+        rows.append(
+            csv_row(name, t_dom * 1e6,
+                    f"dominant={dom};roofline={r['roofline_fraction']:.3f};"
+                    f"useful={r['useful_ratio']:.3f}")
+        )
+        print_fn(rows[-1])
+    dr = sorted((ROOT / "dryrun").glob("*.json")) if (ROOT / "dryrun").exists() else []
+    ok = sum(1 for _ in dr)
+    rows.append(csv_row("dryrun_cells_compiled", ok, "json_artifacts"))
+    print_fn(rows[-1])
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,28 @@
+"""Benchmark harness: one module per paper table/figure + the LM roofline.
+
+Prints ``name,us_per_call,derived`` CSV rows (shared format). Individual
+modules run standalone too:  python -m benchmarks.table2_timing
+"""
+
+from __future__ import annotations
+
+
+def main() -> None:
+    from benchmarks import (
+        fig2_vectorfield,
+        reservoir_tasks,
+        roofline_lm,
+        table2_timing,
+        table3_factors,
+    )
+
+    print("name,us_per_call,derived")
+    fig2_vectorfield.run()
+    _, per_step = table2_timing.run()
+    table3_factors.run(per_step=per_step)
+    reservoir_tasks.run()
+    roofline_lm.run()
+
+
+if __name__ == "__main__":
+    main()

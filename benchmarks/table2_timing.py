@@ -1,0 +1,92 @@
+"""Paper Table 2: integration wall-time across implementations x N.
+
+The paper's ladder maps to ours (DESIGN.md §2):
+    numpy-base      -> base      per-step jit dispatched from Python
+    numba-vanilla   -> scan      jit + lax.scan whole trajectory
+    numba-parallel  -> (scan is already vectorized; the sharded variant
+                        needs >1 device and is covered by dry-run/tests)
+    torch-gpu       -> kernel    fused Pallas step (interpret=True on CPU:
+                        correctness-path; MXU path on real TPU)
+
+Wall-times are measured per RK4 step on this container's CPU and reported
+as us/step; the paper's 5e5-step total = us/step * 5e5. Steps are scaled
+down (the paper's protocol at N=1e4 runs ~minutes/implementation; the
+relative ladder is what reproduces).
+"""
+
+from __future__ import annotations
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import csv_row, time_fn
+from repro.core import (
+    DT,
+    default_params,
+    initial_magnetization,
+    integrate_python_loop,
+    integrate_scan,
+    llg_field,
+    make_coupling_matrix,
+)
+from repro.kernels import ops
+from repro.kernels.ref import pack_params
+
+NS = [1, 10, 100, 1000, 2500]
+SCAN_STEPS = 200
+BASE_STEPS = 50
+KERNEL_STEPS = 16  # interpret mode is a Python emulation: keep it short
+KERNEL_NS = [1, 10, 100]
+
+
+def run(print_fn=print):
+    p = default_params(jnp.float32)
+    rows = []
+    per_step = {}
+    for n in NS:
+        w = jnp.asarray(make_coupling_matrix(n, seed=0), jnp.float32)
+        m0 = initial_magnetization(n, jnp.float32)
+        field = lambda m, _: llg_field(m, p, w)
+
+        # base: per-step dispatch (paper's numpy-base analogue)
+        t_base = time_fn(
+            lambda: integrate_python_loop(field, m0, DT, BASE_STEPS), reps=3
+        ) / BASE_STEPS
+
+        # scan: whole-trajectory compile
+        scan_fn = jax.jit(
+            lambda m: integrate_scan(field, m, DT, SCAN_STEPS)[0]
+        )
+        t_scan = time_fn(scan_fn, m0, reps=3) / SCAN_STEPS
+
+        per_step[("base", n)] = t_base
+        per_step[("scan", n)] = t_scan
+        rows.append(csv_row(f"table2_base_n{n}", t_base * 1e6,
+                            f"total_5e5_steps_{t_base*5e5:.1f}s"))
+        rows.append(csv_row(f"table2_scan_n{n}", t_scan * 1e6,
+                            f"total_5e5_steps_{t_scan*5e5:.1f}s"))
+        print_fn(rows[-2])
+        print_fn(rows[-1])
+
+    # fused kernel (interpret mode: correctness path, not TPU wall-clock)
+    for n in KERNEL_NS:
+        w = jnp.asarray(make_coupling_matrix(n, seed=0), jnp.float32)
+        m0 = initial_magnetization(n, jnp.float32)[None]
+        pv = pack_params(p, 1, jnp.float32)
+        kern_fn = jax.jit(
+            lambda m: ops.sto_rk4_integrate(
+                m, w, pv, float(DT), KERNEL_STEPS, impl="fused", n_inner=8,
+                interpret=True,
+            )
+        )
+        t_kern = time_fn(kern_fn, m0, reps=2) / KERNEL_STEPS
+        per_step[("kernel", n)] = t_kern
+        rows.append(csv_row(f"table2_kernel-interp_n{n}", t_kern * 1e6,
+                            "interpret_mode_not_tpu_wallclock"))
+        print_fn(rows[-1])
+    return rows, per_step
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,39 @@
+"""Paper Table 3: speed factor vs base (factor = t_base / t_method).
+
+Derived from table2 per-step timings. The paper's qualitative claims we
+check: (1) compiled-sequential beats per-step dispatch most at SMALL N
+(factor O(10)); (2) the advantage decreases as N grows and the O(N^2)
+matmul dominates both; (3) best factor >= 2.6 across the N range.
+"""
+
+from __future__ import annotations
+
+from benchmarks.common import csv_row
+from benchmarks import table2_timing
+
+
+def run(print_fn=print, per_step=None):
+    if per_step is None:
+        _, per_step = table2_timing.run(print_fn=lambda *_: None)
+    rows = []
+    best_factors = {}
+    for (method, n), t in sorted(per_step.items()):
+        if method == "base":
+            continue
+        base = per_step.get(("base", n))
+        if base is None:
+            continue
+        f = base / t
+        best_factors[n] = max(best_factors.get(n, 0.0), f)
+        rows.append(csv_row(f"table3_factor_{method}_n{n}", f, "t_base/t_method"))
+        print_fn(rows[-1])
+    if best_factors:
+        worst_best = min(best_factors.values())
+        rows.append(csv_row("table3_min_best_factor", worst_best,
+                            "paper_claims_>=2.6"))
+        print_fn(rows[-1])
+    return rows
+
+
+if __name__ == "__main__":
+    run()

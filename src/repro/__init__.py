@@ -1,0 +1,12 @@
+"""repro: virtual reservoir acceleration on TPU (JAX + Pallas).
+
+Public surface:
+    repro.core        the paper's coupled-STO reservoir engine
+    repro.kernels     Pallas TPU kernels (+ interpret-mode oracles)
+    repro.models      assigned-architecture zoo (build_model)
+    repro.configs     arch registry (get_config / list_configs)
+    repro.train       fault-tolerant training loop + checkpoints
+    repro.launch      mesh / dryrun / roofline / train / serve entrypoints
+"""
+
+__version__ = "0.1.0"

@@ -1,0 +1,15 @@
+from repro.configs.base import (
+    LayerSpec,
+    MLAConfig,
+    MambaConfig,
+    MoEConfig,
+    ModelConfig,
+    SHAPES,
+    ShapeCell,
+    XLSTMConfig,
+    cells_for,
+    get_config,
+    list_configs,
+    register,
+)
+from repro.configs.reduced import reduce_config

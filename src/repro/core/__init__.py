@@ -1,0 +1,43 @@
+"""Core library: the paper's contribution (coupled-STO reservoir simulation)
+as a composable JAX module."""
+
+from repro.core.constants import (
+    STOParams,
+    default_params,
+    initial_magnetization,
+    DT,
+    N_STEPS_PAPER,
+)
+from repro.core.coupling import (
+    make_coupling_matrix,
+    make_input_matrix,
+    coupling_field_x,
+    spectral_radius,
+)
+from repro.core.sto import llg_field, effective_field_b, llg_rhs_from_b, norm_error
+from repro.core.integrators import (
+    TABLEAUX,
+    RK4,
+    HEUN,
+    EULER,
+    BS32,
+    make_step,
+    integrate_scan,
+    integrate_python_loop,
+    integrate_adaptive,
+    convergence_order,
+)
+from repro.core.reservoir import (
+    Reservoir,
+    make_reservoir,
+    drive,
+    fit_ridge,
+    predict,
+    nmse,
+    Readout,
+)
+from repro.core.ensemble import (
+    broadcast_params,
+    integrate_ensemble,
+    integrate_ensemble_sharded,
+)

@@ -1,0 +1,135 @@
+"""Reservoir-computing API on top of the coupled-STO integrator.
+
+Pipeline (the paper's application context, [AKT+22]):
+  input series u(t)  --drive-->  node states x_t = m^x(t_k)  --ridge-->  readout
+
+Only the readout is trained (linear ridge regression), which is what makes
+reservoir computing cheap; the expensive part — and the paper's subject — is
+the simulation of the reservoir itself, `drive()`.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import constants, coupling, integrators, sto
+from repro.core.constants import STOParams
+
+
+class Reservoir(NamedTuple):
+    params: STOParams
+    w_cp: jnp.ndarray  # (N, N)
+    w_in: jnp.ndarray  # (N, N_in)
+    m0: jnp.ndarray  # (N, 3)
+    dt: float
+    hold_steps: int  # integration steps per input sample
+
+
+def make_reservoir(
+    n: int,
+    n_in: int = 1,
+    seed: int = 0,
+    dt: float = constants.DT,
+    hold_steps: int = 100,
+    dtype=jnp.float32,
+    params: Optional[STOParams] = None,
+) -> Reservoir:
+    if params is None:
+        params = constants.default_params(dtype)
+    w_cp = jnp.asarray(coupling.make_coupling_matrix(n, seed=seed), dtype=dtype)
+    w_in = jnp.asarray(coupling.make_input_matrix(n, n_in, seed=seed + 1), dtype=dtype)
+    m0 = constants.initial_magnetization(n, dtype=dtype)
+    return Reservoir(params, w_cp, w_in, m0, dt, hold_steps)
+
+
+@functools.partial(jax.jit, static_argnames=("hold_steps", "tableau_name"))
+def _drive_scan(
+    params: STOParams,
+    w_cp: jnp.ndarray,
+    w_in: jnp.ndarray,
+    m0: jnp.ndarray,
+    u_seq: jnp.ndarray,  # (T, N_in)
+    dt,
+    hold_steps: int,
+    tableau_name: str = "rk4",
+):
+    tableau = integrators.TABLEAUX[tableau_name]
+
+    def field(m, h_in_x):
+        return sto.llg_field(m, params, w_cp, h_in_x)
+
+    step = integrators.make_step(field, tableau)
+    dt = jnp.asarray(dt, dtype=m0.dtype)
+
+    def per_sample(m, u_t):
+        # Input held piecewise-constant over the hold window (paper: the
+        # input signal is a discrete-point series).
+        h_in_x = params.a_in * (w_in @ u_t)  # (N,)
+
+        def inner(mi, _):
+            return step(mi, dt, h_in_x), None
+
+        m, _ = jax.lax.scan(inner, m, None, length=hold_steps)
+        return m, m[..., 0]  # node states: x-components (paper §3.1)
+
+    mT, states = jax.lax.scan(per_sample, m0, u_seq)
+    return mT, states  # states: (T, N)
+
+
+def drive(res: Reservoir, u_seq: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Run the reservoir over an input series. Returns (final m, states (T,N))."""
+    u_seq = jnp.atleast_2d(jnp.asarray(u_seq, dtype=res.m0.dtype))
+    if u_seq.shape[0] == 1 and u_seq.ndim == 2 and u_seq.shape[1] != res.w_in.shape[1]:
+        u_seq = u_seq.T
+    return _drive_scan(
+        res.params, res.w_cp, res.w_in, res.m0, u_seq, res.dt, res.hold_steps
+    )
+
+
+class Readout(NamedTuple):
+    w_out: jnp.ndarray  # (N + 1, n_out) — last row is the bias
+    washout: int
+
+
+def fit_ridge(
+    states: jnp.ndarray,  # (T, N)
+    targets: jnp.ndarray,  # (T, n_out) or (T,)
+    washout: int = 0,
+    reg: float = 1e-6,
+) -> Readout:
+    """Ridge regression readout: solve (X^T X + reg I) W = X^T Y.
+
+    The Gram matrix is accumulated in f32/f64 regardless of state dtype; the
+    solve is tiny ((N+1)^2) next to the simulation cost.
+    """
+    targets = jnp.atleast_2d(jnp.asarray(targets))
+    if targets.shape[0] == 1:
+        targets = targets.T
+    x = states[washout:]
+    y = targets[washout:].astype(jnp.float64 if x.dtype == jnp.float64 else jnp.float32)
+    x = x.astype(y.dtype)
+    ones = jnp.ones((x.shape[0], 1), dtype=x.dtype)
+    xb = jnp.concatenate([x, ones], axis=1)  # (T', N+1)
+    gram = xb.T @ xb
+    rhs = xb.T @ y
+    w = jnp.linalg.solve(gram + reg * jnp.eye(gram.shape[0], dtype=gram.dtype), rhs)
+    return Readout(w_out=w, washout=washout)
+
+
+def predict(readout: Readout, states: jnp.ndarray) -> jnp.ndarray:
+    x = states[readout.washout :]
+    ones = jnp.ones((x.shape[0], 1), dtype=x.dtype)
+    xb = jnp.concatenate([x, ones], axis=1).astype(readout.w_out.dtype)
+    return xb @ readout.w_out
+
+
+def nmse(pred: jnp.ndarray, target: jnp.ndarray) -> float:
+    target = jnp.reshape(target, pred.shape).astype(pred.dtype)
+    num = jnp.mean((pred - target) ** 2)
+    den = jnp.var(target) + 1e-30
+    return float(num / den)

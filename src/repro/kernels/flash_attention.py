@@ -1,0 +1,191 @@
+"""Flash-attention (forward) Pallas TPU kernel.
+
+Used by the LM substrate for the 32k prefill path, where materializing
+(S x S) logits is the memory-roofline killer. Online-softmax streaming over
+KV tiles; causal and sliding-window masking; GQA-aware: the kv-head group
+dimension G rides inside the q tile, so K/V are NOT repeated in HBM (the
+usual GQA bandwidth win: K/V read once per kv head, not once per q head).
+
+Layouts (ops.py wrappers reshape from user (B, H, S, D)):
+    q: (BKV, G, Sq, D)   BKV = batch * kv_heads, G = q_heads / kv_heads
+    k: (BKV, Sk, D)
+    v: (BKV, Sk, D)
+Grid: (BKV, Sq/block_q, Sk/block_k) — KV tiles iterate fastest (minor), so
+the running max / denominator / accumulator scratch persists per q tile.
+
+On this CPU-only container the kernel is validated with interpret=True
+against kernels/ref.mha_reference; the XLA path (models/attention.py) is
+what the dry-run lowers, with a config switch to the kernel on real TPUs.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+DEFAULT_BLOCK_Q = 128
+DEFAULT_BLOCK_K = 128
+NEG_INF = float("-inf")
+
+
+def _flash_kernel(
+    q_ref,  # (1, G, bq, D)
+    k_ref,  # (1, bk, D)
+    v_ref,  # (1, bk, D)
+    o_ref,  # (1, G, bq, D)
+    m_scr,  # (G * bq, 1) f32
+    l_scr,  # (G * bq, 1) f32
+    acc_scr,  # (G * bq, D) f32
+    *,
+    scale: float,
+    causal: bool,
+    window: int,
+    block_q: int,
+    block_k: int,
+    seq_q: int,
+    seq_k: int,
+):
+    qi = pl.program_id(1)
+    ki = pl.program_id(2)
+    nk = pl.num_programs(2)
+    g = q_ref.shape[1]
+
+    @pl.when(ki == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    # Tile-level mask pruning: global positions (q offset aligns the last q
+    # row with the last k row, the decode/prefill-with-cache convention).
+    offset = seq_k - seq_q
+    q_lo = qi * block_q + offset  # smallest global q position in tile
+    q_hi = q_lo + block_q - 1
+    k_lo = ki * block_k
+    k_hi = k_lo + block_k - 1
+
+    run = jnp.bool_(True)
+    if causal:
+        run = jnp.logical_and(run, k_lo <= q_hi)
+    if window > 0:
+        run = jnp.logical_and(run, k_hi > q_lo - window)
+
+    @pl.when(run)
+    def _tile():
+        q = q_ref[0].astype(jnp.float32) * scale  # (G, bq, D)
+        q2 = q.reshape(g * block_q, q.shape[-1])
+        k = k_ref[0].astype(jnp.float32)  # (bk, D)
+        s = jax.lax.dot_general(
+            q2, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+        )  # (G*bq, bk)
+
+        # Static decision: interior-tile mask skipping is a later perf
+        # refinement; masked tiles are already pruned by `run` above.
+        need_mask = causal or window > 0
+        if need_mask:
+            qpos = q_lo + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 0)
+            kpos = k_lo + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 1)
+            mask = jnp.ones((block_q, block_k), dtype=jnp.bool_)
+            if causal:
+                mask = jnp.logical_and(mask, kpos <= qpos)
+            if window > 0:
+                mask = jnp.logical_and(mask, kpos > qpos - window)
+            mask = jnp.broadcast_to(mask[None], (g, block_q, block_k)).reshape(
+                g * block_q, block_k
+            )
+            s = jnp.where(mask, s, NEG_INF)
+
+        m_prev = m_scr[...]  # (G*bq, 1)
+        m_cur = jnp.max(s, axis=-1, keepdims=True)
+        m_new = jnp.maximum(m_prev, m_cur)
+        # exp(-inf - -inf) guard: rows with everything masked keep m=-inf
+        p = jnp.exp(s - m_new)
+        p = jnp.where(jnp.isfinite(s), p, 0.0)
+        corr = jnp.exp(m_prev - m_new)
+        corr = jnp.where(jnp.isfinite(m_prev), corr, 0.0)
+        l_scr[...] = corr * l_scr[...] + jnp.sum(p, axis=-1, keepdims=True)
+        v = v_ref[0].astype(jnp.float32)  # (bk, D)
+        pv = jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+        )
+        acc_scr[...] = corr * acc_scr[...] + pv
+        m_scr[...] = m_new
+
+    @pl.when(ki == nk - 1)
+    def _finalize():
+        l = l_scr[...]
+        l = jnp.where(l == 0.0, 1.0, l)  # fully-masked rows -> zeros
+        out = (acc_scr[...] / l).reshape(g, block_q, acc_scr.shape[-1])
+        o_ref[0] = out.astype(o_ref.dtype)
+
+
+def flash_attention_grouped(
+    q: jnp.ndarray,  # (BKV, G, Sq, D)
+    k: jnp.ndarray,  # (BKV, Sk, D)
+    v: jnp.ndarray,  # (BKV, Sk, D)
+    *,
+    causal: bool = True,
+    window: int = 0,
+    scale=None,
+    block_q: int = DEFAULT_BLOCK_Q,
+    block_k: int = DEFAULT_BLOCK_K,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    bkv, g, sq, d = q.shape
+    _, sk, _ = k.shape
+    block_q = min(block_q, sq)
+    block_k = min(block_k, sk)
+    assert sq % block_q == 0 and sk % block_k == 0, (sq, sk, block_q, block_k)
+    if scale is None:
+        scale = d**-0.5
+
+    grid = (bkv, sq // block_q, sk // block_k)
+    kernel = functools.partial(
+        _flash_kernel,
+        scale=float(scale),
+        causal=causal,
+        window=int(window),
+        block_q=block_q,
+        block_k=block_k,
+        seq_q=sq,
+        seq_k=sk,
+    )
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, g, block_q, d), lambda b, i, j: (b, 0, i, 0)),
+            pl.BlockSpec((1, block_k, d), lambda b, i, j: (b, j, 0)),
+            pl.BlockSpec((1, block_k, d), lambda b, i, j: (b, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, g, block_q, d), lambda b, i, j: (b, 0, i, 0)),
+        out_shape=jax.ShapeDtypeStruct(q.shape, q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((g * block_q, 1), jnp.float32),
+            pltpu.VMEM((g * block_q, 1), jnp.float32),
+            pltpu.VMEM((g * block_q, d), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)
+
+
+def flash_attention(
+    q: jnp.ndarray,  # (B, H, Sq, D)
+    k: jnp.ndarray,  # (B, KVH, Sk, D)
+    v: jnp.ndarray,  # (B, KVH, Sk, D)
+    **kw,
+) -> jnp.ndarray:
+    """User-layout wrapper: folds GQA groups into the q tile."""
+    b, h, sq, d = q.shape
+    _, kvh, sk, _ = k.shape
+    assert h % kvh == 0, (h, kvh)
+    g = h // kvh
+    qg = q.reshape(b, kvh, g, sq, d).reshape(b * kvh, g, sq, d)
+    kg = k.reshape(b * kvh, sk, d)
+    vg = v.reshape(b * kvh, sk, d)
+    out = flash_attention_grouped(qg, kg, vg, **kw)
+    return out.reshape(b, kvh, g, sq, d).reshape(b, h, sq, d)

@@ -1,0 +1,152 @@
+"""Public jit'd wrappers around the Pallas kernels.
+
+Handles layout conversion ((E, N, 3) user layout <-> (3, N, E) kernel
+layout), MXU-alignment padding, and implementation dispatch:
+
+    impl="fused"  VMEM-resident whole-RK4(-multi-step) kernel (small/med N)
+    impl="tiled"  per-stage row-tiled kernel (large N)
+    impl="ref"    pure-jnp oracle
+    impl="auto"   fused while W + state + stages fit the VMEM budget, else tiled
+
+Zero-padding correctness: padded W rows/cols are zero so padded oscillators
+receive/contribute no coupling; padded ensemble lanes evolve garbage that is
+sliced away on exit; params rows are broadcast into padded lanes so no
+division hits uninitialized memory (denominators are 1 + lam*m.p >= 1-lam).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.constants import STOParams
+from repro.kernels import ref as kref
+from repro.kernels import sto_step
+
+# VMEM budget used by auto-dispatch (bytes); v5e has ~16 MiB per core.
+VMEM_BUDGET = 12 * 1024 * 1024
+LANE = sto_step.LANE
+
+
+def _round_up(x: int, m: int) -> int:
+    return (x + m - 1) // m * m
+
+
+def fused_fits_vmem(n: int, block_e: int, itemsize: int = 4) -> bool:
+    """W (n^2) + ~8 live (n, block_e) planes per fused step must fit VMEM."""
+    need = n * n * itemsize + 8 * n * block_e * itemsize
+    return need <= VMEM_BUDGET
+
+
+def to_planes(m_user: jnp.ndarray) -> jnp.ndarray:
+    """(..., N, 3) -> (3, N, E) kernel layout (E = flattened batch, >=1)."""
+    if m_user.ndim == 2:
+        m_user = m_user[None]
+    e = 1
+    for s in m_user.shape[:-2]:
+        e *= int(s)
+    n = m_user.shape[-2]
+    flat = m_user.reshape(e, n, 3)
+    return jnp.transpose(flat, (2, 1, 0))
+
+
+def from_planes(m_planes: jnp.ndarray, batch_shape) -> jnp.ndarray:
+    """(3, N, E) -> (*batch_shape, N, 3)."""
+    e = m_planes.shape[-1]
+    out = jnp.transpose(m_planes, (2, 1, 0))  # (E, N, 3)
+    return out.reshape(*batch_shape, m_planes.shape[1], 3)
+
+
+def _pad_planes(m, w, params, block_n, block_e):
+    _, n, e = m.shape
+    n_p = _round_up(max(n, 1), block_n)
+    e_p = _round_up(max(e, 1), block_e)
+    if n_p != n or e_p != e:
+        m = jnp.pad(m, ((0, 0), (0, n_p - n), (0, e_p - e)))
+        w = jnp.pad(w, ((0, n_p - n), (0, n_p - n)))
+        # broadcast params into padded lanes (edge mode keeps denominators sane)
+        params = jnp.pad(params, ((0, 0), (0, e_p - e)), mode="edge")
+    return m, w, params, n, e
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("dt", "n_steps", "impl", "n_inner", "block_n", "block_e", "interpret"),
+)
+def sto_rk4_integrate(
+    m0: jnp.ndarray,  # (..., N, 3) user layout
+    w_cp: jnp.ndarray,  # (N, N)
+    params_vec: jnp.ndarray,  # (NP, E) packed (kernels/ref.pack_params)
+    dt: float,
+    n_steps: int,
+    impl: str = "auto",
+    n_inner: int = 8,
+    block_n: int = LANE,
+    block_e: int = LANE,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    """Integrate n_steps of coupled-STO RK4 with the chosen implementation.
+
+    Returns the final state in user layout. n_steps must be divisible by
+    n_inner for the fused path (auto-adjusted otherwise).
+    """
+    batch_shape = m0.shape[:-2]
+    m = to_planes(m0)
+    m, w, pv, n_orig, e_orig = _pad_planes(m, w_cp, params_vec, block_n, block_e)
+
+    if impl == "auto":
+        impl = "fused" if fused_fits_vmem(m.shape[1], block_e, m.dtype.itemsize) else "tiled"
+
+    if impl == "ref":
+        def body(mm, _):
+            return kref.rk4_step_planes(mm, w, pv, jnp.asarray(dt, m.dtype)), None
+        m, _ = jax.lax.scan(body, m, None, length=n_steps)
+    elif impl == "fused":
+        while n_steps % n_inner != 0:
+            n_inner -= 1
+        def body(mm, _):
+            return (
+                sto_step.rk4_fused(
+                    mm, w, pv, dt, n_inner=n_inner, block_e=block_e, interpret=interpret
+                ),
+                None,
+            )
+        m, _ = jax.lax.scan(body, m, None, length=n_steps // n_inner)
+    elif impl == "tiled":
+        def body(mm, _):
+            return (
+                sto_step.rk4_tiled_step(
+                    mm, w, pv, dt, block_n=block_n, block_e=block_e, interpret=interpret
+                ),
+                None,
+            )
+        m, _ = jax.lax.scan(body, m, None, length=n_steps)
+    else:
+        raise ValueError(f"unknown impl: {impl}")
+
+    m = m[:, :n_orig, :e_orig]
+    return from_planes(m, batch_shape)
+
+
+def sto_rk4_step(
+    m0: jnp.ndarray,
+    w_cp: jnp.ndarray,
+    params: STOParams,
+    dt: float,
+    impl: str = "auto",
+    interpret: bool = False,
+    block_n: int = LANE,
+    block_e: int = LANE,
+) -> jnp.ndarray:
+    """Single RK4 step convenience wrapper taking STOParams directly."""
+    e = 1
+    for s in m0.shape[:-2]:
+        e *= s
+    pv = kref.pack_params(params, e, dtype=m0.dtype)
+    return sto_rk4_integrate(
+        m0, w_cp, pv, dt, 1,
+        impl=impl, n_inner=1, block_n=block_n, block_e=block_e, interpret=interpret,
+    )

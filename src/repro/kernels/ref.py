@@ -1,0 +1,143 @@
+"""Pure-jnp oracles for every kernel in this package.
+
+Kernel-side state layout (TPU-friendly):
+    m        : (3, N, E)  — component-major so each component is a (N, E)
+                            VREG-tileable plane; E is the MXU lane dimension.
+    w_cp     : (N, N)
+    params   : (NP, E)    — per-ensemble-member scalar parameters, VMEM-
+                            resident (enables parameter sweeps inside the
+                            kernel without re-compilation).
+
+PARAM_LAYOUT defines the packing order shared by kernels and oracles.
+"""
+
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.constants import STOParams
+
+PARAM_LAYOUT: Tuple[str, ...] = (
+    "pref",  # gamma / (1 + alpha^2)
+    "alpha",
+    "hs_coef",  # H_s numerator [Oe]
+    "lam",
+    "happl",
+    "demag",  # Hk - 4 pi Ms
+    "a_cp",
+    "px",
+    "py",
+    "pz",
+)
+NP = len(PARAM_LAYOUT)
+
+
+def pack_params(params: STOParams, e: int, dtype=jnp.float32) -> jnp.ndarray:
+    """Pack STOParams into the kernel's (NP, E) layout.
+
+    Accepts scalar leaves or (E, 1)-ensemble leaves (from
+    `ensemble.broadcast_params`).
+    """
+    vals = {
+        "pref": params.llg_prefactor,
+        "alpha": params.alpha,
+        "hs_coef": params.hs_coef,
+        "lam": params.lam,
+        "happl": params.happl,
+        "demag": params.demag_field,
+        "a_cp": params.a_cp,
+        "px": params.px,
+        "py": params.py,
+        "pz": params.pz,
+    }
+    rows = []
+    for name in PARAM_LAYOUT:
+        v = jnp.asarray(vals[name], dtype=dtype).reshape(-1)  # () or (E,)
+        rows.append(jnp.broadcast_to(v, (e,)))
+    return jnp.stack(rows, axis=0)
+
+
+def _unpack(pvec: jnp.ndarray):
+    """(NP, E) -> dict of (E,) rows (or (NP,) -> scalars)."""
+    return {name: pvec[i] for i, name in enumerate(PARAM_LAYOUT)}
+
+
+def llg_field_planes(m, w_cp, pvec):
+    """Oracle vector field in kernel layout.
+
+    m: (3, N, E); w_cp: (N, N); pvec: (NP, E). Returns k: (3, N, E).
+    This is algebraically identical to core.sto.llg_field — the equivalence
+    is itself asserted by tests/test_kernels_sto.py.
+    """
+    p = _unpack(pvec)
+    mx, my, mz = m[0], m[1], m[2]  # (N, E)
+    # coupling: rows of W against the x-plane -> (N, E) matmul on the MXU
+    hx = p["a_cp"] * jnp.dot(w_cp, mx, preferred_element_type=m.dtype)
+    hz = p["happl"] + p["demag"] * mz
+    mdotp = p["px"] * mx + p["py"] * my + p["pz"] * mz
+    hs = p["hs_coef"] / (1.0 + p["lam"] * mdotp)
+    # b = H + hs * (p x m)
+    bx = hx + hs * (p["py"] * mz - p["pz"] * my)
+    by = hs * (p["pz"] * mx - p["px"] * mz)
+    bz = hz + hs * (p["px"] * my - p["py"] * mx)
+    # m x b
+    cx = my * bz - mz * by
+    cy = mz * bx - mx * bz
+    cz = mx * by - my * bx
+    # m x (m x b)
+    dx = my * cz - mz * cy
+    dy = mz * cx - mx * cz
+    dz = mx * cy - my * cx
+    pref = p["pref"]
+    al = p["alpha"]
+    kx = -pref * cx - al * pref * dx
+    ky = -pref * cy - al * pref * dy
+    kz = -pref * cz - al * pref * dz
+    return jnp.stack([kx, ky, kz], axis=0)
+
+
+def rk4_step_planes(m, w_cp, pvec, dt):
+    """One classical RK4 step in kernel layout (oracle)."""
+    k1 = llg_field_planes(m, w_cp, pvec)
+    k2 = llg_field_planes(m + 0.5 * dt * k1, w_cp, pvec)
+    k3 = llg_field_planes(m + 0.5 * dt * k2, w_cp, pvec)
+    k4 = llg_field_planes(m + dt * k3, w_cp, pvec)
+    return m + (dt / 6.0) * (k1 + 2.0 * k2 + 2.0 * k3 + k4)
+
+
+def rk4_multi_step_planes(m, w_cp, pvec, dt, n_inner: int):
+    """n_inner fused RK4 steps (oracle for the VMEM-resident kernel)."""
+
+    def body(_, mm):
+        return rk4_step_planes(mm, w_cp, pvec, dt)
+
+    return jax.lax.fori_loop(0, n_inner, body, m)
+
+
+# ---------------------------------------------------------------------------
+# Flash-attention oracle (LM substrate)
+# ---------------------------------------------------------------------------
+
+
+def mha_reference(q, k, v, causal: bool = True, scale=None, window: int = 0):
+    """Plain softmax attention. q,k,v: (B, H, S, D) -> (B, H, S, D).
+
+    window > 0 restricts keys to [i - window + 1, i] (sliding-window attn).
+    """
+    if scale is None:
+        scale = q.shape[-1] ** -0.5
+    logits = jnp.einsum("bhqd,bhkd->bhqk", q, k) * scale
+    sq, sk = q.shape[-2], k.shape[-2]
+    qi = jnp.arange(sq)[:, None] + (sk - sq)  # align last q with last k
+    ki = jnp.arange(sk)[None, :]
+    mask = jnp.ones((sq, sk), dtype=bool)
+    if causal:
+        mask &= ki <= qi
+    if window > 0:
+        mask &= ki > qi - window
+    logits = jnp.where(mask, logits, -jnp.inf)
+    probs = jax.nn.softmax(logits, axis=-1)
+    return jnp.einsum("bhqk,bhkd->bhqd", probs, v).astype(q.dtype)

@@ -1,0 +1,228 @@
+"""Pallas TPU kernels for the coupled-STO RK4 step.
+
+Two kernels, specialized by N-regime — mirroring the paper's finding that
+each implementation wins in a different range (Table 2):
+
+1. `rk4_fused`  (small/medium N): the ENTIRE RK4 step — all four field
+   evaluations, the coupling matmuls, and the combine — plus `n_inner`
+   consecutive time steps run inside one kernel invocation. W^cp, the state
+   and all stage slopes stay VMEM-resident; HBM sees one state read + one
+   state write (+ one W read) per n_inner steps. Grid tiles only the
+   ensemble axis E. This is the TPU answer to the paper's observation that
+   per-step dispatch dominates at small N.
+
+2. `field_tiled` (large N): one field evaluation, tiled over (N-rows, E).
+   Each row tile contracts its W^cp row block against the full m^x plane
+   (the O(N^2) coupling) on the MXU and fuses all elementwise LLG terms in
+   the same kernel. The RK4 driver in ops.py calls it four times per step;
+   stage algebra y = m + c*k is fused into the kernel (classic RK4 has a
+   single-predecessor tableau), so HBM traffic per stage is W-row-tile +
+   3 state planes instead of ~13 op-by-op round trips.
+
+Layouts (see kernels/ref.py): m (3, N, E); W (N, N); params (NP, E).
+MXU alignment: E and N tiles are multiples of 128 (f32); callers pad via
+ops.py (zero-padding is algebraically inert for both N and E axes: padded
+W rows/cols are zero and padded lanes are dropped on unpad).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.kernels.ref import NP
+
+# MXU/VREG-aligned tile sizes (f32).
+LANE = 128
+SUBLANE = 8
+
+
+def _field_planes(mx, my, mz, hx, p):
+    """Elementwise LLG slope given the coupling/input x-field hx.
+
+    All inputs (bn, be); p is a dict of (1, be) parameter rows. Returns
+    (kx, ky, kz). Pure VPU work; the MXU part (hx) is computed by callers.
+    """
+    hz = p["happl"] + p["demag"] * mz
+    mdotp = p["px"] * mx + p["py"] * my + p["pz"] * mz
+    hs = p["hs_coef"] / (1.0 + p["lam"] * mdotp)
+    bx = hx + hs * (p["py"] * mz - p["pz"] * my)
+    by = hs * (p["pz"] * mx - p["px"] * mz)
+    bz = hz + hs * (p["px"] * my - p["py"] * mx)
+    cx = my * bz - mz * by
+    cy = mz * bx - mx * bz
+    cz = mx * by - my * bx
+    dx = my * cz - mz * cy
+    dy = mz * cx - mx * cz
+    dz = mx * cy - my * cx
+    napref = -p["pref"]
+    al = p["alpha"]
+    kx = napref * (cx + al * dx)
+    ky = napref * (cy + al * dy)
+    kz = napref * (cz + al * dz)
+    return kx, ky, kz
+
+
+def _unpack_rows(params_ref):
+    from repro.kernels.ref import PARAM_LAYOUT
+
+    return {name: params_ref[i : i + 1, :] for i, name in enumerate(PARAM_LAYOUT)}
+
+
+# ---------------------------------------------------------------------------
+# Kernel 1: fully fused RK4 (+ multi-step), W and state VMEM-resident
+# ---------------------------------------------------------------------------
+
+
+def _rk4_fused_kernel(params_ref, w_ref, m_ref, out_ref, *, dt, n_inner):
+    p = _unpack_rows(params_ref)
+    w = w_ref[...]  # (N, N) stays in VMEM across inner steps
+    acc_t = jnp.float32 if m_ref.dtype == jnp.bfloat16 else m_ref.dtype
+
+    def field(mx, my, mz):
+        hx = p["a_cp"] * jnp.dot(w, mx, preferred_element_type=acc_t)
+        return _field_planes(mx, my, mz, hx, p)
+
+    def one_step(state):
+        mx, my, mz = state
+        h = dt / 2.0
+        k1x, k1y, k1z = field(mx, my, mz)
+        k2x, k2y, k2z = field(mx + h * k1x, my + h * k1y, mz + h * k1z)
+        k3x, k3y, k3z = field(mx + h * k2x, my + h * k2y, mz + h * k2z)
+        k4x, k4y, k4z = field(mx + dt * k3x, my + dt * k3y, mz + dt * k3z)
+        s = dt / 6.0
+        return (
+            mx + s * (k1x + 2 * k2x + 2 * k3x + k4x),
+            my + s * (k1y + 2 * k2y + 2 * k3y + k4y),
+            mz + s * (k1z + 2 * k2z + 2 * k3z + k4z),
+        )
+
+    state = (m_ref[0], m_ref[1], m_ref[2])
+    state = jax.lax.fori_loop(0, n_inner, lambda _, s: one_step(s), state)
+    out_ref[0] = state[0]
+    out_ref[1] = state[1]
+    out_ref[2] = state[2]
+
+
+def rk4_fused(
+    m: jnp.ndarray,  # (3, N, E), N and E already padded/aligned
+    w_cp: jnp.ndarray,  # (N, N)
+    params: jnp.ndarray,  # (NP, E)
+    dt: float,
+    n_inner: int = 1,
+    block_e: int = LANE,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    _, n, e = m.shape
+    assert e % block_e == 0, (e, block_e)
+    grid = (e // block_e,)
+    # dt is a static compile-time constant (the paper fixes dt = 1e-11).
+    kernel = functools.partial(_rk4_fused_kernel, dt=float(dt), n_inner=n_inner)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((NP, block_e), lambda i: (0, i)),  # params
+            pl.BlockSpec((n, n), lambda i: (0, 0)),  # W resident
+            pl.BlockSpec((3, n, block_e), lambda i: (0, 0, i)),  # m
+        ],
+        out_specs=pl.BlockSpec((3, n, block_e), lambda i: (0, 0, i)),
+        out_shape=jax.ShapeDtypeStruct(m.shape, m.dtype),
+        interpret=interpret,
+    )(params, w_cp, m)
+
+
+# ---------------------------------------------------------------------------
+# Kernel 2: tiled field evaluation (+ fused stage algebra) for large N
+# ---------------------------------------------------------------------------
+
+
+def _field_tiled_kernel(
+    params_ref, w_ref, yx_ref, m_ref, kprev_ref, out_ref, *, stage_coef
+):
+    """k_new = f(m + stage_coef * k_prev) for one (N-row, E) tile.
+
+    yx_ref holds the FULL x-plane of the stage state y (all N rows — the
+    coupling needs every oscillator), computed cheaply by the caller;
+    m_ref/kprev_ref hold this tile's rows of the base state and previous
+    slope. stage_coef = 0 skips the y-algebra (k1).
+    """
+    p = _unpack_rows(params_ref)
+    acc_t = jnp.float32 if m_ref.dtype == jnp.bfloat16 else m_ref.dtype
+    # MXU: this row-block of W against the full y-x-plane.
+    hx = p["a_cp"] * jnp.dot(w_ref[...], yx_ref[...], preferred_element_type=acc_t)
+    if stage_coef == 0.0:
+        yx, yy, yz = m_ref[0], m_ref[1], m_ref[2]
+    else:
+        yx = m_ref[0] + stage_coef * kprev_ref[0]
+        yy = m_ref[1] + stage_coef * kprev_ref[1]
+        yz = m_ref[2] + stage_coef * kprev_ref[2]
+    kx, ky, kz = _field_planes(yx, yy, yz, hx, p)
+    out_ref[0] = kx
+    out_ref[1] = ky
+    out_ref[2] = kz
+
+
+def field_tiled(
+    m: jnp.ndarray,  # (3, N, E) base state tile source
+    yx_full: jnp.ndarray,  # (N, E) x-plane of the stage state y
+    k_prev: jnp.ndarray,  # (3, N, E) previous slope (ignored when coef=0)
+    w_cp: jnp.ndarray,  # (N, N)
+    params: jnp.ndarray,  # (NP, E)
+    stage_coef: float,
+    block_n: int = LANE,
+    block_e: int = LANE,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    _, n, e = m.shape
+    assert n % block_n == 0 and e % block_e == 0, (n, e, block_n, block_e)
+    grid = (n // block_n, e // block_e)
+    kernel = functools.partial(_field_tiled_kernel, stage_coef=stage_coef)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((NP, block_e), lambda i, j: (0, j)),
+            pl.BlockSpec((block_n, n), lambda i, j: (i, 0)),  # W row block
+            pl.BlockSpec((n, block_e), lambda i, j: (0, j)),  # full y-x plane
+            pl.BlockSpec((3, block_n, block_e), lambda i, j: (0, i, j)),
+            pl.BlockSpec((3, block_n, block_e), lambda i, j: (0, i, j)),
+        ],
+        out_specs=pl.BlockSpec((3, block_n, block_e), lambda i, j: (0, i, j)),
+        out_shape=jax.ShapeDtypeStruct(m.shape, m.dtype),
+        interpret=interpret,
+    )(params, w_cp, yx_full, m, k_prev)
+
+
+def rk4_tiled_step(
+    m: jnp.ndarray,
+    w_cp: jnp.ndarray,
+    params: jnp.ndarray,
+    dt: float,
+    block_n: int = LANE,
+    block_e: int = LANE,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    """One RK4 step built from four tiled field-kernel launches.
+
+    The per-stage x-plane updates (y^x = m^x + c k^x) are O(N E) elementwise
+    XLA ops — negligible next to the O(N^2 E) in-kernel coupling.
+    """
+    dt = float(dt)  # static: baked into the stage kernels
+    f = functools.partial(
+        field_tiled,
+        w_cp=w_cp,
+        params=params,
+        block_n=block_n,
+        block_e=block_e,
+        interpret=interpret,
+    )
+    zeros = jnp.zeros_like(m)
+    k1 = f(m, m[0], zeros, stage_coef=0.0)
+    k2 = f(m, m[0] + (0.5 * dt) * k1[0], k1, stage_coef=0.5 * dt)
+    k3 = f(m, m[0] + (0.5 * dt) * k2[0], k2, stage_coef=0.5 * dt)
+    k4 = f(m, m[0] + dt * k3[0], k3, stage_coef=dt)
+    return m + (dt / 6.0) * (k1 + 2.0 * k2 + 2.0 * k3 + k4)

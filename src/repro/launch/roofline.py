@@ -1,0 +1,281 @@
+import os
+
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=512")
+
+"""Roofline analysis per (arch x shape) from compiled dry-run artifacts.
+
+Methodology (EXPERIMENTS.md §Roofline):
+  XLA's HloCostAnalysis visits a while-loop body ONCE, so the whole-model
+  numbers from dryrun.py undercount scanned layers by their trip count. We
+  therefore lower the PERIOD BODY in isolation — same shardings, same mesh —
+  take its per-device cost_analysis and collective bytes exactly, and scale:
+
+    flops_total = n_micro * (num_periods * body + prefix + embed/loss)
+    coll_total  = full_model_parse + (n_micro * num_periods - 1) * body_coll
+
+  (the full-model parse from dryrun.py contributes the once-per-step
+  collectives: gradient reduction, input scatter, etc.)
+
+  Terms per chip (TPU v5e):
+    compute   = flops / 197e12         [s]
+    memory    = bytes / 819e9          [s]
+    collective= coll_bytes / 50e9      [s]
+
+  MODEL_FLOPS = 6 * N_active * tokens (train) / 2 * N_active * batch
+  (decode); the ratio MODEL_FLOPS / HLO_FLOPS exposes remat & redundancy.
+"""
+
+import argparse
+import dataclasses
+import json
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import SHAPES, cells_for, get_config, list_configs
+from repro.configs.base import ModelConfig, ShapeCell
+from repro.distributed import sharding as shd
+from repro.launch import mesh as mesh_mod
+from repro.launch.dryrun import MICROBATCH, OUT_DIR, collect_collectives
+from repro.models import counting, transformer
+from repro.models.transformer import _dtype_of, _init_layer, _layer_decode, _layer_forward
+
+HW = mesh_mod.HW
+ROOF_DIR = OUT_DIR.parent / "roofline"
+
+
+def _period_param_specs(cfg: ModelConfig):
+    key = jax.ShapeDtypeStruct((2,), jnp.uint32)
+    dtype = _dtype_of(cfg)
+    cross = cfg.encoder_layers > 0
+
+    def init_one(k):
+        import jax.random as jr
+
+        sk = jr.split(k, len(cfg.period))
+        return [
+            _init_layer(sk[i], cfg, spec, dtype, cross)
+            for i, spec in enumerate(cfg.period)
+        ]
+
+    return jax.eval_shape(init_one, key)
+
+
+def lower_period_body(cfg: ModelConfig, cell: ShapeCell, mesh, batch_override=None):
+    """Lower one scan-period body with production shardings; returns
+    (flops, bytes, coll) per device per execution."""
+    shd.enable_constraints(mesh)
+    dtype = _dtype_of(cfg)
+    b = batch_override or cell.global_batch
+    # NOTE: the body params are UNSTACKED (single period, no leading periods
+    # axis) so they must not live under a "stack/" path — the sharder's
+    # stacked-leaf offset would misfire and silently replicate everything.
+    param_specs = _period_param_specs(cfg)
+    p_sh = shd.param_shardings(mesh, {"body": param_specs})["body"]
+
+    if cell.kind == "train":
+        s = cell.seq_len
+        x_spec = jax.ShapeDtypeStruct((b, s, cfg.d_model), dtype)
+        pos_spec = jax.ShapeDtypeStruct((b, s), jnp.int32)
+
+        seq_par = os.environ.get("REPRO_SEQ_PARALLEL", "0") == "1"
+
+        def body(x, positions, lp):
+            # same block-boundary constraint as transformer._run_stack
+            if seq_par:
+                x = shd.constrain(x, shd.BATCH, shd.MODEL, None)
+            else:
+                x = shd.constrain(x, shd.BATCH, None, None)
+            aux = jnp.zeros((), jnp.float32)
+            for i, spec in enumerate(cfg.period):
+                x, a, _ = _layer_forward(lp[i], cfg, spec, x, positions, mode="train")
+                aux += a
+            if seq_par:
+                x = shd.constrain(x, shd.BATCH, shd.MODEL, None)
+            return x, aux
+
+        def scalar_body(x, positions, lp):
+            y, aux = body(x, positions, lp)
+            return jnp.sum(y.astype(jnp.float32)) + aux
+
+        fn = jax.grad(scalar_body, argnums=(0, 2))
+        x_sh = shd.batch_shardings(mesh, x_spec)
+        lowered = jax.jit(fn, in_shardings=(x_sh, None, p_sh)).lower(
+            x_spec, pos_spec, param_specs
+        )
+    elif cell.kind == "prefill":
+        s = cell.seq_len
+        x_spec = jax.ShapeDtypeStruct((b, s, cfg.d_model), dtype)
+        pos_spec = jax.ShapeDtypeStruct((b, s), jnp.int32)
+
+        def fn(x, positions, lp):
+            for i, spec in enumerate(cfg.period):
+                x, _, c = _layer_forward(lp[i], cfg, spec, x, positions, mode="prefill")
+            return x
+
+        x_sh = shd.batch_shardings(mesh, x_spec)
+        lowered = jax.jit(fn, in_shardings=(x_sh, None, p_sh)).lower(
+            x_spec, pos_spec, param_specs
+        )
+    else:  # decode
+        s = cell.seq_len
+        x_spec = jax.ShapeDtypeStruct((b, 1, cfg.d_model), dtype)
+        pos_spec = jax.ShapeDtypeStruct((b,), jnp.int32)
+        cache_spec = [
+            transformer._layer_cache_spec(
+                cfg, spec, b, s, dtype, cross=cfg.encoder_layers > 0
+            )
+            for spec in cfg.period
+        ]
+        c_sh = shd.batch_shardings(mesh, {"caches": cache_spec})["caches"]
+
+        def fn(x, pos, lp, caches):
+            for i, spec in enumerate(cfg.period):
+                x, caches[i] = _layer_decode(lp[i], cfg, spec, x, caches[i], pos)
+            return x, caches
+
+        x_sh = shd.batch_shardings(mesh, x_spec)
+        lowered = jax.jit(fn, in_shardings=(x_sh, None, p_sh, c_sh)).lower(
+            x_spec, pos_spec, param_specs, cache_spec
+        )
+
+    compiled = lowered.compile()
+    cost = compiled.cost_analysis() or {}
+    coll = collect_collectives(compiled.as_text())
+    shd.enable_constraints(None)
+    return {
+        "flops": float(cost.get("flops", 0.0)),
+        "bytes": float(cost.get("bytes accessed", 0.0)),
+        "coll": coll,
+    }
+
+
+def analyze_cell(arch: str, shape: str, mesh_tag: str = "pod16x16"):
+    cfg = get_config(arch)
+    cell = SHAPES[shape]
+    mesh = mesh_mod.make_production_mesh(multi_pod=(mesh_tag != "pod16x16"))
+    chips = mesh.size
+
+    full_path = OUT_DIR / f"{arch}_{shape}_{mesh_tag}.json"
+    full = json.loads(full_path.read_text()) if full_path.exists() else {}
+
+    n_micro = 1
+    batch_override = None
+    if cell.kind == "train":
+        mb = MICROBATCH.get(arch, 64)
+        if mb < cell.global_batch:
+            n_micro = cell.global_batch // mb
+            batch_override = mb
+
+    body = lower_period_body(cfg, cell, mesh, batch_override=batch_override)
+    periods = cfg.num_periods
+
+    # per-device totals
+    flops = n_micro * periods * body["flops"]
+    bytes_ = n_micro * periods * body["bytes"]
+    body_coll = sum(v["bytes"] for v in body["coll"].values())
+    full_coll = sum(
+        v["bytes"] for v in full.get("collectives", {}).values()
+    )
+    coll = full_coll + max(n_micro * periods - 1, 0) * body_coll
+
+    # embed/loss/prefix adjustments: approximate with the full-model lowered
+    # numbers (counted once there)
+    flops += full.get("hlo_flops", 0.0)
+    bytes_ += full.get("hlo_bytes", 0.0)
+
+    t_compute = flops / HW["peak_flops_bf16"]
+    t_memory = bytes_ / HW["hbm_bw"]
+    t_coll = coll / HW["ici_bw"]
+
+    # analytic model flops (global; convert to per-device)
+    if cell.kind == "train":
+        model_flops = counting.train_step_flops(cfg, cell.global_batch, cell.seq_len)
+    elif cell.kind == "prefill":
+        model_flops = 2.0 * cfg.active_param_count() * cell.global_batch * cell.seq_len
+        # + attention quadratic term
+        attn_layers = sum(
+            1 for s in cfg.layer_kinds() if s.mixer in ("attn", "swa", "mla")
+        )
+        win = cfg.sliding_window or 0
+        s_eff = min(cell.seq_len, win) if win else cell.seq_len
+        model_flops += (
+            2.0 * attn_layers * cell.global_batch * cell.seq_len * s_eff
+            * cfg.num_heads * cfg.head_dim
+        )
+    else:
+        model_flops = counting.decode_step_flops(cfg, cell.global_batch, cell.seq_len)
+    model_flops_dev = model_flops / chips
+
+    dominant = max(
+        [("compute", t_compute), ("memory", t_memory), ("collective", t_coll)],
+        key=lambda kv: kv[1],
+    )[0]
+    rec = {
+        "arch": arch,
+        "shape": shape,
+        "mesh": mesh_tag,
+        "chips": chips,
+        "n_micro": n_micro,
+        "periods": periods,
+        "body": body,
+        "flops_dev": flops,
+        "bytes_dev": bytes_,
+        "coll_bytes_dev": coll,
+        "t_compute_s": t_compute,
+        "t_memory_s": t_memory,
+        "t_collective_s": t_coll,
+        "dominant": dominant,
+        "model_flops_dev": model_flops_dev,
+        "useful_ratio": model_flops_dev / flops if flops else 0.0,
+        "roofline_fraction": (
+            model_flops_dev / HW["peak_flops_bf16"]
+        ) / max(t_compute, t_memory, t_coll) if max(t_compute, t_memory, t_coll) else 0.0,
+    }
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--mesh", default="pod16x16")
+    ap.add_argument("--force", action="store_true")
+    args = ap.parse_args()
+
+    ROOF_DIR.mkdir(parents=True, exist_ok=True)
+    if args.all:
+        jobs = [
+            (a, s)
+            for a in list_configs()
+            for s, ok in cells_for(get_config(a)).items()
+            if ok
+        ]
+    else:
+        jobs = [(args.arch, args.shape)]
+
+    for arch, shape in jobs:
+        out = ROOF_DIR / f"{arch}_{shape}_{args.mesh}.json"
+        if out.exists() and not args.force:
+            print(f"skip cached {out.name}")
+            continue
+        try:
+            rec = analyze_cell(arch, shape, args.mesh)
+            out.write_text(json.dumps(rec, indent=1))
+            print(
+                f"{arch:26s} {shape:12s} compute={rec['t_compute_s']:.3e}s "
+                f"memory={rec['t_memory_s']:.3e}s coll={rec['t_collective_s']:.3e}s "
+                f"dominant={rec['dominant']:10s} useful={rec['useful_ratio']:.2f} "
+                f"roofline={rec['roofline_fraction']:.2%}"
+            )
+        except Exception as e:
+            import traceback
+
+            print(f"FAIL {arch} {shape}: {e}")
+            traceback.print_exc(limit=4)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,111 @@
+"""Step functions lowered by the dry-run and used by the real launcher:
+train_step (loss + grads + optimizer update, microbatched) and serve steps
+(prefill / decode). Kept separate from dryrun.py so tests can reuse them on
+small meshes."""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, ShapeCell
+from repro.models import build_model
+from repro.models import transformer
+from repro.optim import optimizer as opt_mod
+
+
+def make_train_step(
+    cfg: ModelConfig,
+    optimizer: Optional[str] = None,
+    microbatch: int = 0,
+    grad_compression: str = "none",
+    lr: float = 3e-4,
+    warmup: int = 200,
+    total_steps: int = 10_000,
+):
+    """Returns (train_step, opt_init_specs_fn).
+
+    train_step(params, opt_state, batch, step) -> (params, opt_state, metrics)
+
+    microbatch > 0 splits the global batch into chunks accumulated with a
+    lax.scan — activation memory drops by batch/microbatch while the DP
+    gradient all-reduce still happens once per step (XLA overlaps the
+    per-microbatch reduce-scatter with the next microbatch's compute).
+    """
+    model = build_model(cfg)
+    optimizer = optimizer or default_optimizer(cfg)
+    lr_fn = functools.partial(
+        opt_mod.cosine_schedule, base_lr=lr, warmup=warmup, total=total_steps
+    )
+    opt = opt_mod.make_optimizer(optimizer, cfg, lr_fn=lr_fn)
+    compress = opt_mod.make_compressor(grad_compression)
+
+    def loss_fn(params, batch):
+        loss, metrics = model.loss_fn(params, batch)
+        return loss, metrics
+
+    def compute_grads(params, batch):
+        if microbatch and microbatch < _batch_size(batch):
+            n = _batch_size(batch) // microbatch
+
+            def mb_body(acc, mb):
+                (loss, metrics), g = jax.value_and_grad(loss_fn, has_aux=True)(
+                    params, mb
+                )
+                acc_g, acc_l = acc
+                acc_g = jax.tree.map(lambda a, b: a + b, acc_g, g)
+                return (acc_g, acc_l + loss), None
+
+            zero = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params
+            )
+            mbs = jax.tree.map(
+                lambda x: x.reshape(n, microbatch, *x.shape[1:]), batch
+            )
+            (g, loss), _ = jax.lax.scan(mb_body, (zero, jnp.zeros(())), mbs)
+            g = jax.tree.map(lambda x: x / n, g)
+            return loss / n, g
+        (loss, _), g = jax.value_and_grad(loss_fn, has_aux=True)(params, batch)
+        return loss, g
+
+    def train_step(params, opt_state, batch, step):
+        loss, grads = compute_grads(params, batch)
+        grads = compress(grads)
+        gnorm = opt_mod.global_norm(grads)
+        grads = opt_mod.clip_by_global_norm(grads, 1.0, gnorm)
+        params, opt_state = opt.update(params, grads, opt_state, step)
+        return params, opt_state, {"loss": loss, "grad_norm": gnorm}
+
+    return train_step, opt, model
+
+
+def default_optimizer(cfg: ModelConfig) -> str:
+    """Adafactor for >=90B params so optimizer state fits one v5e pod
+    (DESIGN.md §4); AdamW otherwise."""
+    return "adafactor" if cfg.param_count() >= 90e9 else "adamw"
+
+
+def _batch_size(batch) -> int:
+    return jax.tree.leaves(batch)[0].shape[0]
+
+
+def make_serve_steps(cfg: ModelConfig):
+    """(prefill_step, decode_step) closures over the model."""
+    model = build_model(cfg)
+
+    def prefill_step(params, batch):
+        last_logits, caches = model.prefill(params, batch)
+        return last_logits, caches
+
+    def decode_step(params, batch):
+        logits, caches = model.decode_step(
+            params, batch["tokens"], batch["caches"], batch["pos"]
+        )
+        # greedy next token (serving loop uses it; dry-run lowers it)
+        next_tok = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)
+        return next_tok, logits, caches
+
+    return prefill_step, decode_step

@@ -1,0 +1,80 @@
+"""Production training launcher.
+
+    PYTHONPATH=src python -m repro.launch.train --arch xlstm-125m \
+        --steps 1000 --batch 64 --seq 1024 [--mesh 4x2] [--reduced]
+
+On a real fleet this binary runs per-host under the cluster scheduler with
+jax.distributed.initialize(); on this container it runs single-process
+(optionally with virtual devices via --virtual-devices N, applied BEFORE
+jax initializes). Resume is automatic: rerunning the same command continues
+from the latest checkpoint (fault-tolerance path exercised by tests).
+"""
+
+import argparse
+import os
+import sys
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--microbatch", type=int, default=0)
+    ap.add_argument("--mesh", default=None, help="e.g. 4x2 => (data=4, model=2)")
+    ap.add_argument("--virtual-devices", type=int, default=0)
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_ckpt")
+    ap.add_argument("--ckpt-every", type=int, default=100)
+    ap.add_argument("--optimizer", default=None)
+    ap.add_argument("--grad-compression", default="none", choices=["none", "int8"])
+    ap.add_argument("--lr", type=float, default=3e-4)
+    # failure injection for watchdog/restart testing
+    ap.add_argument("--fail-at-step", type=int, default=None, help=argparse.SUPPRESS)
+    args = ap.parse_args(argv)
+
+    if args.virtual_devices:
+        os.environ["XLA_FLAGS"] = (
+            f"--xla_force_host_platform_device_count={args.virtual_devices} "
+            + os.environ.get("XLA_FLAGS", "")
+        )
+
+    # import jax only after XLA_FLAGS is final
+    import jax
+
+    from repro.configs import get_config, reduce_config
+    from repro.launch.mesh import make_mesh
+    from repro.train import LoopConfig, train
+
+    cfg = get_config(args.arch)
+    if args.reduced:
+        cfg = reduce_config(cfg)
+
+    mesh = None
+    if args.mesh:
+        dims = tuple(int(x) for x in args.mesh.split("x"))
+        axes = ("data", "model")[: len(dims)] if len(dims) <= 2 else (
+            "pod", "data", "model"
+        )
+        mesh = make_mesh(dims, axes)
+        print(f"mesh: {dict(zip(axes, dims))} over {mesh.size} devices")
+
+    loop = LoopConfig(
+        total_steps=args.steps,
+        seq_len=args.seq,
+        global_batch=args.batch,
+        microbatch=args.microbatch,
+        ckpt_every=args.ckpt_every,
+        ckpt_dir=args.ckpt_dir,
+        optimizer=args.optimizer,
+        grad_compression=args.grad_compression,
+        lr=args.lr,
+        fail_at_step=args.fail_at_step,
+    )
+    hist = train(cfg, loop, mesh=mesh)
+    print(f"done: final loss {hist[-1]['loss']:.4f} at step {hist[-1]['step']}")
+
+
+if __name__ == "__main__":
+    main()

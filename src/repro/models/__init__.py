@@ -1,0 +1,2 @@
+from repro.models.model import Model, build_model, make_input_specs, concrete_batch
+from repro.models.counting import count_params, train_step_flops, decode_step_flops

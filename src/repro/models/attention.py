@@ -1,0 +1,362 @@
+"""Attention mixers: MHA/GQA/MQA, sliding-window, cross-attention, and
+DeepSeek-style MLA (latent KV) with the absorbed decode path.
+
+Three execution modes share one math core:
+    train    full-sequence self-attention (no cache)
+    prefill  full-sequence + returns the KV cache
+    decode   one token against a cache of capacity S (positions per sequence)
+
+Layouts: activations (B, S, D); q/k/v (B, S, H, head_dim); caches
+(B, S, KVH, head_dim) — batch shards over `data`, heads/head_dim over
+`model` (divisibility-aware; see distributed/sharding.py).
+
+The XLA einsum path below is what multi-pod dry-runs lower; kernels/
+flash_attention.py is the TPU kernel counterpart (validated in interpret
+mode), switchable via use_flash for real-TPU runs.
+"""
+
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import layers
+from repro.models.layers import apply_rope, dense, make_dense, rope_freqs
+
+NEG_INF = -1e30
+
+
+# ---------------------------------------------------------------------------
+# standard (GQA) attention
+# ---------------------------------------------------------------------------
+
+
+def make_attention(key, cfg: ModelConfig, dtype):
+    ks = jax.random.split(key, 4)
+    d, h, kvh, hd = cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    bias = cfg.attn_bias or cfg.qkv_bias
+    out_scale = (h * hd) ** -0.5 / (2.0 * cfg.num_layers) ** 0.5
+    return {
+        "wq": make_dense(ks[0], d, h * hd, dtype, bias=bias),
+        "wk": make_dense(ks[1], d, kvh * hd, dtype, bias=bias),
+        "wv": make_dense(ks[2], d, kvh * hd, dtype, bias=bias),
+        "wo": make_dense(ks[3], h * hd, d, dtype, scale=out_scale, bias=cfg.attn_bias),
+    }
+
+
+def _split_heads(x, n_heads, head_dim):
+    b, s, _ = x.shape
+    return x.reshape(b, s, n_heads, head_dim)
+
+
+# Sequences at/above this length use the q-chunked scan path so the (Sq, Sk)
+# logits tensor never materializes whole (the XLA analogue of flash
+# attention's memory behavior; the Pallas kernel is the TPU-native version).
+# Env overrides are the §Perf A/B knobs.
+import os as _os
+
+Q_CHUNK_THRESHOLD = int(_os.environ.get("REPRO_ATTN_QCHUNK_THRESHOLD", 8192))
+Q_CHUNK = int(_os.environ.get("REPRO_ATTN_QCHUNK", 1024))
+# store softmax probabilities in bf16 for the PV matmul (halves the probs
+# read traffic; logsumexp/max still f32)
+PROBS_BF16 = _os.environ.get("REPRO_ATTN_PROBS_BF16", "0") == "1"
+
+
+def grouped_attend(
+    q: jnp.ndarray,  # (B, Sq, H, D)
+    k: jnp.ndarray,  # (B, Sk, KVH, D)
+    v: jnp.ndarray,  # (B, Sk, KVH, D)
+    *,
+    causal: bool,
+    window: int = 0,
+    q_offset=None,  # (B,) or scalar global position of q[0]; default Sk - Sq
+    kv_len=None,  # (B,) or scalar #valid cache entries (decode); default Sk
+    softcap: float = 0.0,
+    scale: Optional[float] = None,
+) -> jnp.ndarray:
+    sq = q.shape[1]
+    if sq >= Q_CHUNK_THRESHOLD and sq % Q_CHUNK == 0:
+        if q_offset is None:
+            q_offset = k.shape[1] - sq
+
+        # scan over q chunks; each chunk is a plain grouped attention with
+        # its own q_offset
+        n = sq // Q_CHUNK
+        qs = q.reshape(q.shape[0], n, Q_CHUNK, *q.shape[2:]).swapaxes(0, 1)
+        off0 = jnp.asarray(q_offset)
+        offs = off0[None, ...] + Q_CHUNK * jnp.arange(n).reshape(
+            (n,) + (1,) * off0.ndim
+        )
+
+        def body(_, xs):
+            qc, off = xs
+            out = _grouped_attend_dense(
+                qc, k, v, causal=causal, window=window, q_offset=off,
+                kv_len=kv_len, softcap=softcap, scale=scale,
+            )
+            return None, out
+
+        _, outs = jax.lax.scan(body, None, (qs, offs))
+        return outs.swapaxes(0, 1).reshape(q.shape)
+    return _grouped_attend_dense(
+        q, k, v, causal=causal, window=window, q_offset=q_offset,
+        kv_len=kv_len, softcap=softcap, scale=scale,
+    )
+
+
+def _grouped_attend_dense(
+    q, k, v, *, causal, window=0, q_offset=None, kv_len=None,
+    softcap=0.0, scale=None,
+) -> jnp.ndarray:
+    """Grouped-query attention core (einsum path, f32 softmax)."""
+    b, sq, h, d = q.shape
+    _, sk, kvh, _ = k.shape
+    g = h // kvh
+    if scale is None:
+        scale = d**-0.5
+    qg = q.reshape(b, sq, kvh, g, d)
+    logits = jnp.einsum(
+        "bqhgd,bkhd->bhgqk", qg.astype(jnp.float32), k.astype(jnp.float32)
+    ) * scale
+    if softcap > 0:
+        logits = softcap * jnp.tanh(logits / softcap)
+
+    # positions
+    if q_offset is None:
+        q_offset = sk - sq
+    qpos = jnp.asarray(q_offset)[..., None] + jnp.arange(sq)  # (B?, Sq)
+    qpos = jnp.broadcast_to(qpos, (b, sq))
+    kpos = jnp.arange(sk)[None, :]  # (1, Sk)
+
+    mask = jnp.ones((b, sq, sk), dtype=bool)
+    if kv_len is not None:
+        kl = jnp.broadcast_to(jnp.asarray(kv_len), (b,))
+        mask = mask & (kpos < kl[:, None])[:, None, :]  # (B,1,Sk) over Sq
+    if causal:
+        mask = mask & (kpos[None] <= qpos[..., None])
+    if window > 0:
+        mask = mask & (kpos[None] > qpos[..., None] - window)
+
+    logits = jnp.where(mask[:, None, None], logits, NEG_INF)
+    probs = jax.nn.softmax(logits, axis=-1)
+    if PROBS_BF16:
+        probs = probs.astype(jnp.bfloat16)
+        out = jnp.einsum(
+            "bhgqk,bkhd->bqhgd", probs, v.astype(jnp.bfloat16),
+            preferred_element_type=jnp.float32,
+        )
+    else:
+        out = jnp.einsum("bhgqk,bkhd->bqhgd", probs, v.astype(jnp.float32))
+    return out.reshape(b, sq, h, d).astype(q.dtype)
+
+
+def attn_forward(
+    p,
+    cfg: ModelConfig,
+    x: jnp.ndarray,  # (B, S, D)
+    positions: jnp.ndarray,  # (B, S) int32
+    *,
+    causal: bool = True,
+    window: int = 0,
+    kv_x: Optional[jnp.ndarray] = None,  # cross-attention source
+    return_cache: bool = False,
+):
+    """Full-sequence attention (train / prefill / encoder / cross)."""
+    from repro.distributed.sharding import BATCH, MODEL, constrain
+
+    h, kvh, hd = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    src = x if kv_x is None else kv_x
+    # TP layout: q heads sharded over model (divisibility-checked inside
+    # constrain); k/v replicated across model within a head group — the
+    # logits einsum then needs no resharding of the (Sq, Sk) tensor.
+    q = constrain(_split_heads(dense(p["wq"], x), h, hd), BATCH, None, MODEL, None)
+    k = constrain(_split_heads(dense(p["wk"], src), kvh, hd), BATCH, None, None, None)
+    v = constrain(_split_heads(dense(p["wv"], src), kvh, hd), BATCH, None, None, None)
+    if cfg.pos_type == "rope" and kv_x is None:
+        ang = rope_freqs(positions, hd, cfg.rope_theta)
+        q = apply_rope(q, ang)
+        k = apply_rope(k, ang)
+    out = grouped_attend(
+        q, k, v, causal=causal and kv_x is None, window=window,
+        q_offset=0, softcap=cfg.attn_logit_softcap,
+    )
+    y = dense(p["wo"], out.reshape(*x.shape[:-1], h * hd))
+    y = constrain(y, BATCH, None, None)
+    if return_cache:
+        return y, {"k": k, "v": v}
+    return y
+
+
+def attn_decode(
+    p,
+    cfg: ModelConfig,
+    x: jnp.ndarray,  # (B, 1, D) new-token activations
+    cache: dict,  # {"k": (B, S, KVH, D), "v": ...}
+    pos: jnp.ndarray,  # (B,) index to write; attends to <= pos
+    *,
+    window: int = 0,
+    cross: bool = False,
+) -> Tuple[jnp.ndarray, dict]:
+    h, kvh, hd = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    b = x.shape[0]
+    q = _split_heads(dense(p["wq"], x), h, hd)  # (B,1,H,D)
+    if cross:
+        # cross-attention cache is static (encoder output); no update
+        out = grouped_attend(
+            q, cache["k"], cache["v"], causal=False,
+            softcap=cfg.attn_logit_softcap,
+        )
+        y = dense(p["wo"], out.reshape(b, 1, h * hd))
+        return y, cache
+
+    k_new = _split_heads(dense(p["wk"], x), kvh, hd)
+    v_new = _split_heads(dense(p["wv"], x), kvh, hd)
+    if cfg.pos_type == "rope":
+        ang = rope_freqs(pos[:, None], hd, cfg.rope_theta)  # (B,1,hd/2)
+        q = apply_rope(q, ang)
+        k_new = apply_rope(k_new, ang)
+    from repro.distributed.sharding import BATCH, MODEL, constrain, want_kv_seq_shard
+
+    bidx = jnp.arange(b)
+    k_cache = cache["k"].at[bidx, pos].set(k_new[:, 0])
+    v_cache = cache["v"].at[bidx, pos].set(v_new[:, 0])
+    if want_kv_seq_shard(kvh):
+        # flash-decode layout: cache sequence over model axis; attention
+        # computes per-shard partial softmax and XLA reduces the (tiny)
+        # per-head stats instead of all-gathering the cache (§Perf B)
+        k_cache = constrain(k_cache, BATCH, MODEL, None, None)
+        v_cache = constrain(v_cache, BATCH, MODEL, None, None)
+    out = grouped_attend(
+        q, k_cache, v_cache, causal=True, window=window,
+        q_offset=pos, kv_len=pos + 1, softcap=cfg.attn_logit_softcap,
+    )
+    y = dense(p["wo"], out.reshape(b, 1, h * hd))
+    return y, {"k": k_cache, "v": v_cache}
+
+
+# ---------------------------------------------------------------------------
+# MLA (DeepSeek multi-head latent attention)
+# ---------------------------------------------------------------------------
+
+
+def make_mla(key, cfg: ModelConfig, dtype):
+    mla = cfg.mla
+    d, h = cfg.d_model, cfg.num_heads
+    r, dn, dr, dv = (
+        mla.kv_lora_rank,
+        mla.qk_nope_head_dim,
+        mla.qk_rope_head_dim,
+        mla.v_head_dim,
+    )
+    ks = jax.random.split(key, 5)
+    out_scale = (h * dv) ** -0.5 / (2.0 * cfg.num_layers) ** 0.5
+    return {
+        "wq": make_dense(ks[0], d, h * (dn + dr), dtype),
+        "wkv_a": make_dense(ks[1], d, r + dr, dtype),  # latent + shared rope key
+        "kv_norm": layers.make_norm("rmsnorm", r, dtype),
+        "w_uk": (jax.random.normal(ks[2], (r, h, dn)) * r**-0.5).astype(dtype),
+        "w_uv": (jax.random.normal(ks[3], (r, h, dv)) * r**-0.5).astype(dtype),
+        "wo": make_dense(ks[4], h * dv, d, dtype, scale=out_scale),
+    }
+
+
+def _mla_qsplit(p, cfg, x, positions):
+    mla = cfg.mla
+    h = cfg.num_heads
+    dn, dr = mla.qk_nope_head_dim, mla.qk_rope_head_dim
+    q = dense(p["wq"], x).reshape(*x.shape[:-1], h, dn + dr)
+    q_nope, q_rope = q[..., :dn], q[..., dn:]
+    ang = rope_freqs(positions, dr, cfg.rope_theta)
+    q_rope = apply_rope(q_rope, ang)
+    return q_nope, q_rope
+
+
+def mla_forward(p, cfg: ModelConfig, x, positions, *, return_cache=False):
+    """Train/prefill MLA: decompress k/v and run standard attention.
+
+    The decoupled-rope logits q_nope.k_nope + q_rope.k_rope are folded into
+    one grouped_attend call by concatenating the nope/rope components per
+    head — this reuses the q-chunked long-sequence path. v is zero-padded to
+    the concat width and sliced back (the extra columns contribute nothing).
+    """
+    from repro.distributed.sharding import BATCH, MODEL, constrain
+
+    mla = cfg.mla
+    b, s, _ = x.shape
+    r, dn, dr, dv = (
+        mla.kv_lora_rank,
+        mla.qk_nope_head_dim,
+        mla.qk_rope_head_dim,
+        mla.v_head_dim,
+    )
+    h = cfg.num_heads
+    q_nope, q_rope = _mla_qsplit(p, cfg, x, positions)
+
+    kv_a = dense(p["wkv_a"], x)  # (B,S,r+dr)
+    c_kv = layers.apply_norm(p["kv_norm"], kv_a[..., :r])
+    k_rope = kv_a[..., r:].reshape(b, s, 1, dr)
+    k_rope = apply_rope(k_rope, rope_freqs(positions, dr, cfg.rope_theta))[:, :, 0]
+
+    k_nope = constrain(
+        jnp.einsum("bsr,rhd->bshd", c_kv, p["w_uk"]), BATCH, None, MODEL, None
+    )
+    v = constrain(
+        jnp.einsum("bsr,rhd->bshd", c_kv, p["w_uv"]), BATCH, None, MODEL, None
+    )
+
+    qq = jnp.concatenate([q_nope, q_rope], axis=-1)  # (B,S,H,dn+dr)
+    kk = jnp.concatenate(
+        [k_nope, jnp.broadcast_to(k_rope[:, :, None], (b, s, h, dr))], axis=-1
+    )
+    vv = jnp.pad(v, ((0, 0), (0, 0), (0, 0), (0, dn + dr - dv)))
+    out = grouped_attend(qq, kk, vv, causal=True, q_offset=0)[..., :dv]
+    y = dense(p["wo"], out.reshape(b, s, -1))
+    if return_cache:
+        return y, {"c_kv": c_kv, "k_rope": k_rope}
+    return y
+
+
+def mla_decode(p, cfg: ModelConfig, x, cache, pos):
+    """Absorbed-matrix MLA decode: attend IN LATENT SPACE — the cache holds
+    only (r + dr) floats/token (DeepSeek's serving trick), and W_uk/W_uv are
+    folded into the query/output instead of decompressing the cache."""
+    mla = cfg.mla
+    b = x.shape[0]
+    r, dn, dr, dv = (
+        mla.kv_lora_rank,
+        mla.qk_nope_head_dim,
+        mla.qk_rope_head_dim,
+        mla.v_head_dim,
+    )
+    q_nope, q_rope = _mla_qsplit(p, cfg, x, pos[:, None])  # (B,1,H,*)
+
+    kv_a = dense(p["wkv_a"], x)  # (B,1,r+dr)
+    c_new = layers.apply_norm(p["kv_norm"], kv_a[..., :r])[:, 0]  # (B,r)
+    k_rope_new = kv_a[..., r:].reshape(b, 1, 1, dr)
+    k_rope_new = apply_rope(k_rope_new, rope_freqs(pos[:, None], dr, cfg.rope_theta))[:, 0, 0]
+
+    from repro.distributed.sharding import BATCH, MODEL, constrain, want_kv_seq_shard
+
+    bidx = jnp.arange(b)
+    c_cache = cache["c_kv"].at[bidx, pos].set(c_new)  # (B,S,r)
+    r_cache = cache["k_rope"].at[bidx, pos].set(k_rope_new)  # (B,S,dr)
+    if want_kv_seq_shard(0):
+        # flash-decode layout for the MLA latent cache (§Perf B)
+        c_cache = constrain(c_cache, BATCH, MODEL, None)
+        r_cache = constrain(r_cache, BATCH, MODEL, None)
+
+    # absorb W_uk into q: (B,1,H,dn) x (r,H,dn) -> (B,H,r)
+    q_lat = jnp.einsum("bqhd,rhd->bhr", q_nope.astype(jnp.float32), p["w_uk"].astype(jnp.float32))
+    lg = jnp.einsum("bhr,bsr->bhs", q_lat, c_cache.astype(jnp.float32))
+    lg += jnp.einsum("bqhd,bsd->bhs", q_rope.astype(jnp.float32), r_cache.astype(jnp.float32))
+    lg *= (dn + dr) ** -0.5
+    mask = jnp.arange(c_cache.shape[1])[None, :] <= pos[:, None]  # (B,S)
+    lg = jnp.where(mask[:, None], lg, NEG_INF)
+    pr = jax.nn.softmax(lg, axis=-1)
+    ctx = jnp.einsum("bhs,bsr->bhr", pr, c_cache.astype(jnp.float32))
+    out = jnp.einsum("bhr,rhd->bhd", ctx, p["w_uv"].astype(jnp.float32)).astype(x.dtype)
+    y = dense(p["wo"], out.reshape(b, 1, -1))
+    return y, {"c_kv": c_cache, "k_rope": r_cache}

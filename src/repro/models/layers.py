@@ -1,0 +1,202 @@
+"""Shared model layers: norms, MLPs, RoPE, embeddings.
+
+Params are plain nested dicts of jnp arrays (no framework dependency);
+weight-name conventions are what distributed/sharding.py pattern-matches:
+
+    kernel shapes: (in, out) for projections, (vocab, d) for embeddings,
+    (experts, in, out) for MoE. Names: w_in/w_gate/w_out (mlp), wq/wk/wv/wo
+    (attention), embed, lm_head.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+def make_dense(key, d_in, d_out, dtype, scale: Optional[float] = None, bias=False):
+    if scale is None:
+        scale = d_in**-0.5
+    p = {"kernel": (scale * jax.random.normal(key, (d_in, d_out))).astype(dtype)}
+    if bias:
+        p["bias"] = jnp.zeros((d_out,), dtype)
+    return p
+
+
+def dense(p, x):
+    y = x @ p["kernel"]
+    if "bias" in p:
+        y = y + p["bias"]
+    return y
+
+
+# --- norms -----------------------------------------------------------------
+
+
+def make_norm(norm_type: str, d: int, dtype):
+    if norm_type == "rmsnorm":
+        return {"scale": jnp.ones((d,), dtype)}
+    elif norm_type == "layernorm":
+        return {"scale": jnp.ones((d,), dtype), "bias": jnp.zeros((d,), dtype)}
+    raise ValueError(norm_type)
+
+
+def apply_norm(p, x, eps: float = 1e-6):
+    xf = x.astype(jnp.float32)
+    if "bias" in p:  # layernorm
+        mu = jnp.mean(xf, axis=-1, keepdims=True)
+        var = jnp.var(xf, axis=-1, keepdims=True)
+        y = (xf - mu) * jax.lax.rsqrt(var + eps)
+        return (y * p["scale"].astype(jnp.float32) + p["bias"].astype(jnp.float32)).astype(x.dtype)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(var + eps)
+    return (y * p["scale"].astype(jnp.float32)).astype(x.dtype)
+
+
+# --- MLPs ------------------------------------------------------------------
+
+
+def make_mlp(key, d_model, d_ff, mlp_type, dtype, bias=False, out_scale=None):
+    ks = jax.random.split(key, 3)
+    p = {}
+    if mlp_type in ("swiglu", "geglu"):
+        p["w_gate"] = make_dense(ks[0], d_model, d_ff, dtype, bias=bias)
+        p["w_in"] = make_dense(ks[1], d_model, d_ff, dtype, bias=bias)
+    else:  # gelu
+        p["w_in"] = make_dense(ks[1], d_model, d_ff, dtype, bias=bias)
+    p["w_out"] = make_dense(ks[2], d_ff, d_model, dtype, scale=out_scale, bias=bias)
+    return p
+
+
+def apply_mlp(p, x, mlp_type):
+    if mlp_type == "swiglu":
+        h = jax.nn.silu(dense(p["w_gate"], x)) * dense(p["w_in"], x)
+    elif mlp_type == "geglu":
+        h = jax.nn.gelu(dense(p["w_gate"], x), approximate=True) * dense(p["w_in"], x)
+    elif mlp_type == "gelu":
+        h = jax.nn.gelu(dense(p["w_in"], x), approximate=True)
+    else:
+        raise ValueError(mlp_type)
+    return dense(p["w_out"], h)
+
+
+# --- rotary embeddings -------------------------------------------------------
+
+
+def rope_freqs(positions: jnp.ndarray, dim: int, theta: float) -> jnp.ndarray:
+    """(..., S) int positions -> (..., S, dim/2) angles."""
+    inv = 1.0 / (theta ** (jnp.arange(0, dim, 2, dtype=jnp.float32) / dim))
+    return positions.astype(jnp.float32)[..., None] * inv
+
+
+def apply_rope(x: jnp.ndarray, angles: jnp.ndarray) -> jnp.ndarray:
+    """x: (..., S, H, D); angles: (..., S, D/2). Interleaved-pair rotation
+    done in float32 (numerics) and cast back."""
+    d = x.shape[-1]
+    x1 = x[..., : d // 2].astype(jnp.float32)
+    x2 = x[..., d // 2 :].astype(jnp.float32)
+    cos = jnp.cos(angles)[..., None, :]  # broadcast over heads
+    sin = jnp.sin(angles)[..., None, :]
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+# --- positional embeddings ----------------------------------------------------
+
+
+def sinusoidal_positions(seq: int, d: int) -> jnp.ndarray:
+    pos = jnp.arange(seq, dtype=jnp.float32)[:, None]
+    dim = jnp.arange(0, d, 2, dtype=jnp.float32)[None, :]
+    angle = pos / jnp.power(10_000.0, dim / d)
+    pe = jnp.zeros((seq, d), jnp.float32)
+    pe = pe.at[:, 0::2].set(jnp.sin(angle))
+    pe = pe.at[:, 1::2].set(jnp.cos(angle))
+    return pe
+
+
+# --- embeddings ----------------------------------------------------------------
+
+
+def make_embedding(key, vocab_padded: int, d: int, dtype):
+    return {"embed": (0.02 * jax.random.normal(key, (vocab_padded, d))).astype(dtype)}
+
+
+def embed_tokens(p, tokens: jnp.ndarray, scale: bool = False):
+    x = jnp.take(p["embed"], tokens, axis=0)
+    if scale:
+        x = x * jnp.asarray(math.sqrt(x.shape[-1]), x.dtype)
+    return x
+
+
+def lm_logits(p_head, x, tied_embed=None, softcap: float = 0.0):
+    """Project to (padded) vocab logits in f32, vocab-sharded over the model
+    axis (the CE logsumexp then reduces locally + one scalar all-reduce,
+    and no device ever holds a full (B, S, V) tensor)."""
+    from repro.distributed.sharding import BATCH, MODEL, constrain
+
+    w = tied_embed["embed"].T if tied_embed is not None else p_head["kernel"]
+    logits = jnp.einsum("...d,dv->...v", x.astype(jnp.float32), w.astype(jnp.float32))
+    logits = constrain(logits, BATCH, *([None] * (logits.ndim - 2)), MODEL)
+    if softcap > 0:
+        logits = softcap * jnp.tanh(logits / softcap)
+    return logits
+
+
+def cross_entropy_from_features(
+    x, w, labels, vocab_size: int, mask=None, chunk: int = 1024
+):
+    """Sequence-chunked CE: logits for `chunk` positions at a time (memory
+    O(B*chunk*V/model_axis) instead of O(B*S*V)). w: (d, V_pad)."""
+    b, s, d = x.shape
+    if mask is None:
+        mask = jnp.ones((b, s), jnp.float32)
+    chunk = min(chunk, s)
+    n = s // chunk
+    rem = s - n * chunk
+    from repro.distributed.sharding import BATCH, MODEL, constrain
+
+    def ce_sum(xc, lc, mc):
+        logits = jnp.einsum(
+            "bsd,dv->bsv", xc.astype(jnp.float32), w.astype(jnp.float32)
+        )
+        logits = constrain(logits, BATCH, None, MODEL)
+        vpad = logits.shape[-1]
+        if vpad > vocab_size:
+            logits = logits.at[..., vocab_size:].set(-1e30)
+        logz = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, lc[..., None], axis=-1)[..., 0]
+        mc = mc.astype(logz.dtype)
+        return jnp.sum((logz - gold) * mc), jnp.sum(mc)
+
+    def body(carry, xs):
+        xc, lc, mc = xs
+        ls, ms = ce_sum(xc, lc, mc)
+        return (carry[0] + ls, carry[1] + ms), None
+
+    resh = lambda a: a[:, : n * chunk].reshape(b, n, chunk, *a.shape[2:]).swapaxes(0, 1)
+    (loss_sum, m_sum), _ = jax.lax.scan(
+        body, (jnp.zeros(()), jnp.zeros(())), (resh(x), resh(labels), resh(mask))
+    )
+    if rem:
+        ls, ms = ce_sum(x[:, n * chunk :], labels[:, n * chunk :], mask[:, n * chunk :])
+        loss_sum, m_sum = loss_sum + ls, m_sum + ms
+    return loss_sum / jnp.maximum(m_sum, 1.0)
+
+
+def cross_entropy_loss(logits, labels, vocab_size: int, mask=None):
+    """Mean CE over valid tokens; padded-vocab columns are excluded by
+    masking them to -inf before the softmax."""
+    v_pad = logits.shape[-1]
+    if v_pad > vocab_size:
+        neg = jnp.full((v_pad - vocab_size,), -1e30, logits.dtype)
+        logits = logits.at[..., vocab_size:].set(neg)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    nll = logz - gold
+    if mask is None:
+        return jnp.mean(nll)
+    mask = mask.astype(nll.dtype)
+    return jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)

@@ -1,0 +1,185 @@
+"""Mamba-1 selective SSM mixer (jamba's sequence mixer).
+
+Train/prefill: chunked associative scan over time — the outer lax.scan
+carries the (B, d_inner, d_state) SSM state across chunks, the inner
+jax.lax.associative_scan parallelizes within a chunk; `chunk` bounds the
+materialized (B, chunk, d_inner, d_state) discretized tensors (the classic
+Mamba memory blow-up knob).
+
+Decode: O(1) recurrent step carrying {ssm state h, conv tail}.
+
+Connection to the paper (DESIGN.md §Arch-applicability): this is exactly an
+explicitly-stepped state evolution — the decode path is driven by the same
+scan machinery as the reservoir integrator.
+"""
+
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import layers
+from repro.models.layers import dense, make_dense
+
+
+def _dims(cfg: ModelConfig):
+    mc = cfg.mamba
+    d_inner = mc.expand * cfg.d_model
+    dt_rank = mc.dt_rank or -(-cfg.d_model // 16)  # ceil(d/16)
+    return mc, d_inner, dt_rank
+
+
+def make_mamba(key, cfg: ModelConfig, dtype):
+    mc, di, dtr = _dims(cfg)
+    ds = mc.d_state
+    ks = jax.random.split(key, 8)
+    out_scale = di**-0.5 / (2.0 * cfg.num_layers) ** 0.5
+    # S4-style A init: A_log = log(1..d_state) broadcast over channels
+    a_init = jnp.log(jnp.arange(1, ds + 1, dtype=jnp.float32))
+    return {
+        "in_proj": make_dense(ks[0], cfg.d_model, 2 * di, dtype),
+        "conv_w": (0.1 * jax.random.normal(ks[1], (mc.d_conv, di))).astype(dtype),
+        "conv_b": jnp.zeros((di,), dtype),
+        "x_proj": make_dense(ks[2], di, dtr + 2 * ds, dtype),
+        "dt_proj": {
+            "kernel": (dtr**-0.5 * jax.random.normal(ks[3], (dtr, di))).astype(dtype),
+            "bias": jnp.log(
+                jnp.exp(
+                    jnp.clip(
+                        jnp.exp(
+                            jax.random.uniform(ks[4], (di,))
+                            * (jnp.log(0.1) - jnp.log(0.001))
+                            + jnp.log(0.001)
+                        ),
+                        min=1e-4,
+                    )
+                )
+                - 1.0
+                + 1e-9
+            ).astype(dtype),  # inverse-softplus of dt_init
+        },
+        "a_log": jnp.broadcast_to(a_init, (di, ds)).astype(jnp.float32),
+        "d_skip": jnp.ones((di,), dtype),
+        # jamba normalizes dt/B/C
+        "dt_norm": layers.make_norm("rmsnorm", dtr, dtype),
+        "b_norm": layers.make_norm("rmsnorm", ds, dtype),
+        "c_norm": layers.make_norm("rmsnorm", ds, dtype),
+        "out_proj": make_dense(ks[5], di, cfg.d_model, dtype, scale=out_scale),
+    }
+
+
+def _conv_causal(w, b, x, tail=None):
+    """Depthwise causal conv along S. x: (B, S, di); w: (K, di).
+
+    tail: (B, K-1, di) previous inputs for decode continuity (None = zeros).
+    Returns (y, new_tail)."""
+    k = w.shape[0]
+    if tail is None:
+        tail = jnp.zeros((x.shape[0], k - 1, x.shape[2]), x.dtype)
+    xp = jnp.concatenate([tail, x], axis=1)  # (B, S+K-1, di)
+    y = sum(xp[:, i : i + x.shape[1]] * w[i] for i in range(k)) + b
+    new_tail = xp[:, -(k - 1) :] if k > 1 else tail
+    return y, new_tail
+
+
+def _ssm_inputs(p, cfg, xc):
+    """Shared discretization: xc (B,S,di) -> (dA, dBx, Cc).
+
+    Only ever called on short windows (decode: S=1; train: one chunk at a
+    time) so the (B, S, di, ds) tensors stay chunk-sized.
+    """
+    mc, di, dtr = _dims(cfg)
+    ds = mc.d_state
+    xdb = dense(p["x_proj"], xc)  # (B,S,dtr+2ds)
+    dt = layers.apply_norm(p["dt_norm"], xdb[..., :dtr])
+    bc = layers.apply_norm(p["b_norm"], xdb[..., dtr : dtr + ds])
+    cc = layers.apply_norm(p["c_norm"], xdb[..., dtr + ds :])
+    dt = jax.nn.softplus(dense(p["dt_proj"], dt).astype(jnp.float32))  # (B,S,di)
+    a = -jnp.exp(p["a_log"])  # (di, ds)
+    da = jnp.exp(dt[..., None] * a)  # (B,S,di,ds)
+    dbx = (dt * xc.astype(jnp.float32))[..., None] * bc.astype(jnp.float32)[
+        ..., None, :
+    ]  # (B,S,di,ds)
+    return da, dbx, cc.astype(jnp.float32)
+
+
+def mamba_forward(p, cfg: ModelConfig, x, *, return_cache=False):
+    """x: (B,S,D) -> (B,S,D) (+ decode cache {h, conv_tail}).
+
+    Discretization, the associative scan, and the C-projection all live
+    INSIDE the chunk scan so nothing of shape (B, S, di, ds) ever
+    materializes — peak extra memory is (B, chunk, di, ds). d_inner
+    activations are sharded over the model axis.
+    """
+    from repro.distributed.sharding import BATCH, MODEL, constrain
+
+    mc, di, _ = _dims(cfg)
+    ds = mc.d_state
+    b, s, _ = x.shape
+    xz = dense(p["in_proj"], x)
+    x1 = constrain(xz[..., :di], BATCH, None, MODEL)
+    z = constrain(xz[..., di:], BATCH, None, MODEL)
+    xc, tail = _conv_causal(p["conv_w"], p["conv_b"], x1)
+    xc = jax.nn.silu(xc)
+
+    chunk = min(mc.chunk, s)
+    s_pad = -(-s // chunk) * chunk
+    xc_p = jnp.pad(xc, ((0, 0), (0, s_pad - s), (0, 0))) if s_pad != s else xc
+    nch = s_pad // chunk
+    h0 = jnp.zeros((b, di, ds), jnp.float32)
+
+    def combine(l, r):
+        al, bl = l
+        ar, br = r
+        return al * ar, bl * ar + br
+
+    valid = (jnp.arange(s_pad) < s).reshape(nch, chunk)
+
+    def body(h, xs):  # xc_c: (B, chunk, di); val: (chunk,)
+        xc_c, val = xs
+        da, dbx, cc = _ssm_inputs(p, cfg, xc_c)
+        # padded steps are identity transitions: h_t = 1*h + 0
+        vm = val[None, :, None, None]
+        da = jnp.where(vm, da, 1.0)
+        dbx = jnp.where(vm, dbx, 0.0)
+        ca, cb = jax.lax.associative_scan(combine, (da, dbx), axis=1)
+        h_all = ca * h[:, None] + cb  # (B, chunk, di, ds)
+        y_c = jnp.einsum("bsdn,bsn->bsd", h_all, cc)  # (B, chunk, di)
+        return h_all[:, -1], y_c
+
+    hT, ys = jax.lax.scan(
+        body, h0, (xc_p.reshape(b, nch, chunk, di).swapaxes(0, 1), valid)
+    )
+    y = ys.swapaxes(0, 1).reshape(b, s_pad, di)[:, :s]
+    y = y + p["d_skip"].astype(jnp.float32) * xc.astype(jnp.float32)
+    y = (y * jax.nn.silu(z.astype(jnp.float32))).astype(x.dtype)
+    out = dense(p["out_proj"], y)
+    if return_cache:
+        return out, {"h": hT, "conv_tail": tail}
+    return out
+
+
+def mamba_decode(p, cfg: ModelConfig, x, cache) -> Tuple[jnp.ndarray, dict]:
+    """One-token recurrent step. x: (B,1,D)."""
+    mc, di, _ = _dims(cfg)
+    xz = dense(p["in_proj"], x)
+    x1, z = xz[..., :di], xz[..., di:]
+    xc, tail = _conv_causal(p["conv_w"], p["conv_b"], x1, cache["conv_tail"])
+    xc = jax.nn.silu(xc)
+    da, dbx, cc = _ssm_inputs(p, cfg, xc)  # (B,1,di,ds)
+    h = da[:, 0] * cache["h"] + dbx[:, 0]  # (B,di,ds)
+    y = jnp.einsum("bdn,bn->bd", h, cc[:, 0])[:, None]  # (B,1,di)
+    y = y + p["d_skip"].astype(jnp.float32) * xc.astype(jnp.float32)
+    y = (y * jax.nn.silu(z.astype(jnp.float32))).astype(x.dtype)
+    return dense(p["out_proj"], y), {"h": h, "conv_tail": tail}
+
+
+def mamba_cache_spec(cfg: ModelConfig, batch: int, dtype):
+    mc, di, _ = _dims(cfg)
+    return {
+        "h": jax.ShapeDtypeStruct((batch, di, mc.d_state), jnp.float32),
+        "conv_tail": jax.ShapeDtypeStruct((batch, mc.d_conv - 1, di), dtype),
+    }

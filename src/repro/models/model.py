@@ -1,0 +1,132 @@
+"""Public model API: build_model(cfg) -> Model with init / loss / prefill /
+decode plus ShapeDtypeStruct input specs for every shape cell (the dry-run
+lowers these — no allocation ever happens for full-size configs).
+
+Modality frontends are STUBS per the assignment: [audio]/[vlm] archs receive
+precomputed frame/patch embeddings through input_specs().
+"""
+
+from __future__ import annotations
+
+from typing import Any, Callable, Dict, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, ShapeCell
+from repro.models import layers, transformer
+
+
+class Model(NamedTuple):
+    cfg: ModelConfig
+    init: Callable  # (key) -> params
+    loss_fn: Callable  # (params, batch) -> (loss, metrics)
+    forward: Callable  # (params, batch) -> logits
+    prefill: Callable  # (params, batch) -> (last_logits, caches)
+    decode_step: Callable  # (params, tokens, caches, pos) -> (logits, caches)
+    input_specs: Callable  # (cell) -> batch pytree of ShapeDtypeStruct
+    cache_specs: Callable  # (batch, seq) -> cache pytree of ShapeDtypeStruct
+
+
+def build_model(cfg: ModelConfig) -> Model:
+    def init(key):
+        return transformer.init_params(key, cfg)
+
+    def forward(params, batch):
+        logits, _, _ = transformer.forward_logits(params, cfg, batch, mode="train")
+        return logits
+
+    def loss_fn(params, batch):
+        feats, aux, _ = transformer.forward_logits(
+            params, cfg, batch, mode="features"
+        )
+        w = (
+            params["embed"]["embed"].T
+            if cfg.tie_embeddings
+            else params["lm_head"]["kernel"]
+        )
+        ce = layers.cross_entropy_from_features(
+            feats, w, batch["labels"], cfg.vocab_size, batch.get("loss_mask")
+        )
+        aux_w = cfg.moe.aux_loss_weight if cfg.moe else 0.0
+        loss = ce + aux_w * aux
+        return loss, {"ce": ce, "aux": aux}
+
+    def prefill(params, batch):
+        logits, _, caches = transformer.forward_logits(
+            params, cfg, batch, mode="prefill"
+        )
+        return logits[:, -1:], caches
+
+    def decode_step(params, tokens, caches, pos):
+        return transformer.decode_step(params, cfg, tokens, caches, pos)
+
+    def input_specs(cell: ShapeCell, enc_seq: int = 4096) -> Dict[str, Any]:
+        return make_input_specs(cfg, cell, enc_seq)
+
+    def cache_specs(batch, seq, enc_seq: int = 4096):
+        return transformer.cache_specs(cfg, batch, seq, enc_seq)
+
+    return Model(cfg, init, loss_fn, forward, prefill, decode_step, input_specs, cache_specs)
+
+
+def make_input_specs(cfg: ModelConfig, cell: ShapeCell, enc_seq: int = 4096):
+    """Batch pytree (ShapeDtypeStructs) for one (arch x shape) cell.
+
+    train/prefill carry the full sequence; decode carries one token + cache
+    + per-sequence positions. Embedding-mode archs receive stubbed
+    (B, S, d_model) frontend outputs instead of tokens.
+    """
+    b, s = cell.global_batch, cell.seq_len
+    dtype = transformer._dtype_of(cfg)
+    tok = lambda *shape: jax.ShapeDtypeStruct(shape, jnp.int32)
+    emb = lambda *shape: jax.ShapeDtypeStruct(shape, dtype)
+
+    if cell.kind == "train":
+        batch: Dict[str, Any] = {}
+        if cfg.encoder_layers:
+            batch["encoder_frames"] = emb(b, s, cfg.d_model)
+            batch["tokens"] = tok(b, s)
+        elif cfg.input_mode == "embeddings":
+            batch["inputs_embeds"] = emb(b, s, cfg.d_model)
+        else:
+            batch["tokens"] = tok(b, s)
+        batch["labels"] = tok(b, s)
+        batch["loss_mask"] = jax.ShapeDtypeStruct((b, s), jnp.float32)
+        return batch
+
+    if cell.kind == "prefill":
+        batch = {}
+        if cfg.encoder_layers:
+            batch["encoder_frames"] = emb(b, min(s, enc_seq), cfg.d_model)
+            batch["tokens"] = tok(b, s)
+        elif cfg.input_mode == "embeddings":
+            batch["inputs_embeds"] = emb(b, s, cfg.d_model)
+        else:
+            batch["tokens"] = tok(b, s)
+        return batch
+
+    if cell.kind == "decode":
+        return {
+            "tokens": tok(b, 1),
+            "caches": transformer.cache_specs(cfg, b, s, enc_seq),
+            "pos": jax.ShapeDtypeStruct((b,), jnp.int32),
+        }
+    raise ValueError(cell.kind)
+
+
+def concrete_batch(cfg: ModelConfig, cell: ShapeCell, key, enc_seq: int = 256):
+    """Materialize a random batch matching input_specs (smoke tests only)."""
+    specs = make_input_specs(cfg, cell, enc_seq)
+
+    def mk(spec):
+        if spec.dtype == jnp.int32:
+            return jax.random.randint(key, spec.shape, 0, max(cfg.vocab_size, 2))
+        return 0.02 * jax.random.normal(key, spec.shape, spec.dtype)
+
+    batch = jax.tree.map(mk, specs)
+    if "loss_mask" in batch:
+        batch["loss_mask"] = jnp.ones_like(batch["loss_mask"])
+    if "pos" in batch:
+        batch["pos"] = jnp.full(batch["pos"].shape, cell.seq_len - 1, jnp.int32)
+    return batch

@@ -1,0 +1,119 @@
+"""Mixture-of-Experts channel mixer: shared + routed top-k experts.
+
+Dispatch is token-chunked capacity-based (MaxText-style einsum dispatch,
+but over chunks of `router_chunk` tokens so the one-hot dispatch tensor is
+(chunk, E, C) instead of (B*S, E, C) — this is what keeps the 32k-seq MoE
+cells memory-sane). Tokens beyond an expert's per-chunk capacity are
+dropped (contribute zero), standard for capacity-based routing; the
+auxiliary load-balance loss pushes the router away from that regime.
+
+Expert weights are (E, d_in, d_out) so expert-parallel sharding is a leading
+-dim PartitionSpec; when E % mesh_model != 0 the sharder falls back to the
+d_ff dimension (distributed/sharding.py).
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import layers
+
+
+def make_moe(key, cfg: ModelConfig, dtype):
+    moe = cfg.moe
+    d, f, e = cfg.d_model, moe.d_ff_expert, moe.num_experts
+    ks = jax.random.split(key, 5)
+    scale_in = d**-0.5
+    scale_out = f**-0.5 / (2.0 * cfg.num_layers) ** 0.5
+    p = {
+        "router": layers.make_dense(ks[0], d, e, jnp.float32),  # router in f32
+        "w_gate": (scale_in * jax.random.normal(ks[1], (e, d, f))).astype(dtype),
+        "w_in": (scale_in * jax.random.normal(ks[2], (e, d, f))).astype(dtype),
+        "w_out": (scale_out * jax.random.normal(ks[3], (e, f, d))).astype(dtype),
+    }
+    if moe.num_shared:
+        p["shared"] = layers.make_mlp(
+            ks[4], d, f * moe.num_shared, "swiglu", dtype, out_scale=scale_out
+        )
+    return p
+
+
+def _route_chunk(p, moe, x):  # x: (T, D)
+    """Top-k routing + capacity dispatch for one token chunk."""
+    t, d = x.shape
+    e, k = moe.num_experts, moe.top_k
+    cap = max(1, int(math.ceil(t * k / e * moe.capacity_factor)))
+
+    logits = x.astype(jnp.float32) @ p["router"]["kernel"] + p["router"].get(
+        "bias", 0.0
+    )  # (T, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    top_p, top_e = jax.lax.top_k(probs, k)  # (T, K)
+    top_p = top_p / jnp.sum(top_p, axis=-1, keepdims=True)  # renormalize
+
+    # position of each (token, k) within its expert, chunk-local
+    onehot = jax.nn.one_hot(top_e, e, dtype=jnp.int32)  # (T, K, E)
+    flat = onehot.reshape(t * k, e)
+    pos_in_e = jnp.cumsum(flat, axis=0) - flat  # exclusive (T*K, E)
+    pos = jnp.sum(pos_in_e * flat, axis=-1).reshape(t, k)  # (T, K)
+    keep = pos < cap
+
+    # dispatch tensor (T, E, C): one-hot over expert and capacity slot
+    disp = (
+        jax.nn.one_hot(top_e, e, dtype=x.dtype)[..., None]
+        * jax.nn.one_hot(jnp.where(keep, pos, cap), cap + 1, dtype=x.dtype)[..., None, :]
+    )  # (T, K, E, C+1)
+    disp = jnp.sum(disp[..., :cap], axis=1)  # (T, E, C)
+
+    # combine weights: router prob scattered onto the same (expert, slot)
+    comb = disp * jnp.einsum(
+        "tk,tke->te", top_p.astype(x.dtype), onehot.astype(x.dtype)
+    )[..., None]
+
+    # expert compute: gather (E, C, D), swiglu per expert, scatter back
+    xe = jnp.einsum("tec,td->ecd", disp, x)  # (E, C, D)
+    h = jax.nn.silu(jnp.einsum("ecd,edf->ecf", xe, p["w_gate"])) * jnp.einsum(
+        "ecd,edf->ecf", xe, p["w_in"]
+    )
+    ye = jnp.einsum("ecf,efd->ecd", h, p["w_out"])  # (E, C, D)
+    y = jnp.einsum("tec,ecd->td", comb, ye)  # (T, D)
+
+    # switch-style aux loss: E * sum_e f_e * P_e
+    frac = jnp.mean(jax.nn.one_hot(top_e[..., 0], e, dtype=jnp.float32), axis=0)
+    prob = jnp.mean(probs, axis=0)
+    aux = e * jnp.sum(frac * prob)
+    return y, aux
+
+
+def apply_moe(p, cfg: ModelConfig, x: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """x: (B, S, D) -> (y, aux_loss). Token dim is chunk-scanned."""
+    moe = cfg.moe
+    b, s, d = x.shape
+    flat = x.reshape(b * s, d)
+    chunk = min(moe.router_chunk, b * s)
+    n = flat.shape[0] // chunk
+    rem = flat.shape[0] - n * chunk
+
+    def body(carry, xc):
+        y, aux = _route_chunk(p, moe, xc)
+        return carry + aux, y
+
+    aux_total, ys = jax.lax.scan(
+        body, jnp.zeros((), jnp.float32), flat[: n * chunk].reshape(n, chunk, d)
+    )
+    y = ys.reshape(n * chunk, d)
+    if rem:
+        y_rem, aux_rem = _route_chunk(p, moe, flat[n * chunk :])
+        y = jnp.concatenate([y, y_rem], axis=0)
+        aux_total = aux_total + aux_rem
+        n += 1
+    y = y.reshape(b, s, d)
+
+    if moe.num_shared:
+        y = y + layers.apply_mlp(p["shared"], x, "swiglu")
+    return y, aux_total / jnp.asarray(max(n, 1), jnp.float32)

@@ -1,0 +1,501 @@
+"""Model assembly: heterogeneous layer stacks compiled as scan-over-periods.
+
+A config's layer plan is `prefix` (unstacked) + `period` x num_periods.
+Period parameters are STACKED (leading axis = num_periods) and executed with
+lax.scan — one period body in the HLO regardless of depth, which is what
+keeps 72-layer/512-device dry-run compiles tractable and is also the right
+shape for real fleets. jax.checkpoint (remat) wraps the period body.
+
+Caches for decode are pytrees mirroring the stacks (leading num_periods axis
+on stacked layers), threaded through the same scan.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import LayerSpec, ModelConfig
+from repro.models import attention, layers, mamba, moe, xlstm
+
+
+# ---------------------------------------------------------------------------
+# per-layer init / forward / decode
+# ---------------------------------------------------------------------------
+
+
+def _init_layer(key, cfg: ModelConfig, spec: LayerSpec, dtype, cross: bool):
+    ks = jax.random.split(key, 6)
+    p: Dict[str, Any] = {}
+    if spec.mixer in ("attn", "swa"):
+        p["mixer_norm"] = layers.make_norm(cfg.norm_type, cfg.d_model, dtype)
+        p["mixer"] = attention.make_attention(ks[0], cfg, dtype)
+    elif spec.mixer == "mla":
+        p["mixer_norm"] = layers.make_norm(cfg.norm_type, cfg.d_model, dtype)
+        p["mixer"] = attention.make_mla(ks[0], cfg, dtype)
+    elif spec.mixer == "mamba":
+        p["mixer_norm"] = layers.make_norm(cfg.norm_type, cfg.d_model, dtype)
+        p["mixer"] = mamba.make_mamba(ks[0], cfg, dtype)
+    elif spec.mixer == "mlstm":
+        p["mixer"] = xlstm.make_mlstm(ks[0], cfg, dtype)
+    elif spec.mixer == "slstm":
+        p["mixer"] = xlstm.make_slstm(ks[0], cfg, dtype)
+    else:
+        raise ValueError(spec.mixer)
+
+    if cross:
+        p["cross_norm"] = layers.make_norm(cfg.norm_type, cfg.d_model, dtype)
+        p["cross"] = attention.make_attention(ks[2], cfg, dtype)
+
+    if spec.mlp == "mlp":
+        p["mlp_norm"] = layers.make_norm(cfg.norm_type, cfg.d_model, dtype)
+        out_scale = cfg.d_ff**-0.5 / (2.0 * cfg.num_layers) ** 0.5
+        p["mlp"] = layers.make_mlp(
+            ks[1], cfg.d_model, cfg.d_ff, cfg.mlp_type, dtype,
+            bias=cfg.attn_bias, out_scale=out_scale,
+        )
+    elif spec.mlp == "moe":
+        p["mlp_norm"] = layers.make_norm(cfg.norm_type, cfg.d_model, dtype)
+        p["mlp"] = moe.make_moe(ks[1], cfg, dtype)
+    return p
+
+
+def _layer_forward(
+    p,
+    cfg: ModelConfig,
+    spec: LayerSpec,
+    x,
+    positions,
+    *,
+    mode: str,  # "train" | "prefill"
+    causal: bool = True,
+    enc_out=None,
+):
+    """Full-sequence layer. Returns (x, aux, cache_or_None)."""
+    aux = jnp.zeros((), jnp.float32)
+    cache = {}
+    want_cache = mode == "prefill"
+
+    if spec.mixer in ("attn", "swa", "mla"):
+        window = cfg.sliding_window if spec.mixer == "swa" else 0
+        xn = layers.apply_norm(p["mixer_norm"], x)
+        if spec.mixer == "mla":
+            out = attention.mla_forward(
+                p["mixer"], cfg, xn, positions, return_cache=want_cache
+            )
+        else:
+            out = attention.attn_forward(
+                p["mixer"], cfg, xn, positions,
+                causal=causal, window=window, return_cache=want_cache,
+            )
+        if want_cache:
+            y_attn, cache["self"] = out
+        else:
+            y_attn = out
+        if cfg.parallel_block and spec.mlp != "none":
+            y_mlp = layers.apply_mlp(p["mlp"], xn, cfg.mlp_type)
+            x = x + y_attn + y_mlp
+            return x, aux, (cache or None)
+        x = x + y_attn
+    elif spec.mixer == "mamba":
+        xn = layers.apply_norm(p["mixer_norm"], x)
+        out = mamba.mamba_forward(p["mixer"], cfg, xn, return_cache=want_cache)
+        if want_cache:
+            y, cache["self"] = out
+        else:
+            y = out
+        x = x + y
+    elif spec.mixer == "mlstm":
+        out = xlstm.mlstm_forward(p["mixer"], cfg, x, return_cache=want_cache)
+        x, c = out if want_cache else (out, None)
+        if want_cache:
+            cache["self"] = c
+    elif spec.mixer == "slstm":
+        out = xlstm.slstm_forward(p["mixer"], cfg, x, return_cache=want_cache)
+        x, c = out if want_cache else (out, None)
+        if want_cache:
+            cache["self"] = c
+
+    if enc_out is not None and "cross" in p:
+        xn = layers.apply_norm(p["cross_norm"], x)
+        if want_cache:
+            # cache cross K/V once (static across decode steps)
+            h, kvh, hd = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+            k = attention.dense(p["cross"]["wk"], enc_out)
+            v = attention.dense(p["cross"]["wv"], enc_out)
+            b, se, _ = enc_out.shape
+            cache["cross"] = {
+                "k": k.reshape(b, se, kvh, hd),
+                "v": v.reshape(b, se, kvh, hd),
+            }
+        y = attention.attn_forward(
+            p["cross"], cfg, xn, positions, causal=False, kv_x=enc_out
+        )
+        x = x + y
+
+    if spec.mlp in ("mlp", "moe"):
+        xn = layers.apply_norm(p["mlp_norm"], x)
+        if spec.mlp == "mlp":
+            y = layers.apply_mlp(p["mlp"], xn, cfg.mlp_type)
+        else:
+            y, aux = moe.apply_moe(p["mlp"], cfg, xn)
+        x = x + y
+    return x, aux, (cache or None)
+
+
+def _layer_decode(p, cfg: ModelConfig, spec: LayerSpec, x, cache, pos):
+    """One-token layer step. Returns (x, new_cache)."""
+    new_cache = dict(cache) if cache else {}
+    if spec.mixer in ("attn", "swa"):
+        window = cfg.sliding_window if spec.mixer == "swa" else 0
+        xn = layers.apply_norm(p["mixer_norm"], x)
+        y, new_cache["self"] = attention.attn_decode(
+            p["mixer"], cfg, xn, cache["self"], pos, window=window
+        )
+        if cfg.parallel_block and "mlp" in p:
+            y_mlp = layers.apply_mlp(p["mlp"], xn, cfg.mlp_type)
+            x = x + y + y_mlp
+            return x, new_cache
+        x = x + y
+    elif spec.mixer == "mla":
+        xn = layers.apply_norm(p["mixer_norm"], x)
+        y, new_cache["self"] = attention.mla_decode(
+            p["mixer"], cfg, xn, cache["self"], pos
+        )
+        x = x + y
+    elif spec.mixer == "mamba":
+        xn = layers.apply_norm(p["mixer_norm"], x)
+        y, new_cache["self"] = mamba.mamba_decode(p["mixer"], cfg, xn, cache["self"])
+        x = x + y
+    elif spec.mixer == "mlstm":
+        x, new_cache["self"] = xlstm.mlstm_decode(p["mixer"], cfg, x, cache["self"])
+    elif spec.mixer == "slstm":
+        x, new_cache["self"] = xlstm.slstm_decode(p["mixer"], cfg, x, cache["self"])
+
+    if "cross" in (cache or {}):
+        xn = layers.apply_norm(p["cross_norm"], x)
+        y, _ = attention.attn_decode(
+            p["cross"], cfg, xn, cache["cross"], pos, cross=True
+        )
+        x = x + y
+        new_cache["cross"] = cache["cross"]
+
+    if "mlp" in p and not (cfg.parallel_block and spec.mixer in ("attn", "swa")):
+        xn = layers.apply_norm(p["mlp_norm"], x)
+        if isinstance(p["mlp"], dict) and "router" in p["mlp"]:
+            y, _ = moe.apply_moe(p["mlp"], cfg, xn)
+        else:
+            y = layers.apply_mlp(p["mlp"], xn, cfg.mlp_type)
+        x = x + y
+    return x, new_cache
+
+
+def _layer_cache_spec(cfg: ModelConfig, spec: LayerSpec, batch, seq, dtype, cross):
+    out = {}
+    if spec.mixer in ("attn", "swa"):
+        kvh, hd = cfg.num_kv_heads, cfg.head_dim
+        sd = jax.ShapeDtypeStruct((batch, seq, kvh, hd), dtype)
+        out["self"] = {"k": sd, "v": sd}
+    elif spec.mixer == "mla":
+        mla = cfg.mla
+        out["self"] = {
+            "c_kv": jax.ShapeDtypeStruct((batch, seq, mla.kv_lora_rank), dtype),
+            "k_rope": jax.ShapeDtypeStruct((batch, seq, mla.qk_rope_head_dim), dtype),
+        }
+    elif spec.mixer == "mamba":
+        out["self"] = mamba.mamba_cache_spec(cfg, batch, dtype)
+    elif spec.mixer == "mlstm":
+        out["self"] = xlstm.mlstm_cache_spec(cfg, batch, dtype)
+    elif spec.mixer == "slstm":
+        out["self"] = xlstm.slstm_cache_spec(cfg, batch, dtype)
+    if cross:
+        kvh, hd = cfg.num_kv_heads, cfg.head_dim
+        sd = jax.ShapeDtypeStruct((batch, seq, kvh, hd), dtype)
+        out["cross"] = {"k": sd, "v": sd}
+    return out
+
+
+# ---------------------------------------------------------------------------
+# whole-model init / apply
+# ---------------------------------------------------------------------------
+
+
+def _dtype_of(cfg: ModelConfig):
+    return {"bfloat16": jnp.bfloat16, "float32": jnp.float32}[cfg.dtype]
+
+
+def init_params(key, cfg: ModelConfig):
+    dtype = _dtype_of(cfg)
+    keys = jax.random.split(key, 8)
+    cross = cfg.encoder_layers > 0
+    p: Dict[str, Any] = {}
+    p["embed"] = layers.make_embedding(keys[0], cfg.padded_vocab, cfg.d_model, dtype)
+    if not cfg.tie_embeddings:
+        p["lm_head"] = layers.make_dense(
+            keys[1], cfg.d_model, cfg.padded_vocab, dtype, scale=cfg.d_model**-0.5
+        )
+    p["final_norm"] = layers.make_norm(cfg.norm_type, cfg.d_model, dtype)
+
+    # prefix layers (unstacked)
+    if cfg.prefix:
+        pk = jax.random.split(keys[2], len(cfg.prefix))
+        p["prefix"] = [
+            _init_layer(pk[i], cfg, spec, dtype, cross)
+            for i, spec in enumerate(cfg.prefix)
+        ]
+
+    # period stack: vmapped init over periods
+    if cfg.num_periods > 0:
+        period_keys = jax.random.split(keys[3], cfg.num_periods)
+
+        def init_period(k):
+            sk = jax.random.split(k, len(cfg.period))
+            return [
+                _init_layer(sk[i], cfg, spec, dtype, cross)
+                for i, spec in enumerate(cfg.period)
+            ]
+
+        p["stack"] = jax.vmap(init_period)(period_keys)
+
+    # encoder (whisper)
+    if cross:
+        ek = jax.random.split(keys[4], cfg.encoder_layers + 1)
+        enc_spec = LayerSpec("attn", "mlp")
+        p["encoder"] = {
+            "layers": [
+                _init_layer(ek[i], cfg, enc_spec, dtype, False)
+                for i in range(cfg.encoder_layers)
+            ],
+            "final_norm": layers.make_norm(cfg.norm_type, cfg.d_model, dtype),
+        }
+        # decoder learned positions (whisper style)
+        p["dec_pos"] = (
+            0.02 * jax.random.normal(keys[5], (cfg.max_position_embeddings, cfg.d_model))
+        ).astype(dtype)
+    return p
+
+
+def _embed_inputs(p, cfg: ModelConfig, batch):
+    """Returns (x, positions). batch carries either tokens or inputs_embeds."""
+    if "inputs_embeds" in batch:
+        x = batch["inputs_embeds"]
+        b, s, _ = x.shape
+    else:
+        tokens = batch["tokens"]
+        x = layers.embed_tokens(p["embed"], tokens, scale=cfg.embed_scale)
+        b, s = tokens.shape
+    positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+    if cfg.pos_type == "sinusoidal":
+        x = x + layers.sinusoidal_positions(s, cfg.d_model).astype(x.dtype)
+    return x, positions
+
+
+def encode(p, cfg: ModelConfig, frames):
+    """Whisper encoder over stubbed frame embeddings (B, S, D)."""
+    x = frames + layers.sinusoidal_positions(frames.shape[1], cfg.d_model).astype(
+        frames.dtype
+    )
+    positions = jnp.broadcast_to(
+        jnp.arange(frames.shape[1], dtype=jnp.int32), frames.shape[:2]
+    )
+    spec = LayerSpec("attn", "mlp")
+    for lp in p["encoder"]["layers"]:
+        x, _, _ = _layer_forward(lp, cfg, spec, x, positions, mode="train", causal=False)
+    return layers.apply_norm(p["encoder"]["final_norm"], x)
+
+
+def _run_stack(p, cfg: ModelConfig, x, positions, mode, enc_out=None):
+    """prefix layers + scanned periods. Returns (x, aux, caches)."""
+    aux_total = jnp.zeros((), jnp.float32)
+    caches: Dict[str, Any] = {}
+
+    if cfg.prefix:
+        pc = []
+        for lp, spec in zip(p["prefix"], cfg.prefix):
+            x, aux, c = _layer_forward(
+                lp, cfg, spec, x, positions, mode=mode, enc_out=enc_out
+            )
+            aux_total += aux
+            pc.append(c)
+        if mode == "prefill":
+            caches["prefix"] = pc
+
+    if cfg.num_periods > 0:
+        import os
+
+        from repro.distributed.sharding import BATCH, MODEL, constrain
+
+        # §Perf knob: sequence parallelism — activations between blocks are
+        # sharded over the model axis along seq, so norms/residuals run on
+        # 1/|model| of the tokens and the Megatron all-reduce pair becomes
+        # reduce-scatter + all-gather (half the wire bytes).
+        seq_par = os.environ.get("REPRO_SEQ_PARALLEL", "0") == "1"
+
+        def period_body(carry, lp):
+            x, aux = carry
+            if seq_par and x.shape[1] > 1:
+                x = constrain(x, BATCH, MODEL, None)
+            else:
+                x = constrain(x, BATCH, None, None)
+            cs = []
+            for i, spec in enumerate(cfg.period):
+                x, a, c = _layer_forward(
+                    lp[i], cfg, spec, x, positions, mode=mode, enc_out=enc_out
+                )
+                aux = aux + a
+                cs.append(c)
+            return (x, aux), (cs if mode == "prefill" else None)
+
+        body = period_body
+        if cfg.remat:
+            import os
+
+            # §Perf A/B knob: "dots" saves matmul outputs (no recompute of
+            # the MXU work in the backward pass, more residency); default
+            # saves only the carry (recompute everything).
+            policy = None
+            if os.environ.get("REPRO_REMAT_POLICY", "") == "dots":
+                policy = jax.checkpoint_policies.dots_with_no_batch_dims_saveable
+            body = jax.checkpoint(period_body, prevent_cse=False, policy=policy)
+        (x, aux_total), stack_caches = jax.lax.scan(
+            body, (x, aux_total), p["stack"], unroll=cfg.scan_unroll
+        )
+        if mode == "prefill":
+            caches["stack"] = stack_caches
+    return x, aux_total, caches
+
+
+def forward_logits(p, cfg: ModelConfig, batch, mode="train"):
+    """Full-sequence forward to (padded-vocab) logits. Returns
+    (logits, aux, caches)."""
+    enc_out = None
+    if cfg.encoder_layers:
+        enc_out = encode(p, cfg, batch["encoder_frames"])
+        tokens = batch["tokens"]
+        x = layers.embed_tokens(p["embed"], tokens, scale=cfg.embed_scale)
+        b, s = tokens.shape
+        x = x + p["dec_pos"][:s][None].astype(x.dtype)
+        positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+    else:
+        x, positions = _embed_inputs(p, cfg, batch)
+    x, aux, caches = _run_stack(
+        p, cfg, x, positions, "train" if mode == "features" else mode,
+        enc_out=enc_out,
+    )
+    x = layers.apply_norm(p["final_norm"], x)
+    if mode == "features":
+        return x, aux, caches
+    if mode == "prefill":
+        # only the last position's logits are needed — never materialize the
+        # (B, S, vocab) tensor for a 32k prefill
+        x = x[:, -1:]
+    logits = layers.lm_logits(
+        p.get("lm_head"), x,
+        tied_embed=p["embed"] if cfg.tie_embeddings else None,
+        softcap=0.0,
+    )
+    return logits, aux, caches
+
+
+def decode_step(p, cfg: ModelConfig, tokens, caches, pos):
+    """One decode step. tokens: (B, 1) int32; pos: (B,) write position."""
+    x = layers.embed_tokens(p["embed"], tokens, scale=cfg.embed_scale)
+    if cfg.encoder_layers:
+        x = x + jnp.take(p["dec_pos"], pos, axis=0)[:, None].astype(x.dtype)
+
+    new_caches = dict(caches)
+    if cfg.prefix:
+        pc = []
+        for lp, spec, c in zip(p["prefix"], cfg.prefix, caches["prefix"]):
+            x, c2 = _layer_decode(lp, cfg, spec, x, c, pos)
+            pc.append(c2)
+        new_caches["prefix"] = pc
+
+    if cfg.num_periods > 0:
+
+        def period_body(x, scan_in):
+            lp, cache_p = scan_in
+            c_new = []
+            for i, spec in enumerate(cfg.period):
+                x, c2 = _layer_decode(lp[i], cfg, spec, x, cache_p[i], pos)
+                c_new.append(c2)
+            return x, c_new
+
+        x, stack_caches = jax.lax.scan(
+            period_body, x, (p["stack"], caches["stack"])
+        )
+        new_caches["stack"] = stack_caches
+
+    x = layers.apply_norm(p["final_norm"], x)
+    logits = layers.lm_logits(
+        p.get("lm_head"), x,
+        tied_embed=p["embed"] if cfg.tie_embeddings else None,
+    )
+    return logits, new_caches
+
+
+_SEQ_CACHE_KEYS = ("k", "v", "c_kv", "k_rope")
+
+
+def pad_caches(cfg: ModelConfig, caches, capacity: int):
+    """Grow prefill caches (seq axis) to `capacity` so decode can append.
+
+    Only sequence-indexed caches (attention KV, MLA latents) are padded;
+    recurrent states (mamba/xlstm) are O(1) and pass through. Self caches in
+    the period stack carry a leading num_periods axis (seq axis = 2)."""
+
+    def pad_layer(c, stacked):
+        if c is None:
+            return None
+        out = {}
+        for part, sub in c.items():
+            if part == "cross" or sub is None:
+                out[part] = sub
+                continue
+            o = {}
+            for k, v in sub.items():
+                if k in _SEQ_CACHE_KEYS:
+                    axis = 2 if stacked else 1
+                    pad = [(0, 0)] * v.ndim
+                    pad[axis] = (0, capacity - v.shape[axis])
+                    o[k] = jnp.pad(v, pad)
+                else:
+                    o[k] = v
+            out[part] = o
+        return out
+
+    out = {}
+    if "prefix" in caches:
+        out["prefix"] = [pad_layer(c, stacked=False) for c in caches["prefix"]]
+    if "stack" in caches:
+        out["stack"] = [pad_layer(c, stacked=True) for c in caches["stack"]]
+    return out
+
+
+def cache_specs(cfg: ModelConfig, batch: int, seq: int, enc_seq: int = 4096):
+    """ShapeDtypeStruct pytree for a decode cache of capacity `seq`.
+
+    enc_seq sizes the (static) cross-attention cache for enc-dec archs."""
+    dtype = _dtype_of(cfg)
+    cross = cfg.encoder_layers > 0
+
+    def spec_for(layer_spec):
+        s = _layer_cache_spec(cfg, layer_spec, batch, seq, dtype, cross=False)
+        if cross:
+            kvh, hd = cfg.num_kv_heads, cfg.head_dim
+            sd = jax.ShapeDtypeStruct((batch, enc_seq, kvh, hd), dtype)
+            s["cross"] = {"k": sd, "v": sd}
+        return s
+
+    out: Dict[str, Any] = {}
+    if cfg.prefix:
+        out["prefix"] = [spec_for(spec) for spec in cfg.prefix]
+    if cfg.num_periods > 0:
+        per = [spec_for(spec) for spec in cfg.period]
+        out["stack"] = jax.tree.map(
+            lambda s: jax.ShapeDtypeStruct((cfg.num_periods,) + s.shape, s.dtype), per
+        )
+    return out

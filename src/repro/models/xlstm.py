@@ -1,0 +1,325 @@
+"""xLSTM blocks: mLSTM (matrix memory, attention-like parallel train form,
+O(1) recurrent decode) and sLSTM (scalar memory with recurrent gating,
+sequential scan) — following arXiv:2405.04517's stabilized exponential
+gating.
+
+Both blocks carry their own projections (the xLSTM "block" includes the
+up/down projection sandwich), so the transformer assembly uses mlp="none".
+
+DESIGN.md §Arch-applicability: these recurrences are explicit state-stepping
+— the same execution pattern as the paper's reservoir: the decode path is a
+compiled scan over an explicitly-stepped state, which is why xlstm-125m is
+the closest relative of the STO engine among the assigned archs.
+"""
+
+from __future__ import annotations
+
+import functools
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import layers
+from repro.models.layers import dense, make_dense
+
+NEG_INF = -1e30
+
+
+def _heads(cfg):
+    h = cfg.num_heads
+    return h, cfg.d_model // h  # mLSTM head dim over d_inner handled below
+
+
+# ---------------------------------------------------------------------------
+# mLSTM
+# ---------------------------------------------------------------------------
+
+
+def make_mlstm(key, cfg: ModelConfig, dtype):
+    xc = cfg.xlstm
+    d = cfg.d_model
+    di = int(xc.mlstm_proj_factor * d)
+    h = cfg.num_heads
+    ks = jax.random.split(key, 8)
+    return {
+        "norm": layers.make_norm(cfg.norm_type, d, dtype),
+        "up_proj": make_dense(ks[0], d, 2 * di, dtype),
+        "conv_w": (0.1 * jax.random.normal(ks[1], (xc.conv_kernel, di))).astype(dtype),
+        "conv_b": jnp.zeros((di,), dtype),
+        "wq": make_dense(ks[2], di, di, dtype),
+        "wk": make_dense(ks[3], di, di, dtype),
+        "wv": make_dense(ks[4], di, di, dtype),
+        "w_if": make_dense(ks[5], di, 2 * h, dtype),  # input & forget gates/head
+        "hnorm": layers.make_norm("rmsnorm", di, dtype),
+        "down_proj": make_dense(
+            ks[6], di, d, dtype, scale=di**-0.5 / (2.0 * cfg.num_layers) ** 0.5
+        ),
+    }
+
+
+def _mlstm_qkvgates(p, cfg, x_in, conv_tail=None):
+    from repro.models.mamba import _conv_causal
+
+    xc = cfg.xlstm
+    di = p["wq"]["kernel"].shape[0]
+    h = cfg.num_heads
+    dh = di // h
+    up = dense(p["up_proj"], x_in)
+    xm, z = up[..., :di], up[..., di:]
+    xcv, tail = _conv_causal(p["conv_w"], p["conv_b"], xm, conv_tail)
+    xcv = jax.nn.silu(xcv)
+    b, s, _ = xm.shape
+    q = dense(p["wq"], xcv).reshape(b, s, h, dh)
+    k = dense(p["wk"], xcv).reshape(b, s, h, dh) * dh**-0.5
+    v = dense(p["wv"], xm).reshape(b, s, h, dh)
+    gates = dense(p["w_if"], xm).astype(jnp.float32)  # (B,S,2H)
+    i_pre, f_pre = gates[..., :h], gates[..., h:]
+    return q, k, v, i_pre, f_pre, z, tail, (h, dh)
+
+
+import os as _os
+
+_MLSTM_CHUNK_THRESHOLD = int(
+    _os.environ.get("REPRO_MLSTM_CHUNK_THRESHOLD", 8192)
+)
+_MLSTM_CHUNK = int(_os.environ.get("REPRO_MLSTM_CHUNK", 1024))
+
+
+def mlstm_forward(p, cfg: ModelConfig, x, *, return_cache=False):
+    """Parallel (quadratic) stabilized form for train/prefill; the (T, S')
+    gate/score tensors are q-chunked above _MLSTM_CHUNK_THRESHOLD so long
+    prefills never materialize (S x S)."""
+    xn = layers.apply_norm(p["norm"], x)
+    q, k, v, i_pre, f_pre, z, tail, (h, dh) = _mlstm_qkvgates(p, cfg, xn)
+    b, s = q.shape[:2]
+
+    logf = jax.nn.log_sigmoid(f_pre)  # (B,S,H)
+    cumf = jnp.cumsum(logf, axis=1)
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+
+    def hid_chunk(q_c, cumf_c, t0, ct):
+        """Stabilized mLSTM rows for global q positions [t0, t0+ct)."""
+        ld = (
+            cumf_c[:, :, None, :] - cumf[:, None, :, :] + i_pre[:, None, :, :]
+        )  # (B, ct, S', H)
+        tpos = t0 + jnp.arange(ct)
+        spos = jnp.arange(s)
+        ld = jnp.where(
+            (tpos[None, :, None, None] >= spos[None, None, :, None]), ld, NEG_INF
+        )
+        m = jnp.max(ld, axis=2, keepdims=True)  # (B,ct,1,H)
+        dmat = jnp.exp(ld - m)
+        scores = jnp.einsum("bthd,bshd->btsh", q_c.astype(jnp.float32), kf)
+        w = scores * dmat
+        norm = jnp.maximum(jnp.abs(jnp.sum(w, axis=2)), jnp.exp(-m[:, :, 0]))
+        return jnp.einsum("btsh,bshd->bthd", w, vf) / norm[..., None]
+
+    if s >= _MLSTM_CHUNK_THRESHOLD and s % _MLSTM_CHUNK == 0:
+        n = s // _MLSTM_CHUNK
+
+        def body(_, xs):
+            q_c, cumf_c, idx = xs
+            return None, hid_chunk(q_c, cumf_c, idx * _MLSTM_CHUNK, _MLSTM_CHUNK)
+
+        qs = q.reshape(b, n, _MLSTM_CHUNK, h, dh).swapaxes(0, 1)
+        cs = cumf.reshape(b, n, _MLSTM_CHUNK, h).swapaxes(0, 1)
+        _, hids = jax.lax.scan(body, None, (qs, cs, jnp.arange(n)))
+        hid = hids.swapaxes(0, 1).reshape(b, s, h, dh)
+    else:
+        hid = hid_chunk(q, cumf, 0, s)
+
+    hid = hid.reshape(b, s, h * dh).astype(x.dtype)
+    hid = layers.apply_norm(p["hnorm"], hid) * jax.nn.silu(z)
+    out = x + dense(p["down_proj"], hid)
+    if not return_cache:
+        return out
+    # build the recurrent state equivalent to having consumed the sequence
+    cache = _mlstm_state_from_seq(q, k, v, i_pre, f_pre, tail)
+    return out, cache
+
+
+def _mlstm_state_from_seq(q, k, v, i_pre, f_pre, tail):
+    """Fold a full sequence into the recurrent (C, n, m) state (prefill)."""
+    b, s, h, dh = q.shape
+    logf = jax.nn.log_sigmoid(f_pre)
+    cumf = jnp.cumsum(logf, axis=1)
+    total = cumf[:, -1]  # (B,H)
+    # weight of step t in the final state: exp(totalF - cumF_t + i_t - mT)
+    lw = total[:, None] - cumf + i_pre  # (B,S,H)
+    mT = jnp.max(lw, axis=1)  # (B,H)
+    wgt = jnp.exp(lw - mT[:, None])
+    c = jnp.einsum("bsh,bshd,bshe->bhde", wgt, k.astype(jnp.float32), v.astype(jnp.float32))
+    n = jnp.einsum("bsh,bshd->bhd", wgt, k.astype(jnp.float32))
+    return {"c": c, "n": n, "m": mT, "conv_tail": tail}
+
+
+def mlstm_decode(p, cfg: ModelConfig, x, cache) -> Tuple[jnp.ndarray, dict]:
+    xn = layers.apply_norm(p["norm"], x)
+    q, k, v, i_pre, f_pre, z, tail, (h, dh) = _mlstm_qkvgates(
+        p, cfg, xn, cache["conv_tail"]
+    )
+    b = x.shape[0]
+    q, k, v = q[:, 0], k[:, 0], v[:, 0]  # (B,H,dh)
+    i_pre, f_pre = i_pre[:, 0], f_pre[:, 0]  # (B,H)
+    logf = jax.nn.log_sigmoid(f_pre)
+    m_new = jnp.maximum(logf + cache["m"], i_pre)
+    fw = jnp.exp(logf + cache["m"] - m_new)[..., None]
+    iw = jnp.exp(i_pre - m_new)[..., None]
+    c = fw[..., None] * cache["c"] + iw[..., None] * jnp.einsum(
+        "bhd,bhe->bhde", k.astype(jnp.float32), v.astype(jnp.float32)
+    )
+    n = fw * cache["n"] + iw * k.astype(jnp.float32)
+    num = jnp.einsum("bhde,bhd->bhe", c, q.astype(jnp.float32))
+    den = jnp.maximum(
+        jnp.abs(jnp.einsum("bhd,bhd->bh", n, q.astype(jnp.float32))), jnp.exp(-m_new)
+    )
+    hid = (num / den[..., None]).reshape(b, 1, h * dh).astype(x.dtype)
+    hid = layers.apply_norm(p["hnorm"], hid) * jax.nn.silu(z)
+    out = x + dense(p["down_proj"], hid)
+    return out, {"c": c, "n": n, "m": m_new, "conv_tail": tail}
+
+
+def mlstm_cache_spec(cfg: ModelConfig, batch: int, dtype):
+    xc = cfg.xlstm
+    di = int(xc.mlstm_proj_factor * cfg.d_model)
+    h = cfg.num_heads
+    dh = di // h
+    return {
+        "c": jax.ShapeDtypeStruct((batch, h, dh, dh), jnp.float32),
+        "n": jax.ShapeDtypeStruct((batch, h, dh), jnp.float32),
+        "m": jax.ShapeDtypeStruct((batch, h), jnp.float32),
+        "conv_tail": jax.ShapeDtypeStruct((batch, xc.conv_kernel - 1, di), dtype),
+    }
+
+
+# ---------------------------------------------------------------------------
+# sLSTM
+# ---------------------------------------------------------------------------
+
+
+def make_slstm(key, cfg: ModelConfig, dtype):
+    xc = cfg.xlstm
+    d = cfg.d_model
+    h, dh = cfg.num_heads, d // cfg.num_heads
+    df = int(xc.slstm_proj_factor * d)
+    ks = jax.random.split(key, 5)
+    return {
+        "norm": layers.make_norm(cfg.norm_type, d, dtype),
+        "w_gates": make_dense(ks[0], d, 4 * d, dtype),  # i,f,z,o pre-acts
+        # per-head recurrent matrices (block-diagonal R)
+        "r_gates": (dh**-0.5 * jax.random.normal(ks[1], (4, h, dh, dh))).astype(dtype),
+        "b_gates": jnp.zeros((4, d), dtype),
+        "hnorm": layers.make_norm("rmsnorm", d, dtype),
+        "ffn_norm": layers.make_norm(cfg.norm_type, d, dtype),
+        "ffn": layers.make_mlp(
+            ks[2], d, df, "gelu", dtype,
+            out_scale=df**-0.5 / (2.0 * cfg.num_layers) ** 0.5,
+        ),
+    }
+
+
+def _slstm_step(p, cfg, wx_t, state):
+    """wx_t: (B, 4, H, dh) input pre-activations; state: (c,n,m,h_prev)."""
+    c, n, m, h_prev = state
+    rh = jnp.einsum("ghde,bhe->bghd", p["r_gates"].astype(jnp.float32), h_prev)
+    pre = wx_t + rh + p["b_gates"].astype(jnp.float32).reshape(
+        1, 4, cfg.num_heads, -1
+    )
+    i_p, f_p, z_p, o_p = pre[:, 0], pre[:, 1], pre[:, 2], pre[:, 3]
+    logf = jax.nn.log_sigmoid(f_p)
+    m_new = jnp.maximum(logf + m, i_p)
+    i_w = jnp.exp(i_p - m_new)
+    f_w = jnp.exp(logf + m - m_new)
+    z = jnp.tanh(z_p)
+    o = jax.nn.sigmoid(o_p)
+    c_new = f_w * c + i_w * z
+    n_new = f_w * n + i_w
+    h_new = o * c_new / jnp.maximum(n_new, 1.0)
+    return (c_new, n_new, m_new, h_new)
+
+
+def _slstm_init_state(b, h, dh):
+    z = jnp.zeros((b, h, dh), jnp.float32)
+    return (z, z, jnp.full((b, h, dh), 0.0, jnp.float32), z)
+
+
+# sLSTM backward-pass memory knob: the sequential scan over S saves its
+# carry per step for the backward pass (O(S) states). Chunking the scan and
+# rematerializing within chunks stores only chunk-boundary states
+# (O(S/chunk) saved + O(chunk) recompute) — §Perf D measures the effect on
+# the xlstm train_4k dry-run.
+import os as _os
+
+SLSTM_CHUNK = int(_os.environ.get("REPRO_SLSTM_CHUNK", 0))  # 0 = unchunked
+
+
+def slstm_forward(p, cfg: ModelConfig, x, *, return_cache=False):
+    b, s, d = x.shape
+    h, dh = cfg.num_heads, d // cfg.num_heads
+    xn = layers.apply_norm(p["norm"], x)
+    wx = dense(p["w_gates"], xn).astype(jnp.float32).reshape(b, s, 4, h, dh)
+
+    def step(state, wx_t):
+        new = _slstm_step(p, cfg, wx_t, state)
+        return new, new[3]
+
+    state0 = _slstm_init_state(b, h, dh)
+    if SLSTM_CHUNK and s > SLSTM_CHUNK:
+        chunk = SLSTM_CHUNK
+        s_pad = -(-s // chunk) * chunk
+        wx_p = jnp.pad(wx, ((0, 0), (0, s_pad - s), (0, 0), (0, 0), (0, 0)))
+        valid = jnp.arange(s_pad) < s
+
+        def masked_step(state, xs):
+            wx_t, ok = xs
+            new = _slstm_step(p, cfg, wx_t, state)
+            # padded steps are identity on the state
+            new = jax.tree.map(
+                lambda a, b_: jnp.where(ok, a, b_), new, state
+            )
+            return new, new[3]
+
+        @functools.partial(jax.checkpoint, prevent_cse=False)
+        def chunk_body(state, xs):
+            wx_c, ok_c = xs  # (chunk, B, 4, H, dh), (chunk,)
+            return jax.lax.scan(masked_step, state, (wx_c, ok_c))
+
+        nch = s_pad // chunk
+        wx_r = wx_p.swapaxes(0, 1).reshape(nch, chunk, b, 4, h, dh)
+        ok_r = valid.reshape(nch, chunk)
+        stateT, hs = jax.lax.scan(chunk_body, state0, (wx_r, ok_r))
+        hs = hs.reshape(s_pad, b, h, dh)[:s]
+    else:
+        stateT, hs = jax.lax.scan(step, state0, wx.swapaxes(0, 1))
+    hid = hs.swapaxes(0, 1).reshape(b, s, d).astype(x.dtype)
+    hid = layers.apply_norm(p["hnorm"], hid)
+    y = x + hid
+    y = y + layers.apply_mlp(p["ffn"], layers.apply_norm(p["ffn_norm"], y), "gelu")
+    if not return_cache:
+        return y
+    c, n, m, hp = stateT
+    return y, {"c": c, "n": n, "m": m, "h": hp}
+
+
+def slstm_decode(p, cfg: ModelConfig, x, cache) -> Tuple[jnp.ndarray, dict]:
+    b, _, d = x.shape
+    h, dh = cfg.num_heads, d // cfg.num_heads
+    xn = layers.apply_norm(p["norm"], x)
+    wx = dense(p["w_gates"], xn).astype(jnp.float32).reshape(b, 4, h, dh)
+    state = (cache["c"], cache["n"], cache["m"], cache["h"])
+    c, n, m, hp = _slstm_step(p, cfg, wx, state)
+    hid = hp.reshape(b, 1, d).astype(x.dtype)
+    hid = layers.apply_norm(p["hnorm"], hid)
+    y = x + hid
+    y = y + layers.apply_mlp(p["ffn"], layers.apply_norm(p["ffn_norm"], y), "gelu")
+    return y, {"c": c, "n": n, "m": m, "h": hp}
+
+
+def slstm_cache_spec(cfg: ModelConfig, batch: int, dtype):
+    h, dh = cfg.num_heads, cfg.d_model // cfg.num_heads
+    sd = jax.ShapeDtypeStruct((batch, h, dh), jnp.float32)
+    return {"c": sd, "n": sd, "m": sd, "h": sd}

@@ -1,0 +1,12 @@
+from repro.optim import optimizer
+from repro.optim.optimizer import (
+    Optimizer,
+    clip_by_global_norm,
+    cosine_schedule,
+    global_norm,
+    make_adafactor,
+    make_adamw,
+    make_compressor,
+    make_optimizer,
+    make_sgd,
+)

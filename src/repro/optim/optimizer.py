@@ -1,0 +1,228 @@
+"""Optimizers (AdamW, Adafactor), LR schedules, clipping, and gradient
+compression. No external deps — states are plain pytrees so the checkpoint
+and sharding layers treat them like params.
+
+Adafactor (factored second moments) is the default for >=90B-param archs:
+Adam states for jamba-398B would need ~4.8 TB (f32 m+v+master) — over a
+single v5e-256 pod's 4 TB HBM before activations; factored states cut that
+to ~1.6 TB (DESIGN.md §4).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+
+class Optimizer(NamedTuple):
+    name: str
+    init: Callable  # params -> state
+    update: Callable  # (params, grads, state, step) -> (params, state)
+    state_shardings: Callable  # (mesh, param_shardings, params) -> shardings
+
+
+def cosine_schedule(step, base_lr=3e-4, warmup=200, total=10_000, min_frac=0.1):
+    step = jnp.asarray(step, jnp.float32)
+    warm = step / jnp.maximum(warmup, 1)
+    prog = jnp.clip((step - warmup) / jnp.maximum(total - warmup, 1), 0.0, 1.0)
+    cos = min_frac + (1 - min_frac) * 0.5 * (1 + jnp.cos(jnp.pi * prog))
+    return base_lr * jnp.where(step < warmup, warm, cos)
+
+
+def global_norm(tree):
+    return jnp.sqrt(
+        sum(jnp.sum(jnp.square(x.astype(jnp.float32))) for x in jax.tree.leaves(tree))
+    )
+
+
+def clip_by_global_norm(tree, max_norm, gnorm=None):
+    if gnorm is None:
+        gnorm = global_norm(tree)
+    scale = jnp.minimum(1.0, max_norm / (gnorm + 1e-9))
+    return jax.tree.map(lambda x: x * scale.astype(x.dtype), tree)
+
+
+# ---------------------------------------------------------------------------
+# AdamW
+# ---------------------------------------------------------------------------
+
+
+def make_adamw(lr_fn=cosine_schedule, b1=0.9, b2=0.95, eps=1e-8, wd=0.1):
+    def init(params):
+        zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+        return {
+            "mu": jax.tree.map(zeros, params),
+            "nu": jax.tree.map(zeros, params),
+        }
+
+    def update(params, grads, state, step):
+        step_f = jnp.asarray(step, jnp.float32) + 1.0
+        lr = lr_fn(step)
+        bc1 = 1.0 - b1**step_f
+        bc2 = 1.0 - b2**step_f
+
+        def upd(p, g, mu, nu):
+            g = g.astype(jnp.float32)
+            mu = b1 * mu + (1 - b1) * g
+            nu = b2 * nu + (1 - b2) * g * g
+            mhat = mu / bc1
+            nhat = nu / bc2
+            delta = mhat / (jnp.sqrt(nhat) + eps) + wd * p.astype(jnp.float32)
+            return (p.astype(jnp.float32) - lr * delta).astype(p.dtype), mu, nu
+
+        flat_p, tdef = jax.tree.flatten(params)
+        flat_g = tdef.flatten_up_to(grads)
+        flat_mu = tdef.flatten_up_to(state["mu"])
+        flat_nu = tdef.flatten_up_to(state["nu"])
+        out = [upd(p, g, m, n) for p, g, m, n in zip(flat_p, flat_g, flat_mu, flat_nu)]
+        new_p = tdef.unflatten([o[0] for o in out])
+        new_mu = tdef.unflatten([o[1] for o in out])
+        new_nu = tdef.unflatten([o[2] for o in out])
+        return new_p, {"mu": new_mu, "nu": new_nu}
+
+    def state_shardings(mesh, param_shardings, params):
+        return {"mu": param_shardings, "nu": param_shardings}
+
+    return Optimizer("adamw", init, update, state_shardings)
+
+
+# ---------------------------------------------------------------------------
+# Adafactor (factored second moments, no first moment)
+# ---------------------------------------------------------------------------
+
+
+def make_adafactor(lr_fn=cosine_schedule, eps=1e-30, clip_thresh=1.0, wd=0.0):
+    def _factored(p):
+        return p.ndim >= 2 and p.shape[-1] > 1 and p.shape[-2] > 1
+
+    def init(params):
+        def st(p):
+            if _factored(p):
+                return {
+                    "vr": jnp.zeros(p.shape[:-1], jnp.float32),  # reduce last
+                    "vc": jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32),
+                }
+            return {"v": jnp.zeros(p.shape, jnp.float32)}
+
+        return jax.tree.map(st, params, is_leaf=lambda x: hasattr(x, "shape"))
+
+    def update(params, grads, state, step):
+        step_f = jnp.asarray(step, jnp.float32) + 1.0
+        lr = lr_fn(step)
+        beta2 = 1.0 - step_f**-0.8
+
+        def upd(p, g, s):
+            g = g.astype(jnp.float32)
+            g2 = g * g + eps
+            if _factored(p):
+                vr = beta2 * s["vr"] + (1 - beta2) * jnp.mean(g2, axis=-1)
+                vc = beta2 * s["vc"] + (1 - beta2) * jnp.mean(g2, axis=-2)
+                denom = jnp.mean(vr, axis=-1, keepdims=True)
+                pre = (vr / jnp.maximum(denom, eps))[..., None] * vc[..., None, :]
+                u = g * jax.lax.rsqrt(jnp.maximum(pre, eps))
+                new_s = {"vr": vr, "vc": vc}
+            else:
+                v = beta2 * s["v"] + (1 - beta2) * g2
+                u = g * jax.lax.rsqrt(jnp.maximum(v, eps))
+                new_s = {"v": v}
+            # update clipping (Adafactor's RMS rule)
+            rms = jnp.sqrt(jnp.mean(u * u) + 1e-30)
+            u = u / jnp.maximum(1.0, rms / clip_thresh)
+            delta = u + wd * p.astype(jnp.float32)
+            return (p.astype(jnp.float32) - lr * delta).astype(p.dtype), new_s
+
+        flat_p, tdef = jax.tree.flatten(params)
+        flat_g = tdef.flatten_up_to(grads)
+        flat_s = tdef.flatten_up_to(state)
+        out = [upd(p, g, s) for p, g, s in zip(flat_p, flat_g, flat_s)]
+        return tdef.unflatten([o[0] for o in out]), tdef.unflatten(
+            [o[1] for o in out]
+        )
+
+    def state_shardings(mesh, param_shardings, params):
+        def st(sh, p):
+            spec = sh.spec
+            if _factored(p):
+                # vr drops the last dim's axis, vc the second-to-last's
+                full = tuple(spec) + (None,) * (p.ndim - len(spec))
+                return {
+                    "vr": NamedSharding(mesh, P(*full[:-1])),
+                    "vc": NamedSharding(mesh, P(*(full[:-2] + full[-1:]))),
+                }
+            return {"v": sh}
+
+        return jax.tree.map(
+            st, param_shardings, params, is_leaf=lambda x: isinstance(x, NamedSharding)
+        )
+
+    return Optimizer("adafactor", init, update, state_shardings)
+
+
+def make_optimizer(name: str, cfg=None, lr_fn=cosine_schedule) -> Optimizer:
+    if name == "adamw":
+        return make_adamw(lr_fn=lr_fn)
+    if name == "adafactor":
+        return make_adafactor(lr_fn=lr_fn)
+    if name == "sgd":
+        return make_sgd(lr_fn=lr_fn)
+    raise ValueError(name)
+
+
+def make_sgd(lr_fn=cosine_schedule, momentum=0.9):
+    def init(params):
+        return {"mom": jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)}
+
+    def update(params, grads, state, step):
+        lr = lr_fn(step)
+
+        def upd(p, g, m):
+            m = momentum * m + g.astype(jnp.float32)
+            return (p.astype(jnp.float32) - lr * m).astype(p.dtype), m
+
+        flat_p, tdef = jax.tree.flatten(params)
+        flat_g = tdef.flatten_up_to(grads)
+        flat_m = tdef.flatten_up_to(state["mom"])
+        out = [upd(p, g, m) for p, g, m in zip(flat_p, flat_g, flat_m)]
+        return tdef.unflatten([o[0] for o in out]), {
+            "mom": tdef.unflatten([o[1] for o in out])
+        }
+
+    def state_shardings(mesh, param_shardings, params):
+        return {"mom": param_shardings}
+
+    return Optimizer("sgd", init, update, state_shardings)
+
+
+# ---------------------------------------------------------------------------
+# Gradient compression (distributed-optimization trick)
+# ---------------------------------------------------------------------------
+
+
+def make_compressor(kind: str):
+    """Per-tensor int8 quantize->dequantize on gradients.
+
+    Numerics-faithful stand-in for compressed DP all-reduce: the *value*
+    effect of int8 gradient exchange is applied here; the *byte* effect on
+    the wire requires the shard_map reducer in distributed/collectives.py
+    (XLA fuses a plain quant-dequant away, it cannot compress the implicit
+    pjit all-reduce).
+    """
+    if kind == "none":
+        return lambda g: g
+    if kind == "int8":
+
+        def comp(grads):
+            def q(g):
+                gf = g.astype(jnp.float32)
+                scale = jnp.maximum(jnp.max(jnp.abs(gf)), 1e-12) / 127.0
+                qi = jnp.clip(jnp.round(gf / scale), -127, 127).astype(jnp.int8)
+                return (qi.astype(jnp.float32) * scale).astype(g.dtype)
+
+            return jax.tree.map(q, grads)
+
+        return comp
+    raise ValueError(kind)

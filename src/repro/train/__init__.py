@@ -1,0 +1,2 @@
+from repro.train.checkpoint import save_checkpoint, restore_checkpoint, latest_step
+from repro.train.train_loop import LoopConfig, train

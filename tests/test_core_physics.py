@@ -1,0 +1,244 @@
+"""Core physics tests: LLG field, conservation law, integrator orders,
+coupling construction. Mirrors the paper's own correctness criteria (§3.2):
+identical solutions across implementations + |m_k| = 1 conservation."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+jax.config.update("jax_enable_x64", True)
+
+from repro.core import (
+    DT,
+    EULER,
+    HEUN,
+    RK4,
+    broadcast_params,
+    convergence_order,
+    coupling_field_x,
+    default_params,
+    initial_magnetization,
+    integrate_ensemble,
+    integrate_python_loop,
+    integrate_scan,
+    llg_field,
+    make_coupling_matrix,
+    make_input_matrix,
+    norm_error,
+    spectral_radius,
+)
+
+
+def _field(params, w):
+    return lambda m, _: llg_field(m, params, w)
+
+
+class TestParameters:
+    def test_derived_constants_match_paper_scales(self):
+        p = default_params(jnp.float64)
+        # H_s ~ 135 Oe with Table-1 values (comparable to H_appl = 200 Oe).
+        assert 120.0 < float(p.hs_coef) < 150.0
+        # Hk - 4 pi Ms ~ 416 Oe.
+        assert 400.0 < float(p.demag_field) < 430.0
+        assert np.isclose(float(p.llg_prefactor), 1.764e7 / (1 + 0.005**2))
+
+    def test_initial_state_unit_norm(self):
+        m0 = initial_magnetization(17, jnp.float64)
+        assert m0.shape == (17, 3)
+        np.testing.assert_allclose(np.linalg.norm(m0, axis=-1), 1.0, rtol=1e-12)
+        # m(0) ~ (0, 0, 1) per the paper.
+        assert float(m0[0, 2]) > 0.99
+
+
+class TestCoupling:
+    @pytest.mark.parametrize("n", [2, 8, 64, 300])
+    def test_spectral_radius_one(self, n):
+        w = make_coupling_matrix(n, seed=3)
+        rho = np.max(np.abs(np.linalg.eigvals(w.astype(np.float64))))
+        np.testing.assert_allclose(rho, 1.0, rtol=1e-4)
+
+    @pytest.mark.parametrize("n", [2, 33])
+    def test_no_self_coupling(self, n):
+        w = make_coupling_matrix(n, seed=0)
+        np.testing.assert_array_equal(np.diag(w), 0.0)
+
+    def test_large_n_circular_law_estimate(self):
+        # Beyond the exact-eig cutoff the estimate should still land near 1.
+        w = make_coupling_matrix(3000, seed=0)
+        # exact check on the generated matrix (slow but feasible once)
+        rho = np.max(np.abs(np.linalg.eigvals(w.astype(np.float64))))
+        assert 0.8 < rho < 1.25
+
+    def test_coupling_field_is_matmul(self):
+        n, e = 16, 5
+        w = jnp.asarray(make_coupling_matrix(n, seed=1), jnp.float64)
+        mx = jnp.asarray(np.random.default_rng(0).standard_normal((e, n)))
+        out = coupling_field_x(w, mx, 2.5)
+        np.testing.assert_allclose(
+            np.asarray(out), 2.5 * np.asarray(mx) @ np.asarray(w).T, rtol=1e-12
+        )
+
+    def test_input_matrix_range(self):
+        w = make_input_matrix(100, 3, seed=2)
+        assert w.shape == (100, 3)
+        assert np.all(np.abs(w) <= 1.0)
+
+
+class TestConservation:
+    @pytest.mark.parametrize("n", [1, 4, 32])
+    def test_norm_conserved_rk4(self, n):
+        p = default_params(jnp.float64)
+        w = jnp.asarray(make_coupling_matrix(n, seed=0), jnp.float64)
+        m0 = initial_magnetization(n, jnp.float64)
+        mT, _ = integrate_scan(_field(p, w), m0, DT, 2000)
+        assert float(norm_error(mT)) < 5e-6
+
+    def test_norm_conserved_f32(self):
+        # The TPU default dtype: drift stays well below node-signal scale.
+        p = default_params(jnp.float32)
+        w = jnp.asarray(make_coupling_matrix(8, seed=0), jnp.float32)
+        m0 = initial_magnetization(8, jnp.float32)
+        mT, _ = integrate_scan(_field(p, w), m0, DT, 2000)
+        assert float(norm_error(mT)) < 5e-4
+
+    @settings(max_examples=10, deadline=None)
+    @given(
+        seed=st.integers(0, 2**31 - 1),
+        n=st.integers(1, 12),
+        steps=st.integers(10, 300),
+    )
+    def test_norm_conserved_property(self, seed, n, steps):
+        """Conservation holds from ANY unit-norm initial state (|m|=1 is an
+        invariant manifold of Eq. 1, [BMS09])."""
+        p = default_params(jnp.float64)
+        w = jnp.asarray(make_coupling_matrix(n, seed=seed % 1000), jnp.float64)
+        rng = np.random.default_rng(seed)
+        m0 = rng.standard_normal((n, 3))
+        m0 /= np.linalg.norm(m0, axis=-1, keepdims=True)
+        mT, _ = integrate_scan(_field(p, w), jnp.asarray(m0), DT, steps)
+        # RK4 truncation drift ~3.5e-10/step; 300 steps => ~1e-7 headroom 10x
+        assert float(norm_error(mT)) < 1e-6
+        assert not bool(jnp.any(jnp.isnan(mT)))
+
+
+class TestIntegrators:
+    def test_rk4_order(self):
+        p = default_params(jnp.float64)
+        w = jnp.asarray(make_coupling_matrix(6, seed=0), jnp.float64)
+        m0 = initial_magnetization(6, jnp.float64)
+        order = convergence_order(
+            _field(p, w), m0, 400 * float(DT), tableau=RK4, base_steps=64
+        )
+        assert order > 3.5
+
+    def test_heun_order(self):
+        p = default_params(jnp.float64)
+        w = jnp.asarray(make_coupling_matrix(6, seed=0), jnp.float64)
+        m0 = initial_magnetization(6, jnp.float64)
+        order = convergence_order(
+            _field(p, w), m0, 400 * float(DT), tableau=HEUN, base_steps=64
+        )
+        assert 1.5 < order < 3.0
+
+    def test_python_loop_matches_scan(self):
+        """Paper §3.2: implementations must agree on the solution."""
+        p = default_params(jnp.float64)
+        w = jnp.asarray(make_coupling_matrix(5, seed=0), jnp.float64)
+        m0 = initial_magnetization(5, jnp.float64)
+        a, _ = integrate_scan(_field(p, w), m0, DT, 50)
+        b = integrate_python_loop(_field(p, w), m0, DT, 50)
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-12, atol=1e-14)
+
+    def test_save_every_trajectory(self):
+        p = default_params(jnp.float64)
+        w = jnp.asarray(make_coupling_matrix(3, seed=0), jnp.float64)
+        m0 = initial_magnetization(3, jnp.float64)
+        mT, ys = integrate_scan(_field(p, w), m0, DT, 100, save_every=25)
+        assert ys.shape == (4, 3, 3)
+        np.testing.assert_allclose(np.asarray(ys[-1]), np.asarray(mT))
+
+    def test_uncoupled_is_o_n(self):
+        """w_cp=None path (paper: coupling off -> O(N) field)."""
+        p = default_params(jnp.float64)
+        m0 = initial_magnetization(4, jnp.float64)
+        f = lambda m, _: llg_field(m, p, None)
+        mT, _ = integrate_scan(f, m0, DT, 100)
+        # all oscillators identical (same init, no coupling)
+        np.testing.assert_allclose(
+            np.asarray(mT),
+            np.broadcast_to(np.asarray(mT)[0:1], mT.shape),
+            rtol=1e-12,
+        )
+
+
+class TestAdaptive:
+    def _setup(self):
+        p = default_params(jnp.float64)
+        w = jnp.asarray(make_coupling_matrix(6, seed=0), jnp.float64)
+        m0 = initial_magnetization(6, jnp.float64)
+        return p, w, m0
+
+    def test_matches_fixed_rk4(self):
+        from repro.core import integrate_adaptive
+
+        p, w, m0 = self._setup()
+        t_end = 500 * float(DT)
+        ref, _ = integrate_scan(_field(p, w), m0, DT, 500)
+        y, stats = integrate_adaptive(_field(p, w), m0, t_end, rtol=1e-7, atol=1e-11)
+        assert float(jnp.max(jnp.abs(y - ref))) < 1e-3
+        assert float(norm_error(y)) < 1e-6
+        assert int(stats["rejected"]) < int(stats["steps"])
+
+    def test_tighter_tolerance_more_steps(self):
+        from repro.core import integrate_adaptive
+
+        p, w, m0 = self._setup()
+        t_end = 200 * float(DT)
+        _, loose = integrate_adaptive(_field(p, w), m0, t_end, rtol=1e-4, atol=1e-8)
+        _, tight = integrate_adaptive(_field(p, w), m0, t_end, rtol=1e-8, atol=1e-12)
+        assert int(tight["steps"]) > int(loose["steps"])
+
+    def test_reaches_t_end(self):
+        from repro.core import integrate_adaptive
+
+        p, w, m0 = self._setup()
+        t_end = 100 * float(DT)
+        _, stats = integrate_adaptive(_field(p, w), m0, t_end, rtol=1e-6)
+        np.testing.assert_allclose(float(stats["t"]), t_end, rtol=1e-9)
+
+
+class TestEnsemble:
+    def test_ensemble_matches_single(self):
+        """E identical parameter sets -> E identical trajectories, each equal
+        to the single-reservoir run (batching does not change the math)."""
+        p64 = default_params(jnp.float64)
+        n, e = 6, 3
+        w = jnp.asarray(make_coupling_matrix(n, seed=0), jnp.float64)
+        m0 = initial_magnetization(n, jnp.float64)
+        single, _ = integrate_scan(_field(p64, w), m0, DT, 64)
+
+        pe = broadcast_params(p64, e)
+        m0e = jnp.broadcast_to(m0, (e, n, 3))
+        batched, _ = integrate_ensemble(pe, w, m0e, DT, 64)
+        for i in range(e):
+            np.testing.assert_allclose(
+                np.asarray(batched[i]), np.asarray(single), rtol=1e-12
+            )
+
+    def test_ensemble_sweep_changes_dynamics(self):
+        p64 = default_params(jnp.float64)
+        n, e = 4, 3
+        w = jnp.asarray(make_coupling_matrix(n, seed=0), jnp.float64)
+        m0 = jnp.broadcast_to(initial_magnetization(n, jnp.float64), (e, n, 3))
+        pe = broadcast_params(p64, e, current=jnp.array([1e-3, 2.5e-3, 4e-3]))
+        out, _ = integrate_ensemble(pe, w, m0, DT, 200)
+        # different currents -> different trajectories
+        assert not np.allclose(np.asarray(out[0]), np.asarray(out[1]))
+        assert not np.allclose(np.asarray(out[1]), np.asarray(out[2]))
+        assert float(norm_error(out)) < 1e-6
+
+    def test_broadcast_params_rejects_unknown(self):
+        with pytest.raises(ValueError):
+            broadcast_params(default_params(), 2, bogus=jnp.zeros(2))

@@ -1,0 +1,56 @@
+"""Dry-run path coverage on a SMALL virtual mesh (subprocess, 8 devices):
+lower+compile a full-size train cell and a decode cell through the same
+lower_cell() the production sweep uses, asserting cost/memory/collective
+artifacts come back populated."""
+
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+_SCRIPT = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import json
+from repro.launch.dryrun import lower_cell
+
+recs = {}
+# full-size whisper-base (smallest arch) through the real train path
+recs["train"] = lower_cell(
+    "whisper-base", "train_4k", multi_pod=False,
+    mesh_override=((4, 2), ("data", "model")),
+)
+# full-size xlstm decode (recurrent-state serve path)
+recs["decode"] = lower_cell(
+    "xlstm-125m", "decode_32k", multi_pod=False,
+    mesh_override=((4, 2), ("data", "model")),
+)
+print("JSON:" + json.dumps(
+    {k: {kk: v.get(kk) for kk in
+         ("hlo_flops", "temp_size_in_bytes", "argument_size_in_bytes")}
+     | {"coll": sum(c["bytes"] for c in v["collectives"].values())}
+     for k, v in recs.items()}
+))
+"""
+
+
+@pytest.mark.slow
+def test_dryrun_small_mesh():
+    env = dict(os.environ)
+    env["PYTHONPATH"] = "src"
+    res = subprocess.run(
+        [sys.executable, "-c", _SCRIPT],
+        capture_output=True, text=True, env=env,
+        cwd=os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+        timeout=1800,
+    )
+    assert res.returncode == 0, res.stderr[-4000:]
+    line = [l for l in res.stdout.splitlines() if l.startswith("JSON:")][-1]
+    out = json.loads(line[5:])
+    for kind in ("train", "decode"):
+        assert out[kind]["hlo_flops"] and out[kind]["hlo_flops"] > 0
+        assert out[kind]["argument_size_in_bytes"] > 0
+    # whisper train on a (4,2) TP mesh must communicate
+    assert out["train"]["coll"] > 0

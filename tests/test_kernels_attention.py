@@ -1,0 +1,107 @@
+"""Flash-attention kernel vs plain-softmax oracle, swept over shapes, GQA
+group sizes, masks (causal / sliding-window / none) and dtypes."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels.flash_attention import flash_attention
+from repro.kernels.ref import mha_reference
+
+
+def _rand_qkv(key, b, h, kvh, sq, sk, d, dtype):
+    ks = jax.random.split(key, 3)
+    q = jax.random.normal(ks[0], (b, h, sq, d), dtype)
+    k = jax.random.normal(ks[1], (b, kvh, sk, d), dtype)
+    v = jax.random.normal(ks[2], (b, kvh, sk, d), dtype)
+    return q, k, v
+
+
+def _ref(q, k, v, causal, window):
+    g = q.shape[1] // k.shape[1]
+    kr = jnp.repeat(k, g, axis=1)
+    vr = jnp.repeat(v, g, axis=1)
+    return mha_reference(q, kr, vr, causal=causal, window=window)
+
+
+SHAPES = [
+    # b, h, kvh, sq, sk, d
+    (2, 4, 2, 256, 256, 64),
+    (1, 8, 8, 128, 128, 32),  # MHA
+    (1, 4, 1, 128, 128, 128),  # MQA
+    (2, 4, 4, 128, 384, 64),  # q shorter than k (chunked prefill)
+    (1, 16, 4, 256, 256, 80),  # non-pow2 head dim (h2o-danube style)
+]
+
+
+class TestFlashShapes:
+    @pytest.mark.parametrize("shape", SHAPES)
+    @pytest.mark.parametrize("causal", [True, False])
+    def test_against_oracle(self, shape, causal):
+        b, h, kvh, sq, sk, d = shape
+        if not causal and sq != sk:
+            pytest.skip("offset alignment only meaningful causally")
+        q, k, v = _rand_qkv(jax.random.PRNGKey(0), *shape, jnp.float32)
+        out = flash_attention(q, k, v, causal=causal, interpret=True)
+        ref = _ref(q, k, v, causal, 0)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=5e-6)
+
+    @pytest.mark.parametrize("window", [64, 128, 256])
+    def test_sliding_window(self, window):
+        q, k, v = _rand_qkv(jax.random.PRNGKey(1), 1, 4, 2, 256, 256, 64, jnp.float32)
+        out = flash_attention(q, k, v, causal=True, window=window, interpret=True)
+        ref = _ref(q, k, v, True, window)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=5e-6)
+
+    def test_bf16_inputs(self):
+        q, k, v = _rand_qkv(jax.random.PRNGKey(2), 1, 4, 2, 128, 128, 64, jnp.bfloat16)
+        out = flash_attention(q, k, v, causal=True, interpret=True)
+        ref = _ref(q.astype(jnp.float32), k.astype(jnp.float32), v.astype(jnp.float32), True, 0)
+        assert out.dtype == jnp.bfloat16
+        np.testing.assert_allclose(
+            np.asarray(out, np.float32), np.asarray(ref), atol=3e-2
+        )
+
+    @pytest.mark.parametrize("bq,bk", [(64, 64), (128, 64), (64, 128)])
+    def test_block_shape_invariance(self, bq, bk):
+        """Output must not depend on the tiling."""
+        q, k, v = _rand_qkv(jax.random.PRNGKey(3), 1, 2, 2, 256, 256, 64, jnp.float32)
+        a = flash_attention(q, k, v, causal=True, block_q=bq, block_k=bk, interpret=True)
+        b = flash_attention(q, k, v, causal=True, interpret=True)
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=5e-6)
+
+
+class TestFlashProperties:
+    @settings(max_examples=8, deadline=None)
+    @given(
+        seed=st.integers(0, 2**31 - 1),
+        g=st.sampled_from([1, 2, 4]),
+        d=st.sampled_from([32, 64]),
+    )
+    def test_rows_are_convex_combinations(self, seed, g, d):
+        """Each output row lies in the convex hull of V rows: max|out| <=
+        max|v| (softmax weights sum to 1)."""
+        key = jax.random.PRNGKey(seed)
+        q, k, v = _rand_qkv(key, 1, 2 * g, 2, 128, 128, d, jnp.float32)
+        out = flash_attention(q, k, v, causal=True, interpret=True)
+        assert float(jnp.max(jnp.abs(out))) <= float(jnp.max(jnp.abs(v))) + 1e-5
+
+    @settings(max_examples=6, deadline=None)
+    @given(seed=st.integers(0, 2**31 - 1))
+    def test_permutation_equivariance_over_batch(self, seed):
+        key = jax.random.PRNGKey(seed)
+        q, k, v = _rand_qkv(key, 3, 2, 2, 128, 128, 32, jnp.float32)
+        out = flash_attention(q, k, v, causal=True, interpret=True)
+        perm = jnp.array([2, 0, 1])
+        out_p = flash_attention(q[perm], k[perm], v[perm], causal=True, interpret=True)
+        np.testing.assert_allclose(np.asarray(out[perm]), np.asarray(out_p), atol=1e-6)
+
+    def test_decode_single_query(self):
+        """Sq=1 (decode step) against the oracle with a long cache. Uses
+        block_q=1 — the decode specialization."""
+        q, k, v = _rand_qkv(jax.random.PRNGKey(9), 2, 4, 2, 1, 512, 64, jnp.float32)
+        out = flash_attention(q, k, v, causal=True, block_q=1, interpret=True)
+        ref = _ref(q, k, v, True, 0)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=5e-6)

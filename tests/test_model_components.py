@@ -1,0 +1,146 @@
+"""Component-level property tests: RoPE, Mamba chunk invariance, MoE
+determinism, norms, chunked-CE equivalence, q-chunked attention parity."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.configs import get_config, reduce_config
+from repro.models import layers
+from repro.models.attention import grouped_attend, _grouped_attend_dense
+from repro.models import mamba as mamba_mod
+
+
+class TestRope:
+    @settings(max_examples=10, deadline=None)
+    @given(seed=st.integers(0, 2**31 - 1), d=st.sampled_from([16, 32, 64]))
+    def test_rope_preserves_norm(self, seed, d):
+        """Rotation: per-pair norms (hence vector norm) are invariant."""
+        key = jax.random.PRNGKey(seed)
+        x = jax.random.normal(key, (2, 8, 4, d))
+        pos = jnp.broadcast_to(jnp.arange(8), (2, 8))
+        ang = layers.rope_freqs(pos, d, 10_000.0)
+        y = layers.apply_rope(x, ang)
+        np.testing.assert_allclose(
+            np.linalg.norm(np.asarray(x), axis=-1),
+            np.linalg.norm(np.asarray(y), axis=-1),
+            rtol=1e-5,
+        )
+
+    def test_rope_relative_property(self):
+        """<rope(q,i), rope(k,j)> depends only on i-j (the RoPE identity)."""
+        d = 32
+        key = jax.random.PRNGKey(0)
+        q = jax.random.normal(key, (d,))
+        k = jax.random.normal(jax.random.PRNGKey(1), (d,))
+
+        def dot_at(i, j):
+            pos = jnp.array([[i, j]])
+            ang = layers.rope_freqs(pos, d, 10_000.0)
+            qk = jnp.stack([q, k])[None, :, None, :]  # (1,2,1,d)
+            r = layers.apply_rope(qk, ang)
+            return float(jnp.dot(r[0, 0, 0], r[0, 1, 0]))
+
+        a = dot_at(3, 7)
+        b = dot_at(10, 14)  # same offset 4
+        np.testing.assert_allclose(a, b, rtol=1e-4)
+
+    def test_position_zero_is_identity(self):
+        x = jax.random.normal(jax.random.PRNGKey(2), (1, 1, 2, 16))
+        ang = layers.rope_freqs(jnp.zeros((1, 1), jnp.int32), 16, 10_000.0)
+        np.testing.assert_allclose(
+            np.asarray(layers.apply_rope(x, ang)), np.asarray(x), atol=1e-7
+        )
+
+
+class TestMambaChunks:
+    @pytest.mark.parametrize("chunk", [4, 8, 16, 64])
+    def test_chunk_size_invariance(self, chunk):
+        """The chunked associative scan must be exactly independent of the
+        chunk size (including the non-divisible remainder path)."""
+        import dataclasses
+
+        cfg0 = reduce_config(get_config("jamba-1.5-large-398b"))
+        cfg = dataclasses.replace(
+            cfg0, mamba=dataclasses.replace(cfg0.mamba, chunk=chunk)
+        )
+        p = mamba_mod.make_mamba(jax.random.PRNGKey(0), cfg, jnp.float32)
+        x = 0.1 * jax.random.normal(jax.random.PRNGKey(1), (2, 22, cfg.d_model))
+        out = mamba_mod.mamba_forward(p, cfg, x)
+        cfg_ref = dataclasses.replace(
+            cfg0, mamba=dataclasses.replace(cfg0.mamba, chunk=22)
+        )
+        ref = mamba_mod.mamba_forward(p, cfg_ref, x)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=2e-5)
+
+
+class TestAttentionChunking:
+    def test_qchunk_equals_dense(self):
+        """The q-chunked scan path must equal the dense path exactly."""
+        import repro.models.attention as attn
+
+        key = jax.random.PRNGKey(0)
+        b, h, kvh, s, d = 1, 4, 2, 64, 16
+        q = jax.random.normal(key, (b, s, h, d))
+        k = jax.random.normal(jax.random.PRNGKey(1), (b, s, kvh, d))
+        v = jax.random.normal(jax.random.PRNGKey(2), (b, s, kvh, d))
+        dense = _grouped_attend_dense(q, k, v, causal=True, q_offset=0)
+        old_t, old_c = attn.Q_CHUNK_THRESHOLD, attn.Q_CHUNK
+        try:
+            attn.Q_CHUNK_THRESHOLD, attn.Q_CHUNK = 32, 16
+            chunked = grouped_attend(q, k, v, causal=True, q_offset=0)
+        finally:
+            attn.Q_CHUNK_THRESHOLD, attn.Q_CHUNK = old_t, old_c
+        np.testing.assert_allclose(
+            np.asarray(chunked), np.asarray(dense), atol=1e-5
+        )
+
+
+class TestLossAndNorms:
+    def test_chunked_ce_equals_dense(self):
+        v, d, b, s = 50, 16, 2, 23
+        key = jax.random.PRNGKey(0)
+        x = jax.random.normal(key, (b, s, d))
+        w = jax.random.normal(jax.random.PRNGKey(1), (d, 64))  # padded vocab
+        labels = jax.random.randint(jax.random.PRNGKey(2), (b, s), 0, v)
+        dense_logits = jnp.einsum("bsd,dv->bsv", x, w)
+        ref = layers.cross_entropy_loss(dense_logits, labels, v)
+        chunked = layers.cross_entropy_from_features(x, w, labels, v, chunk=7)
+        np.testing.assert_allclose(float(chunked), float(ref), rtol=1e-5)
+
+    @settings(max_examples=10, deadline=None)
+    @given(seed=st.integers(0, 2**31 - 1))
+    def test_rmsnorm_scale_invariance(self, seed):
+        """rmsnorm(a*x) == rmsnorm(x) for a > 0 (the defining property)."""
+        x = jax.random.normal(jax.random.PRNGKey(seed), (4, 32))
+        p = layers.make_norm("rmsnorm", 32, jnp.float32)
+        a = layers.apply_norm(p, x)
+        b = layers.apply_norm(p, 3.7 * x)
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-5)
+
+    def test_layernorm_moments(self):
+        x = jax.random.normal(jax.random.PRNGKey(0), (8, 64)) * 5 + 3
+        p = layers.make_norm("layernorm", 64, jnp.float32)
+        y = np.asarray(layers.apply_norm(p, x))
+        np.testing.assert_allclose(y.mean(-1), 0.0, atol=1e-5)
+        np.testing.assert_allclose(y.std(-1), 1.0, atol=1e-2)
+
+
+class TestMoEDeterminism:
+    def test_routing_is_permutation_stable(self):
+        """Routing decisions are per-token: permuting the batch permutes
+        outputs identically (no cross-token leakage except capacity, which
+        the dropless reduced config disables)."""
+        from repro.models import moe as moe_mod
+
+        cfg = reduce_config(get_config("deepseek-v2-lite-16b"))
+        p = moe_mod.make_moe(jax.random.PRNGKey(0), cfg, jnp.float32)
+        x = 0.3 * jax.random.normal(jax.random.PRNGKey(1), (4, 8, cfg.d_model))
+        y, _ = moe_mod.apply_moe(p, cfg, x)
+        perm = jnp.array([2, 0, 3, 1])
+        y_p, _ = moe_mod.apply_moe(p, cfg, x[perm])
+        np.testing.assert_allclose(
+            np.asarray(y[perm]), np.asarray(y_p), atol=2e-5
+        )

@@ -1,0 +1,113 @@
+"""Reservoir-computing pipeline tests: drive -> states -> ridge readout."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+jax.config.update("jax_enable_x64", True)
+
+from repro.core import (
+    drive,
+    fit_ridge,
+    make_reservoir,
+    nmse,
+    norm_error,
+    predict,
+)
+from repro.core import tasks
+
+
+class TestDrive:
+    def test_states_shape_and_sanity(self):
+        res = make_reservoir(n=16, n_in=1, hold_steps=20, dtype=jnp.float64)
+        u = np.random.default_rng(0).uniform(0, 0.5, size=(50, 1))
+        mT, states = drive(res, jnp.asarray(u))
+        assert states.shape == (50, 16)
+        assert mT.shape == (16, 3)
+        assert float(norm_error(mT)) < 5e-6
+        # node states are x-magnetizations, bounded by 1
+        assert float(jnp.max(jnp.abs(states))) <= 1.0 + 1e-9
+
+    def test_input_drives_dynamics(self):
+        res = make_reservoir(n=8, n_in=1, hold_steps=20, dtype=jnp.float64)
+        u0 = jnp.zeros((30, 1))
+        u1 = jnp.ones((30, 1)) * 0.5
+        _, s0 = drive(res, u0)
+        _, s1 = drive(res, u1)
+        assert not np.allclose(np.asarray(s0), np.asarray(s1))
+
+
+class TestRidge:
+    def test_exact_linear_recovery(self):
+        """Ridge with tiny reg recovers an exact linear map of the states."""
+        rng = np.random.default_rng(1)
+        states = jnp.asarray(rng.standard_normal((200, 10)))
+        w_true = rng.standard_normal((10, 2))
+        b_true = rng.standard_normal(2)
+        y = states @ w_true + b_true
+        ro = fit_ridge(states, jnp.asarray(y), washout=0, reg=1e-12)
+        pred = predict(ro, states)
+        np.testing.assert_allclose(np.asarray(pred), np.asarray(y), atol=1e-6)
+
+    def test_normal_equations_property(self):
+        """The ridge solution satisfies (X^T X + reg I) W = X^T Y exactly."""
+        rng = np.random.default_rng(2)
+        states = jnp.asarray(rng.standard_normal((64, 7)))
+        y = jnp.asarray(rng.standard_normal((64, 3)))
+        reg = 0.37
+        ro = fit_ridge(states, y, washout=0, reg=reg)
+        xb = np.concatenate([np.asarray(states), np.ones((64, 1))], axis=1)
+        lhs = (xb.T @ xb + reg * np.eye(8)) @ np.asarray(ro.w_out)
+        rhs = xb.T @ np.asarray(y)
+        np.testing.assert_allclose(lhs, rhs, rtol=1e-4, atol=1e-6)
+
+    def test_washout_applied(self):
+        rng = np.random.default_rng(3)
+        states = jnp.asarray(rng.standard_normal((50, 4)))
+        y = jnp.asarray(rng.standard_normal((50, 1)))
+        ro = fit_ridge(states, y, washout=10)
+        assert predict(ro, states).shape == (40, 1)
+
+
+class TestEndToEnd:
+    def test_narma_beats_trivial_baseline(self):
+        """A small STO reservoir must beat the mean-predictor on NARMA-2.
+
+        (NARMA-10 needs longer sequences/washout than a unit test allows; the
+        full-scale version lives in examples/narma_benchmark.py.)
+        """
+        u, y = tasks.narma_series(300, order=2, seed=0)
+        res = make_reservoir(n=32, n_in=1, hold_steps=50, dtype=jnp.float64)
+        _, states = drive(res, jnp.asarray(u[:, None]))
+        washout = 50
+        ro = fit_ridge(states, jnp.asarray(y[:, None]), washout=washout, reg=1e-8)
+        pred = predict(ro, states)
+        err = nmse(pred, jnp.asarray(y[washout:, None]))
+        assert err < 1.0  # mean predictor has NMSE ~ 1
+        assert np.isfinite(err)
+
+    def test_memory_capacity_positive(self):
+        rng = np.random.default_rng(4)
+        u = rng.uniform(-1, 1, 400)
+        res = make_reservoir(n=24, n_in=1, hold_steps=30, dtype=jnp.float64)
+        _, states = drive(res, jnp.asarray(u[:, None]))
+        targets = tasks.delay_memory_targets(u, max_delay=5)
+        washout = 60
+        ro = fit_ridge(states, jnp.asarray(targets), washout=washout, reg=1e-8)
+        pred = np.asarray(predict(ro, states))
+        mc = tasks.memory_capacity(pred, targets[washout:])
+        assert mc > 0.3
+
+
+class TestTasks:
+    def test_narma_bounded(self):
+        u, y = tasks.narma_series(500, order=10, seed=1)
+        assert np.all(np.isfinite(y))
+        assert len(u) == len(y) == 500
+
+    def test_delay_targets(self):
+        u = np.arange(10.0)
+        tg = tasks.delay_memory_targets(u, 3)
+        assert tg.shape == (10, 3)
+        assert tg[5, 0] == u[4] and tg[5, 2] == u[2]

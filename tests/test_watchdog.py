@@ -1,0 +1,48 @@
+"""End-to-end fault tolerance: the watchdog restarts a crashed training
+subprocess, which resumes from its checkpoint and completes."""
+
+import os
+import sys
+from pathlib import Path
+
+import pytest
+
+from repro.train.watchdog import run_supervised
+
+
+@pytest.mark.slow
+def test_watchdog_restarts_crashed_training(tmp_path):
+    ckpt = tmp_path / "ckpt"
+    cmd = [
+        sys.executable, "-m", "repro.launch.train",
+        "--arch", "xlstm-125m", "--reduced",
+        "--steps", "8", "--batch", "2", "--seq", "16",
+        "--ckpt-every", "2", "--ckpt-dir", str(ckpt),
+        "--fail-at-step", "5",
+    ]
+    env = dict(os.environ)
+    env["PYTHONPATH"] = "src"
+    rc = run_supervised(
+        cmd,
+        heartbeat=ckpt / "heartbeat.json",
+        stall_s=600.0,  # crash path, not stall path
+        max_restarts=2,
+        poll_s=0.2,
+        env=env,
+    )
+    assert rc == 0
+    # final checkpoint is the last step
+    steps = sorted(d.name for d in ckpt.glob("step_*"))
+    assert steps and steps[-1] == "step_00000007"
+
+
+def test_watchdog_gives_up(tmp_path):
+    """A command that always fails exhausts max_restarts and reports it."""
+    rc = run_supervised(
+        [sys.executable, "-c", "import sys; sys.exit(3)"],
+        heartbeat=tmp_path / "none.json",
+        stall_s=60.0,
+        max_restarts=1,
+        poll_s=0.05,
+    )
+    assert rc == 3
