@@ -12,6 +12,7 @@ def main() -> None:
         fig2_vectorfield,
         reservoir_tasks,
         roofline_lm,
+        serve_throughput,
         table2_timing,
         table3_factors,
     )
@@ -22,6 +23,9 @@ def main() -> None:
     table3_factors.run(per_step=per_step)
     reservoir_tasks.run()
     roofline_lm.run()
+    # serving-perf trajectory: sessions/sec + ticks/sec over the (N, E) grid,
+    # persisted to BENCH_serve.json for PR-over-PR comparison
+    serve_throughput.run()
 
 
 if __name__ == "__main__":

@@ -1,0 +1,129 @@
+"""Serving throughput: slot-batched reservoir engine vs one-at-a-time.
+
+For each (N, E) cell the batched engine serves E concurrent streams with one
+integrate per tick; the baseline serves the same streams through a
+single-slot engine, one session at a time (its per-tick cost measured once
+and charged E times — sequential serving is exactly E solo ticks per
+aggregate tick). Reported:
+
+    ticks/sec   aggregate session-ticks per second (E / batched tick time)
+    sessions/sec  streams completed per second for length-TICKS streams
+    speedup     batched aggregate throughput over sequential aggregate
+
+Emits the shared `name,us_per_call,derived` CSV rows and writes
+BENCH_serve.json (benchmarks/run.py wires it into the suite) so future PRs
+can track the serving-perf trajectory.
+
+    PYTHONPATH=src python -m benchmarks.serve_throughput [--quick]
+"""
+
+from __future__ import annotations
+
+import json
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import csv_row
+from repro.core import make_reservoir
+from repro.serve.reservoir import ReservoirEngine, StreamSession
+
+NS = (16, 128, 1024)
+ES = (8, 64, 256)
+HOLD_STEPS = 5
+WARM_TICKS = 2
+MEASURED_TICKS = 3
+
+
+def _mk_sessions(num, t, n_in, rng, base_sid=0):
+    return [
+        StreamSession(
+            sid=base_sid + i,
+            u_seq=rng.uniform(0.0, 0.5, size=(t, n_in)).astype(np.float32),
+            collect_states=False,
+        )
+        for i in range(num)
+    ]
+
+
+def _tick_time(engine, sessions) -> float:
+    """Median wall time of engine.step() once the batch is warm/compiled."""
+    for s in sessions:
+        engine.submit(s)
+    for _ in range(WARM_TICKS):
+        engine.step()
+    jax.block_until_ready(engine.store.m)
+    times = []
+    for _ in range(MEASURED_TICKS):
+        t0 = time.perf_counter()
+        engine.step()
+        jax.block_until_ready(engine.store.m)
+        times.append(time.perf_counter() - t0)
+    while engine.scheduler.has_work():  # drain
+        engine.step()
+    times.sort()
+    return times[len(times) // 2]
+
+
+def bench_cell(n: int, e: int, print_fn=print):
+    res = make_reservoir(n=n, n_in=1, hold_steps=HOLD_STEPS, dtype=jnp.float32)
+    rng = np.random.default_rng(0)
+    ticks = WARM_TICKS + MEASURED_TICKS + 2
+
+    batched = ReservoirEngine(res, num_slots=e, backend="auto")
+    t_batched = _tick_time(batched, _mk_sessions(e, ticks, 1, rng))
+
+    solo = ReservoirEngine(res, num_slots=1, backend=batched.backend)
+    t_solo = _tick_time(solo, _mk_sessions(1, ticks, 1, rng, base_sid=10_000))
+
+    # sequential serving of E streams costs E solo ticks per aggregate tick
+    agg_batched = e / t_batched
+    agg_solo = 1.0 / t_solo
+    speedup = agg_batched / agg_solo
+    cell = {
+        "n": n,
+        "e": e,
+        "backend": batched.backend,
+        "batched_tick_s": t_batched,
+        "solo_tick_s": t_solo,
+        "ticks_per_sec": agg_batched,
+        "sessions_per_sec": agg_batched / ticks,
+        "speedup_vs_sequential": speedup,
+        "hold_steps": HOLD_STEPS,
+    }
+    print_fn(
+        csv_row(
+            f"serve_n{n}_e{e}",
+            t_batched * 1e6,
+            f"backend_{batched.backend}_speedup_{speedup:.1f}x",
+        )
+    )
+    return cell
+
+
+def run(out_path: str = "BENCH_serve.json", quick: bool = False, print_fn=print):
+    ns = (16, 128) if quick else NS
+    es = (8, 64) if quick else ES
+    cells = [bench_cell(n, e, print_fn=print_fn) for n in ns for e in es]
+    payload = {
+        "benchmark": "serve_throughput",
+        "backend_platform": jax.default_backend(),
+        "hold_steps": HOLD_STEPS,
+        "cells": cells,
+    }
+    with open(out_path, "w") as f:
+        json.dump(payload, f, indent=2)
+    print_fn(csv_row("serve_json", 0.0, out_path))
+    return cells
+
+
+if __name__ == "__main__":
+    import argparse
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--out", default="BENCH_serve.json")
+    args = ap.parse_args()
+    run(out_path=args.out, quick=args.quick)

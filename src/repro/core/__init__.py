@@ -30,6 +30,7 @@ from repro.core.integrators import (
 from repro.core.reservoir import (
     Reservoir,
     make_reservoir,
+    coerce_input_series,
     drive,
     fit_ridge,
     predict,

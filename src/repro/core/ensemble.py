@@ -20,7 +20,9 @@ from typing import Optional, Sequence, Tuple
 import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
-from jax import shard_map
+
+from repro.core.compat import SHARD_MAP_CHECK_KW as _SHARD_MAP_CHECK_KW
+from repro.core.compat import shard_map
 
 from repro.core import integrators, sto
 from repro.core.constants import STOParams
@@ -125,7 +127,7 @@ def integrate_ensemble_sharded(
         mesh=mesh,
         in_specs=(jax.tree.map(lambda _: p_params, params), p_w, p_m),
         out_specs=p_m,
-        check_vma=False,
+        **_SHARD_MAP_CHECK_KW,
     )
     return fn(params, w_cp, m0)
 
@@ -202,7 +204,7 @@ def drive_ensemble_sharded(
             p_w, p_win, p_m, P(None, None),
         ),
         out_specs=(p_m, p_states),
-        check_vma=False,
+        **_SHARD_MAP_CHECK_KW,
     )
     return fn(params, w_cp, w_in, m0, u_seq)
 

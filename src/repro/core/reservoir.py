@@ -81,13 +81,53 @@ def _drive_scan(
     return mT, states  # states: (T, N)
 
 
-def drive(res: Reservoir, u_seq: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
-    """Run the reservoir over an input series. Returns (final m, states (T,N))."""
-    u_seq = jnp.atleast_2d(jnp.asarray(u_seq, dtype=res.m0.dtype))
-    if u_seq.shape[0] == 1 and u_seq.ndim == 2 and u_seq.shape[1] != res.w_in.shape[1]:
-        u_seq = u_seq.T
+def coerce_input_series(u_seq: jnp.ndarray, n_in: int, dtype) -> jnp.ndarray:
+    """Validate an input series against the explicit (T, N_in) contract.
+
+    Accepts (T, N_in), or 1-D (T,) when n_in == 1. Anything else — including
+    the previously silently-transposed (1, T) — raises with the expected
+    shape spelled out. Shared by `drive` and the serving engine so both
+    enforce the same contract.
+    """
+    u_seq = jnp.asarray(u_seq, dtype=dtype)
+    if u_seq.ndim == 1:
+        if n_in != 1:
+            raise ValueError(
+                f"1-D input series is only valid for n_in == 1; this "
+                f"reservoir has n_in == {n_in}. Pass shape (T, {n_in})."
+            )
+        return u_seq[:, None]
+    if u_seq.ndim != 2 or u_seq.shape[1] != n_in:
+        raise ValueError(
+            f"input series must have shape (T, {n_in}) — one row per sample, "
+            f"one column per input channel — or (T,) when n_in == 1; got "
+            f"{u_seq.shape}. A (1, T) series must be passed as (T, 1)."
+        )
+    return u_seq
+
+
+def drive(
+    res: Reservoir,
+    u_seq: jnp.ndarray,
+    m0: Optional[jnp.ndarray] = None,
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Run the reservoir over an input series. Returns (final m, states (T,N)).
+
+    u_seq follows the explicit (T, N_in) contract ((T,) allowed for
+    n_in == 1). m0 optionally resumes integration from an arbitrary (N, 3)
+    magnetization state — e.g. the streamed state of a paused serving
+    session — instead of the reservoir's canonical initial state; driving in
+    chunks with the carried-over final state is exactly equivalent to one
+    long drive.
+    """
+    u_seq = coerce_input_series(u_seq, res.w_in.shape[1], res.m0.dtype)
+    m_start = res.m0 if m0 is None else jnp.asarray(m0, dtype=res.m0.dtype)
+    if m_start.shape != res.m0.shape:
+        raise ValueError(
+            f"m0 must have shape {tuple(res.m0.shape)}; got {tuple(m_start.shape)}"
+        )
     return _drive_scan(
-        res.params, res.w_cp, res.w_in, res.m0, u_seq, res.dt, res.hold_steps
+        res.params, res.w_cp, res.w_in, m_start, u_seq, res.dt, res.hold_steps
     )
 
 

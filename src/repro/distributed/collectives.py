@@ -18,8 +18,10 @@ from typing import Sequence
 
 import jax
 import jax.numpy as jnp
-from jax import shard_map
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.core.compat import SHARD_MAP_CHECK_KW as _SHARD_MAP_CHECK_KW
+from repro.core.compat import shard_map
 
 
 def compressed_psum(x: jnp.ndarray, axis_name: str, num_devices: int):
@@ -53,7 +55,8 @@ def dp_mean_grads_compressed(mesh: Mesh, grads, axis_name: str = "data"):
 
     specs = jax.tree.map(lambda _: P(), grads)
     fn = shard_map(
-        local, mesh=mesh, in_specs=(specs,), out_specs=specs, check_vma=False
+        local, mesh=mesh, in_specs=(specs,), out_specs=specs,
+        **_SHARD_MAP_CHECK_KW,
     )
     return fn(grads)
 

@@ -5,19 +5,31 @@ layout), MXU-alignment padding, and implementation dispatch:
 
     impl="fused"  VMEM-resident whole-RK4(-multi-step) kernel (small/med N)
     impl="tiled"  per-stage row-tiled kernel (large N)
-    impl="ref"    pure-jnp oracle
-    impl="auto"   fused while W + state + stages fit the VMEM budget, else tiled
+    impl="ref"    pure-jnp oracle (also the non-TPU production path)
+    impl="auto"   measured-latency table if populated; else fused while
+                  W + state + stages fit the VMEM budget, else tiled
+                  (on non-TPU backends: always ref — Pallas is unavailable)
+
+Serving extensions (repro/serve/reservoir.py rides on these):
+  - `h_in`: an (N, E) input-drive x-field added to the coupling field inside
+    the kernels, held constant over the integration window — one kernel
+    invocation advances a whole hold window of a *driven* reservoir.
+  - `lane_mask`: partial-batch masking over the ensemble axis. Lanes where
+    the mask is False come back bit-identical to their input state, so idle
+    serving slots stay frozen while active slots advance in the same batch.
 
 Zero-padding correctness: padded W rows/cols are zero so padded oscillators
-receive/contribute no coupling; padded ensemble lanes evolve garbage that is
-sliced away on exit; params rows are broadcast into padded lanes so no
-division hits uninitialized memory (denominators are 1 + lam*m.p >= 1-lam).
+receive/contribute no coupling; padded h_in rows/lanes are zero; padded
+ensemble lanes evolve garbage that is sliced away on exit; params rows are
+broadcast into padded lanes so no division hits uninitialized memory
+(denominators are 1 + lam*m.p >= 1-lam).
 """
 
 from __future__ import annotations
 
 import functools
-from typing import Optional
+import time
+from typing import Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -41,6 +53,98 @@ def fused_fits_vmem(n: int, block_e: int, itemsize: int = 4) -> bool:
     return need <= VMEM_BUDGET
 
 
+# ---------------------------------------------------------------------------
+# Measured-latency dispatch table
+# ---------------------------------------------------------------------------
+
+# (platform, N_padded, E_padded) -> impl name. Populated by
+# measure_impl_latency() (or register_impl_choice() from persisted results);
+# consulted by choose_impl() before falling back to the VMEM heuristic.
+_LATENCY_TABLE: Dict[Tuple[str, int, int], str] = {}
+
+
+def register_impl_choice(n: int, e: int, impl: str, platform: Optional[str] = None):
+    """Pin the dispatch choice for a padded (N, E) shape on a platform."""
+    platform = platform or jax.default_backend()
+    _LATENCY_TABLE[(platform, _round_up(n, LANE), _round_up(e, LANE))] = impl
+
+
+def latency_table() -> Dict[Tuple[str, int, int], str]:
+    return dict(_LATENCY_TABLE)
+
+
+def choose_impl(
+    n: int,
+    e: int,
+    itemsize: int = 4,
+    platform: Optional[str] = None,
+) -> str:
+    """Resolve impl="auto" for a given (N, E) problem shape.
+
+    Priority: measured-latency table > platform gate (Pallas kernels only
+    compile on TPU; everything else integrates through the jnp oracle, which
+    XLA fuses well on CPU/GPU) > VMEM-fit heuristic.
+    """
+    platform = platform or jax.default_backend()
+    key = (platform, _round_up(n, LANE), _round_up(e, LANE))
+    if key in _LATENCY_TABLE:
+        return _LATENCY_TABLE[key]
+    if platform != "tpu":
+        return "ref"
+    return "fused" if fused_fits_vmem(_round_up(n, LANE), LANE, itemsize) else "tiled"
+
+
+def measure_impl_latency(
+    n: int,
+    e: int,
+    dt: float = 1.0e-11,
+    n_steps: int = 8,
+    candidates: Optional[Tuple[str, ...]] = None,
+    dtype=jnp.float32,
+    reps: int = 3,
+    register: bool = True,
+) -> Dict[str, float]:
+    """Time each candidate impl at (N, E) and record the winner.
+
+    Returns {impl: seconds per call}. With register=True the fastest impl is
+    written into the dispatch table so subsequent impl="auto" calls at this
+    padded shape use the measured choice — the engine measures once per
+    instance instead of trusting the static VMEM heuristic.
+    """
+    if candidates is None:
+        candidates = (
+            ("fused", "tiled", "ref")
+            if jax.default_backend() == "tpu"
+            else ("ref",)
+        )
+    from repro.core import constants, coupling
+
+    w = jnp.asarray(coupling.make_coupling_matrix(n, seed=0), dtype)
+    m0 = jnp.broadcast_to(constants.initial_magnetization(n, dtype), (e, n, 3))
+    pv = kref.pack_params(constants.default_params(dtype), e, dtype)
+    timings: Dict[str, float] = {}
+    for impl in candidates:
+        fn = lambda: sto_rk4_integrate(m0, w, pv, float(dt), n_steps, impl=impl)
+        try:
+            jax.block_until_ready(fn())  # compile + warm
+            times = []
+            for _ in range(reps):
+                t0 = time.perf_counter()
+                jax.block_until_ready(fn())
+                times.append(time.perf_counter() - t0)
+            timings[impl] = sorted(times)[len(times) // 2]
+        except Exception:  # impl unavailable on this backend/shape
+            continue
+    if register and timings:
+        register_impl_choice(n, e, min(timings, key=timings.get))
+    return timings
+
+
+# ---------------------------------------------------------------------------
+# Layout conversion + padding
+# ---------------------------------------------------------------------------
+
+
 def to_planes(m_user: jnp.ndarray) -> jnp.ndarray:
     """(..., N, 3) -> (3, N, E) kernel layout (E = flattened batch, >=1)."""
     if m_user.ndim == 2:
@@ -60,22 +164,118 @@ def from_planes(m_planes: jnp.ndarray, batch_shape) -> jnp.ndarray:
     return out.reshape(*batch_shape, m_planes.shape[1], 3)
 
 
-def _pad_planes(m, w, params, block_n, block_e):
+def _pad_planes(m, w, params, h_in, block_n, block_e):
     _, n, e = m.shape
     n_p = _round_up(max(n, 1), block_n)
     e_p = _round_up(max(e, 1), block_e)
     if n_p != n or e_p != e:
         m = jnp.pad(m, ((0, 0), (0, n_p - n), (0, e_p - e)))
         w = jnp.pad(w, ((0, n_p - n), (0, n_p - n)))
+        if h_in is not None:
+            h_in = jnp.pad(h_in, ((0, n_p - n), (0, e_p - e)))
         # broadcast params into padded lanes (edge mode keeps denominators sane)
         params = jnp.pad(params, ((0, 0), (0, e_p - e)), mode="edge")
-    return m, w, params, n, e
+    return m, w, params, h_in, n, e
+
+
+# ---------------------------------------------------------------------------
+# Integration entry points
+# ---------------------------------------------------------------------------
+
+
+def sto_rk4_integrate_planes(
+    m0: jnp.ndarray,  # (3, N, E) kernel layout
+    w_cp: jnp.ndarray,  # (N, N)
+    params_vec: jnp.ndarray,  # (NP, E) packed (kernels/ref.pack_params)
+    dt: float,
+    n_steps: int,
+    h_in: Optional[jnp.ndarray] = None,  # (N, E) input-drive x-field
+    lane_mask: Optional[jnp.ndarray] = None,  # (E,) bool; False lanes frozen
+    impl: str = "auto",
+    n_inner: int = 8,
+    block_n: int = LANE,
+    block_e: int = LANE,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    """Integrate n_steps of (optionally driven) coupled-STO RK4 in kernel
+    layout. Returns the final (3, N, E) state.
+
+    This is the serving engine's hot path: one call advances every ensemble
+    lane (= serving slot) by a full hold window. n_steps must be divisible by
+    n_inner for the fused path (auto-adjusted otherwise).
+
+    impl="auto" is resolved HERE, outside the jit, so dispatch-table updates
+    (measure_impl_latency / register_impl_choice) take effect on the next
+    call — the resolved impl is the jit cache key, never the string "auto".
+    """
+    _, n, e = m0.shape
+    if impl == "auto":
+        impl = choose_impl(n, e, m0.dtype.itemsize)
+    return _integrate_planes_jit(
+        m0, w_cp, params_vec, h_in, lane_mask,
+        dt=dt, n_steps=n_steps, impl=impl, n_inner=n_inner,
+        block_n=block_n, block_e=block_e, interpret=interpret,
+    )
 
 
 @functools.partial(
     jax.jit,
     static_argnames=("dt", "n_steps", "impl", "n_inner", "block_n", "block_e", "interpret"),
 )
+def _integrate_planes_jit(
+    m0, w_cp, params_vec, h_in, lane_mask,
+    *, dt, n_steps, impl, n_inner, block_n, block_e, interpret,
+):
+    # the oracle is pure XLA — no MXU tile constraint, so padding would only
+    # burn FLOPs on dead lanes; the Pallas kernels need lane alignment
+    pb_n, pb_e = (1, 1) if impl == "ref" else (block_n, block_e)
+    m, w, pv, h, n_orig, e_orig = _pad_planes(
+        m0, w_cp, params_vec, h_in, pb_n, pb_e
+    )
+
+    if impl == "ref":
+        dt_c = jnp.asarray(dt, m.dtype)
+
+        def body(mm, _):
+            return kref.rk4_step_planes(mm, w, pv, dt_c, h), None
+
+        m, _ = jax.lax.scan(body, m, None, length=n_steps)
+    elif impl == "fused":
+        while n_steps % n_inner != 0:
+            n_inner -= 1
+
+        def body(mm, _):
+            return (
+                sto_step.rk4_fused(
+                    mm, w, pv, dt, n_inner=n_inner, block_e=block_e,
+                    h_in=h, interpret=interpret,
+                ),
+                None,
+            )
+
+        m, _ = jax.lax.scan(body, m, None, length=n_steps // n_inner)
+    elif impl == "tiled":
+        def body(mm, _):
+            return (
+                sto_step.rk4_tiled_step(
+                    mm, w, pv, dt, block_n=block_n, block_e=block_e,
+                    h_in=h, interpret=interpret,
+                ),
+                None,
+            )
+
+        m, _ = jax.lax.scan(body, m, None, length=n_steps)
+    else:
+        raise ValueError(f"unknown impl: {impl}")
+
+    m = m[:, :n_orig, :e_orig]
+    if lane_mask is not None:
+        # Partial-batch masking: frozen lanes return their input state
+        # bit-identically (idle serving slots don't drift).
+        m = jnp.where(lane_mask[None, None, :], m, m0)
+    return m
+
+
 def sto_rk4_integrate(
     m0: jnp.ndarray,  # (..., N, 3) user layout
     w_cp: jnp.ndarray,  # (N, N)
@@ -91,43 +291,20 @@ def sto_rk4_integrate(
     """Integrate n_steps of coupled-STO RK4 with the chosen implementation.
 
     Returns the final state in user layout. n_steps must be divisible by
-    n_inner for the fused path (auto-adjusted otherwise).
+    n_inner for the fused path (auto-adjusted otherwise). Like the planes
+    entry point, impl="auto" is resolved eagerly against the dispatch table.
     """
     batch_shape = m0.shape[:-2]
-    m = to_planes(m0)
-    m, w, pv, n_orig, e_orig = _pad_planes(m, w_cp, params_vec, block_n, block_e)
-
+    e = 1
+    for s in batch_shape:
+        e *= int(s)
     if impl == "auto":
-        impl = "fused" if fused_fits_vmem(m.shape[1], block_e, m.dtype.itemsize) else "tiled"
-
-    if impl == "ref":
-        def body(mm, _):
-            return kref.rk4_step_planes(mm, w, pv, jnp.asarray(dt, m.dtype)), None
-        m, _ = jax.lax.scan(body, m, None, length=n_steps)
-    elif impl == "fused":
-        while n_steps % n_inner != 0:
-            n_inner -= 1
-        def body(mm, _):
-            return (
-                sto_step.rk4_fused(
-                    mm, w, pv, dt, n_inner=n_inner, block_e=block_e, interpret=interpret
-                ),
-                None,
-            )
-        m, _ = jax.lax.scan(body, m, None, length=n_steps // n_inner)
-    elif impl == "tiled":
-        def body(mm, _):
-            return (
-                sto_step.rk4_tiled_step(
-                    mm, w, pv, dt, block_n=block_n, block_e=block_e, interpret=interpret
-                ),
-                None,
-            )
-        m, _ = jax.lax.scan(body, m, None, length=n_steps)
-    else:
-        raise ValueError(f"unknown impl: {impl}")
-
-    m = m[:, :n_orig, :e_orig]
+        impl = choose_impl(m0.shape[-2], e, m0.dtype.itemsize)
+    m = _integrate_planes_jit(
+        to_planes(m0), w_cp, params_vec, None, None,
+        dt=dt, n_steps=n_steps, impl=impl, n_inner=n_inner,
+        block_n=block_n, block_e=block_e, interpret=interpret,
+    )
     return from_planes(m, batch_shape)
 
 

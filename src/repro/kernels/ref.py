@@ -65,10 +65,13 @@ def _unpack(pvec: jnp.ndarray):
     return {name: pvec[i] for i, name in enumerate(PARAM_LAYOUT)}
 
 
-def llg_field_planes(m, w_cp, pvec):
+def llg_field_planes(m, w_cp, pvec, h_in=None):
     """Oracle vector field in kernel layout.
 
     m: (3, N, E); w_cp: (N, N); pvec: (NP, E). Returns k: (3, N, E).
+    h_in: optional (N, E) input-drive x-field A_in (W^in u), added to the
+    coupling field (input is held piecewise-constant over a hold window, so
+    it enters the field as a constant plane).
     This is algebraically identical to core.sto.llg_field — the equivalence
     is itself asserted by tests/test_kernels_sto.py.
     """
@@ -76,6 +79,8 @@ def llg_field_planes(m, w_cp, pvec):
     mx, my, mz = m[0], m[1], m[2]  # (N, E)
     # coupling: rows of W against the x-plane -> (N, E) matmul on the MXU
     hx = p["a_cp"] * jnp.dot(w_cp, mx, preferred_element_type=m.dtype)
+    if h_in is not None:
+        hx = hx + h_in
     hz = p["happl"] + p["demag"] * mz
     mdotp = p["px"] * mx + p["py"] * my + p["pz"] * mz
     hs = p["hs_coef"] / (1.0 + p["lam"] * mdotp)
@@ -99,20 +104,20 @@ def llg_field_planes(m, w_cp, pvec):
     return jnp.stack([kx, ky, kz], axis=0)
 
 
-def rk4_step_planes(m, w_cp, pvec, dt):
+def rk4_step_planes(m, w_cp, pvec, dt, h_in=None):
     """One classical RK4 step in kernel layout (oracle)."""
-    k1 = llg_field_planes(m, w_cp, pvec)
-    k2 = llg_field_planes(m + 0.5 * dt * k1, w_cp, pvec)
-    k3 = llg_field_planes(m + 0.5 * dt * k2, w_cp, pvec)
-    k4 = llg_field_planes(m + dt * k3, w_cp, pvec)
+    k1 = llg_field_planes(m, w_cp, pvec, h_in)
+    k2 = llg_field_planes(m + 0.5 * dt * k1, w_cp, pvec, h_in)
+    k3 = llg_field_planes(m + 0.5 * dt * k2, w_cp, pvec, h_in)
+    k4 = llg_field_planes(m + dt * k3, w_cp, pvec, h_in)
     return m + (dt / 6.0) * (k1 + 2.0 * k2 + 2.0 * k3 + k4)
 
 
-def rk4_multi_step_planes(m, w_cp, pvec, dt, n_inner: int):
+def rk4_multi_step_planes(m, w_cp, pvec, dt, n_inner: int, h_in=None):
     """n_inner fused RK4 steps (oracle for the VMEM-resident kernel)."""
 
     def body(_, mm):
-        return rk4_step_planes(mm, w_cp, pvec, dt)
+        return rk4_step_planes(mm, w_cp, pvec, dt, h_in)
 
     return jax.lax.fori_loop(0, n_inner, body, m)
 

@@ -77,13 +77,14 @@ def _unpack_rows(params_ref):
 # ---------------------------------------------------------------------------
 
 
-def _rk4_fused_kernel(params_ref, w_ref, m_ref, out_ref, *, dt, n_inner):
+def _rk4_fused_kernel(params_ref, w_ref, h_ref, m_ref, out_ref, *, dt, n_inner):
     p = _unpack_rows(params_ref)
     w = w_ref[...]  # (N, N) stays in VMEM across inner steps
+    h_in = h_ref[...]  # (N, be) input-drive x-field, constant over the window
     acc_t = jnp.float32 if m_ref.dtype == jnp.bfloat16 else m_ref.dtype
 
     def field(mx, my, mz):
-        hx = p["a_cp"] * jnp.dot(w, mx, preferred_element_type=acc_t)
+        hx = p["a_cp"] * jnp.dot(w, mx, preferred_element_type=acc_t) + h_in
         return _field_planes(mx, my, mz, hx, p)
 
     def one_step(state):
@@ -114,10 +115,13 @@ def rk4_fused(
     dt: float,
     n_inner: int = 1,
     block_e: int = LANE,
+    h_in: jnp.ndarray = None,  # (N, E) input-drive x-field; None = undriven
     interpret: bool = False,
 ) -> jnp.ndarray:
     _, n, e = m.shape
     assert e % block_e == 0, (e, block_e)
+    if h_in is None:
+        h_in = jnp.zeros((n, e), m.dtype)
     grid = (e // block_e,)
     # dt is a static compile-time constant (the paper fixes dt = 1e-11).
     kernel = functools.partial(_rk4_fused_kernel, dt=float(dt), n_inner=n_inner)
@@ -127,12 +131,13 @@ def rk4_fused(
         in_specs=[
             pl.BlockSpec((NP, block_e), lambda i: (0, i)),  # params
             pl.BlockSpec((n, n), lambda i: (0, 0)),  # W resident
+            pl.BlockSpec((n, block_e), lambda i: (0, i)),  # input drive
             pl.BlockSpec((3, n, block_e), lambda i: (0, 0, i)),  # m
         ],
         out_specs=pl.BlockSpec((3, n, block_e), lambda i: (0, 0, i)),
         out_shape=jax.ShapeDtypeStruct(m.shape, m.dtype),
         interpret=interpret,
-    )(params, w_cp, m)
+    )(params, w_cp, h_in, m)
 
 
 # ---------------------------------------------------------------------------
@@ -141,19 +146,23 @@ def rk4_fused(
 
 
 def _field_tiled_kernel(
-    params_ref, w_ref, yx_ref, m_ref, kprev_ref, out_ref, *, stage_coef
+    params_ref, w_ref, h_ref, yx_ref, m_ref, kprev_ref, out_ref, *, stage_coef
 ):
     """k_new = f(m + stage_coef * k_prev) for one (N-row, E) tile.
 
     yx_ref holds the FULL x-plane of the stage state y (all N rows — the
     coupling needs every oscillator), computed cheaply by the caller;
     m_ref/kprev_ref hold this tile's rows of the base state and previous
-    slope. stage_coef = 0 skips the y-algebra (k1).
+    slope; h_ref this tile's rows of the input-drive x-field.
+    stage_coef = 0 skips the y-algebra (k1).
     """
     p = _unpack_rows(params_ref)
     acc_t = jnp.float32 if m_ref.dtype == jnp.bfloat16 else m_ref.dtype
     # MXU: this row-block of W against the full y-x-plane.
-    hx = p["a_cp"] * jnp.dot(w_ref[...], yx_ref[...], preferred_element_type=acc_t)
+    hx = (
+        p["a_cp"] * jnp.dot(w_ref[...], yx_ref[...], preferred_element_type=acc_t)
+        + h_ref[...]
+    )
     if stage_coef == 0.0:
         yx, yy, yz = m_ref[0], m_ref[1], m_ref[2]
     else:
@@ -175,10 +184,13 @@ def field_tiled(
     stage_coef: float,
     block_n: int = LANE,
     block_e: int = LANE,
+    h_in: jnp.ndarray = None,  # (N, E) input-drive x-field; None = undriven
     interpret: bool = False,
 ) -> jnp.ndarray:
     _, n, e = m.shape
     assert n % block_n == 0 and e % block_e == 0, (n, e, block_n, block_e)
+    if h_in is None:
+        h_in = jnp.zeros((n, e), m.dtype)
     grid = (n // block_n, e // block_e)
     kernel = functools.partial(_field_tiled_kernel, stage_coef=stage_coef)
     return pl.pallas_call(
@@ -187,6 +199,7 @@ def field_tiled(
         in_specs=[
             pl.BlockSpec((NP, block_e), lambda i, j: (0, j)),
             pl.BlockSpec((block_n, n), lambda i, j: (i, 0)),  # W row block
+            pl.BlockSpec((block_n, block_e), lambda i, j: (i, j)),  # input drive
             pl.BlockSpec((n, block_e), lambda i, j: (0, j)),  # full y-x plane
             pl.BlockSpec((3, block_n, block_e), lambda i, j: (0, i, j)),
             pl.BlockSpec((3, block_n, block_e), lambda i, j: (0, i, j)),
@@ -194,7 +207,7 @@ def field_tiled(
         out_specs=pl.BlockSpec((3, block_n, block_e), lambda i, j: (0, i, j)),
         out_shape=jax.ShapeDtypeStruct(m.shape, m.dtype),
         interpret=interpret,
-    )(params, w_cp, yx_full, m, k_prev)
+    )(params, w_cp, h_in, yx_full, m, k_prev)
 
 
 def rk4_tiled_step(
@@ -204,6 +217,7 @@ def rk4_tiled_step(
     dt: float,
     block_n: int = LANE,
     block_e: int = LANE,
+    h_in: jnp.ndarray = None,
     interpret: bool = False,
 ) -> jnp.ndarray:
     """One RK4 step built from four tiled field-kernel launches.
@@ -218,6 +232,7 @@ def rk4_tiled_step(
         params=params,
         block_n=block_n,
         block_e=block_e,
+        h_in=h_in,
         interpret=interpret,
     )
     zeros = jnp.zeros_like(m)

@@ -163,6 +163,8 @@ def lower_cell(arch: str, shape: str, multi_pod: bool, mesh_override=None):
                 if v is not None:
                     rec[field] = int(v)
         cost = compiled.cost_analysis()
+        if isinstance(cost, (list, tuple)):  # older jax wraps the dict
+            cost = cost[0] if cost else None
         if cost:
             rec["hlo_flops"] = float(cost.get("flops", -1))
             rec["hlo_bytes"] = float(cost.get("bytes accessed", -1))

@@ -1,29 +1,27 @@
-"""Batched serving launcher on the continuous-batching engine
+"""Batched serving launchers.
+
+Two engines share the slot-batching idea:
+
+LM mode (default) — continuous batching on the transformer engine
 (repro/serve/engine.py): requests stream through a fixed slot pool;
 finished slots refill immediately via prefill + cache splice.
 
     PYTHONPATH=src python -m repro.launch.serve --arch h2o-danube-1.8b \
         --reduced --requests 8 --slots 4 --gen 16
 
-This is the loop whose one-step bodies the decode_* dry-run cells lower at
-production shape; the engine's outputs are bit-identical to per-request
-decoding (tests/test_serve_engine.py).
+Reservoir mode — the multi-tenant streaming reservoir engine
+(repro/serve/reservoir.py): client streams are slot-batched onto the
+ensemble axis so one batched RK4 integrate advances every session per tick.
+
+    PYTHONPATH=src python -m repro.launch.serve --mode reservoir \
+        --n 128 --slots 64 --sessions 96 --ticks 50 --backend auto
 """
 
 import argparse
 import time
 
 
-def main(argv=None):
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", required=True)
-    ap.add_argument("--reduced", action="store_true")
-    ap.add_argument("--requests", type=int, default=8)
-    ap.add_argument("--slots", type=int, default=4)
-    ap.add_argument("--prompt-len", type=int, default=16)
-    ap.add_argument("--gen", type=int, default=8)
-    args = ap.parse_args(argv)
-
+def main_lm(args):
     import jax
     import jax.numpy as jnp
 
@@ -61,6 +59,77 @@ def main(argv=None):
         print(f"  req{rid}: {results[rid]}")
     print(f"served {len(results)} requests / {total_toks} tokens in {dt:.2f}s "
           f"({total_toks / dt:.1f} tok/s incl. compile) with {args.slots} slots")
+
+
+def main_reservoir(args):
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro.core import drive, fit_ridge, make_reservoir, tasks
+    from repro.serve.reservoir import ReservoirEngine, StreamSession
+
+    res = make_reservoir(
+        n=args.n, n_in=1, hold_steps=args.hold_steps, dtype=jnp.float32
+    )
+    # one shared trained readout per task flavor (NARMA here); tenants could
+    # each bring their own — see examples/serve_reservoir.py
+    u_tr, y_tr = tasks.narma_series(args.ticks * 4, order=2, seed=0)
+    _, states_tr = drive(res, jnp.asarray(u_tr[:, None], jnp.float32))
+    readout = fit_ridge(
+        states_tr, jnp.asarray(y_tr[:, None], jnp.float32), washout=10, reg=1e-6
+    )
+
+    rng = np.random.default_rng(1)
+    sessions = [
+        StreamSession(
+            sid=i,
+            u_seq=rng.uniform(0.0, 0.5, size=(args.ticks, 1)).astype(np.float32),
+            readout=readout,
+            collect_states=False,
+        )
+        for i in range(args.sessions)
+    ]
+
+    eng = ReservoirEngine(
+        res, num_slots=args.slots, backend=args.backend, measure=args.measure
+    )
+    t0 = time.time()
+    results = eng.run(sessions)
+    dt = time.time() - t0
+    st = eng.scheduler.stats
+    print(f"backend={eng.backend} slots={args.slots} N={args.n} "
+          f"hold_steps={args.hold_steps}")
+    print(f"served {len(results)} sessions / {st.session_ticks} session-ticks "
+          f"in {dt:.2f}s ({st.session_ticks / dt:.1f} ticks/s incl. compile; "
+          f"{st.ticks} batched ticks)")
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--mode", choices=["lm", "reservoir"], default="lm")
+    # lm mode
+    ap.add_argument("--arch")
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--requests", type=int, default=8)
+    ap.add_argument("--slots", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=16)
+    ap.add_argument("--gen", type=int, default=8)
+    # reservoir mode
+    ap.add_argument("--n", type=int, default=128)
+    ap.add_argument("--sessions", type=int, default=16)
+    ap.add_argument("--ticks", type=int, default=50)
+    ap.add_argument("--hold-steps", type=int, default=20)
+    ap.add_argument("--backend", default="auto")
+    ap.add_argument("--measure", action="store_true",
+                    help="time backend candidates for this (N, E) first")
+    args = ap.parse_args(argv)
+
+    if args.mode == "reservoir":
+        main_reservoir(args)
+    else:
+        if not args.arch:
+            ap.error("--arch is required in lm mode")
+        main_lm(args)
 
 
 if __name__ == "__main__":

@@ -1,0 +1,10 @@
+"""Serving engines.
+
+- engine.py: continuous-batching LLM engine (prefill + KV-cache splice).
+- reservoir.py (+ scheduler.py, state_store.py): multi-tenant streaming
+  reservoir engine — client streams slot-batched onto the ensemble axis E.
+
+Submodules are imported directly (repro.serve.reservoir, ...) rather than
+re-exported here: the LLM engine pulls in the model stack, which reservoir
+serving doesn't need.
+"""

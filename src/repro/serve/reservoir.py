@@ -1,0 +1,298 @@
+"""Multi-tenant streaming reservoir inference engine.
+
+The reservoir analogue of continuous batching (serve/engine.py): concurrent
+client streams map onto slots of the ensemble axis E, so ONE batched
+integrate — `rk4_fused` / `field_tiled` on TPU, a jit'd `lax.scan` on CPU —
+advances every active session per input tick. Admitting a session splices
+its magnetization state m (N, 3) and per-tenant STOParams lane into the
+batched (3, N, E) planes (serve/state_store.py); finished or idle sessions
+free their slot without stalling the batch (serve/scheduler.py). Each
+session carries its own trained Readout and input stream (NARMA, parity,
+sine-approx, ... — anything the reservoir was trained for); readout
+application is itself slot-batched (one einsum over E).
+
+Backend dispatch: "auto" consults kernels/ops.py — the measured-latency
+table when populated (measure=True times the candidates for this (N, E) at
+engine construction), else the VMEM-fit heuristic on TPU, else the plain
+lax.scan path over the kernel layout ("ref"). The extra "scan" backend
+integrates in the core (E, N, 3) layout with exactly `reservoir.drive`'s
+math, so per-session streamed states are numerically indistinguishable
+from running the stream alone; every other backend agrees with solo runs
+to the kernel test suite's tolerance (tests/test_serve_reservoir.py pins
+all of them).
+
+This is the serving front for time-multiplexed STO reservoir hardware
+(Riou et al., arXiv:1904.11236; Kanao et al., arXiv:1905.07937): each
+tenant's device parameters ride in a params lane, the shared simulator
+advances all of them in lockstep.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import integrators, sto
+from repro.core.constants import STOParams
+from repro.core.reservoir import Readout, Reservoir, coerce_input_series
+from repro.kernels import ops
+from repro.serve.scheduler import SlotScheduler
+from repro.serve.state_store import SlotStore
+
+BACKENDS = ("auto", "scan", "ref", "fused", "tiled")
+
+
+@dataclasses.dataclass
+class StreamSession:
+    """One tenant's streaming request.
+
+    u_seq follows drive()'s explicit (T, N_in) contract ((T,) for
+    n_in == 1). params overrides the engine reservoir's physical parameters
+    for this tenant's lane; readout is the tenant's trained linear readout
+    (None = state-collection only, e.g. to fit a readout afterwards); m0
+    resumes from a previous session's final state.
+    """
+
+    sid: int
+    u_seq: np.ndarray
+    params: Optional[STOParams] = None
+    readout: Optional[Readout] = None
+    m0: Optional[jnp.ndarray] = None
+    collect_states: bool = True
+
+    # engine-internal bookkeeping (set on admit)
+    _slot: int = dataclasses.field(default=-1, repr=False)
+    _t: int = dataclasses.field(default=0, repr=False)
+    _states: list = dataclasses.field(default_factory=list, repr=False)
+    _outs: list = dataclasses.field(default_factory=list, repr=False)
+    _admitted_tick: int = dataclasses.field(default=-1, repr=False)
+
+
+@dataclasses.dataclass
+class SessionResult:
+    sid: int
+    states: Optional[jnp.ndarray]  # (T, N) streamed node states
+    outputs: Optional[jnp.ndarray]  # (T - washout, n_out) readout outputs
+    final_m: jnp.ndarray  # (N, 3) — resumable via StreamSession.m0 / drive(m0=)
+    admitted_tick: int
+    finished_tick: int
+    slot: int
+
+
+# ---------------------------------------------------------------------------
+# jit'd per-tick batched steps
+# ---------------------------------------------------------------------------
+
+
+@functools.partial(jax.jit, static_argnames=("hold_steps",))
+def _tick_scan(params_e, w_cp, w_in, m_planes, u, mask, dt, hold_steps):
+    """Advance all E slots one input tick in the core (E, N, 3) layout.
+
+    Takes/returns the store's (3, N, E) planes — the layout shuffle lives
+    inside the jit so one dispatch covers the whole tick. The integration
+    itself mirrors reservoir._drive_scan's per_sample exactly (same field,
+    same step, same op order per lane) so scan-backend sessions reproduce
+    solo drive() results; masked (idle) lanes return unchanged.
+    """
+    m = jnp.transpose(m_planes, (2, 1, 0))  # (E, N, 3)
+    h_in = params_e.a_in * jnp.einsum("ni,ei->en", w_in, u)  # (E, N)
+
+    def field(mm, h):
+        return sto.llg_field(mm, params_e, w_cp, h)
+
+    step = integrators.make_step(field, integrators.RK4)
+
+    def inner(mi, _):
+        return step(mi, dt, h_in), None
+
+    m_new, _ = jax.lax.scan(inner, m, None, length=hold_steps)
+    m_new = jnp.where(mask[:, None, None], m_new, m)
+    return jnp.transpose(m_new, (2, 1, 0)), jnp.transpose(m_new[..., 0])
+
+
+@jax.jit
+def _h_plane(w_in, u, a_in):
+    """(N, E) input-drive x-field for the kernel backends."""
+    return jnp.einsum("ni,ei->ne", w_in, u) * a_in[None, :]
+
+
+@jax.jit
+def _apply_readouts(states_plane, w_out):
+    """Slot-batched readout: (N, E) states x (E, N+1, n_out) -> (E, n_out)."""
+    e = states_plane.shape[1]
+    xb = jnp.concatenate(
+        [states_plane, jnp.ones((1, e), states_plane.dtype)], axis=0
+    )
+    return jnp.einsum("ne,eno->eo", xb, w_out)
+
+
+# ---------------------------------------------------------------------------
+# Engine
+# ---------------------------------------------------------------------------
+
+
+class ReservoirEngine:
+    """Serve many concurrent reservoir streams from one batched simulator.
+
+    res is the shared reservoir template (topology W^cp/W^in, dt,
+    hold_steps, default params); num_slots is the ensemble capacity E.
+    """
+
+    def __init__(
+        self,
+        res: Reservoir,
+        num_slots: int,
+        backend: str = "auto",
+        n_out: int = 1,
+        measure: bool = False,
+        interpret: bool = False,
+    ):
+        if backend not in BACKENDS:
+            raise ValueError(f"backend must be one of {BACKENDS}; got {backend!r}")
+        self.res = res
+        self.store = SlotStore(res, num_slots, n_out=n_out)
+        self.scheduler = SlotScheduler(num_slots)
+        self.interpret = interpret
+        self.tick_count = 0
+        self.results: Dict[int, SessionResult] = {}
+        self._dt_scan = jnp.asarray(res.dt, self.store.dtype)
+
+        if backend == "auto":
+            if measure:
+                ops.measure_impl_latency(self.store.n, num_slots, dt=float(res.dt))
+            # "ref" here = the plain-lax.scan XLA path over the planes layout
+            # (unpadded — measured faster than the core-layout scan at every
+            # (N, E) on CPU); "scan" remains available as the core-layout
+            # mode that reproduces solo drive() bit-for-bit.
+            backend = ops.choose_impl(self.store.n, num_slots)
+        self.backend = backend
+
+    # -- session lifecycle -------------------------------------------------
+
+    def submit(self, session: StreamSession) -> None:
+        u = coerce_input_series(
+            session.u_seq, self.store.n_in, self.store.dtype
+        )
+        if u.shape[0] == 0:
+            raise ValueError(f"session {session.sid}: empty input stream")
+        session.u_seq = np.asarray(u)
+        if session.readout is not None:
+            w = np.asarray(session.readout.w_out)
+            if w.shape != (self.store.n + 1, self.store.n_out):
+                raise ValueError(
+                    f"session {session.sid}: readout w_out shape {w.shape} "
+                    f"!= ({self.store.n + 1}, {self.store.n_out})"
+                )
+        self.scheduler.submit(session)
+
+    def _admit_pending(self) -> None:
+        for slot, sess in self.scheduler.admissions(self.store.free_slots()):
+            self.store.admit(
+                slot,
+                m0=sess.m0,
+                params=sess.params,
+                w_out=None if sess.readout is None else sess.readout.w_out,
+            )
+            sess._slot = slot
+            sess._t = 0
+            sess._states = []
+            sess._outs = []
+            sess._admitted_tick = self.tick_count
+
+    def _retire(self, slot: int) -> None:
+        sess = self.scheduler.retire(slot)
+        states = (
+            jnp.stack(sess._states) if sess.collect_states else None
+        )  # (T, N)
+        outputs = None
+        if sess.readout is not None:
+            outputs = jnp.stack(sess._outs)[sess.readout.washout :]
+        self.results[sess.sid] = SessionResult(
+            sid=sess.sid,
+            states=states,
+            outputs=outputs,
+            final_m=self.store.state_column(slot),
+            admitted_tick=sess._admitted_tick,
+            finished_tick=self.tick_count,
+            slot=slot,
+        )
+        self.store.retire(slot)
+
+    # -- the batched tick --------------------------------------------------
+
+    def _advance(self, u: jnp.ndarray) -> jnp.ndarray:
+        """One input tick for every slot; returns the (N, E) states plane."""
+        store = self.store
+        if self.backend == "scan":
+            store.m, states_plane = _tick_scan(
+                store.params_ensemble,
+                self.res.w_cp,
+                self.res.w_in,
+                store.m,
+                u,
+                store.active_mask,
+                self._dt_scan,
+                self.res.hold_steps,
+            )
+        else:
+            h = _h_plane(self.res.w_in, u, store.a_in_row())
+            store.m = ops.sto_rk4_integrate_planes(
+                store.m,
+                self.res.w_cp,
+                store.params_vec,
+                float(self.res.dt),
+                self.res.hold_steps,
+                h_in=h,
+                lane_mask=store.active_mask,
+                impl=self.backend,
+                n_inner=self.res.hold_steps,
+                interpret=self.interpret,
+            )
+            states_plane = store.m[0]
+        return states_plane
+
+    def step(self) -> bool:
+        """Admit, advance one tick, harvest. Returns False when drained."""
+        self._admit_pending()
+        running = self.scheduler.running
+        if not running:
+            return self.scheduler.has_work()
+
+        u = np.zeros((self.store.num_slots, self.store.n_in), self.store.dtype)
+        any_readout = False
+        for slot, sess in running.items():
+            u[slot] = sess.u_seq[sess._t]
+            any_readout = any_readout or sess.readout is not None
+        states_plane = self._advance(jnp.asarray(u))
+        outs = (
+            _apply_readouts(states_plane, self.store.w_out)  # (E, n_out)
+            if any_readout
+            else None
+        )
+        self.scheduler.on_tick()
+
+        for slot, sess in list(running.items()):
+            if sess.collect_states:
+                sess._states.append(states_plane[:, slot])
+            if sess.readout is not None:
+                sess._outs.append(outs[slot])
+            sess._t += 1
+            if sess._t >= sess.u_seq.shape[0]:
+                self._retire(slot)
+        self.tick_count += 1
+        return True
+
+    def run(
+        self, sessions: Optional[List[StreamSession]] = None
+    ) -> Dict[int, SessionResult]:
+        """Serve sessions to completion; returns sid -> SessionResult."""
+        for s in sessions or []:
+            self.submit(s)
+        while self.scheduler.has_work():
+            self.step()
+        return self.results

@@ -1,0 +1,66 @@
+"""Slot scheduler for the streaming reservoir engine.
+
+The reservoir analogue of continuous batching (serve/engine.py): a FIFO
+admission queue feeds a fixed pool of ensemble-lane slots. Admission and
+retirement happen between ticks — the batched integrate never stalls on a
+straggler session, and a freed slot is refilled on the very next tick.
+
+Kept deliberately dumb (FIFO + first-free-slot): policies like
+shortest-stream-first or tenant fairness plug in by overriding `pick`.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from collections import deque
+from typing import Deque, Dict, List, Optional, Tuple
+
+
+@dataclasses.dataclass
+class SchedulerStats:
+    submitted: int = 0
+    admitted: int = 0
+    retired: int = 0
+    ticks: int = 0
+    # aggregate session-ticks actually served (for throughput accounting)
+    session_ticks: int = 0
+
+
+class SlotScheduler:
+    def __init__(self, num_slots: int):
+        self.num_slots = num_slots
+        self.queue: Deque = deque()
+        self.running: Dict[int, object] = {}  # slot -> session
+        self.stats = SchedulerStats()
+
+    def submit(self, session) -> None:
+        self.queue.append(session)
+        self.stats.submitted += 1
+
+    def has_work(self) -> bool:
+        return bool(self.queue) or bool(self.running)
+
+    def pick(self) -> Optional[object]:
+        """Next session to admit; override for non-FIFO policies."""
+        return self.queue.popleft() if self.queue else None
+
+    def admissions(self, free_slots: List[int]) -> List[Tuple[int, object]]:
+        """Pair queued sessions with free slots (called between ticks)."""
+        placed = []
+        for slot in free_slots:
+            session = self.pick()
+            if session is None:
+                break
+            self.running[slot] = session
+            placed.append((slot, session))
+            self.stats.admitted += 1
+        return placed
+
+    def retire(self, slot: int) -> object:
+        session = self.running.pop(slot)
+        self.stats.retired += 1
+        return session
+
+    def on_tick(self) -> None:
+        self.stats.ticks += 1
+        self.stats.session_ticks += len(self.running)

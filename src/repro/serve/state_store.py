@@ -1,0 +1,137 @@
+"""Slot-batched reservoir state store.
+
+The serving engine's device-resident state, laid out exactly like the
+kernels want it (kernels/ref.py):
+
+    m      : (3, N, E)      magnetization planes — lane e is serving slot e
+    pv     : (NP, E)        packed per-tenant STOParams, one column per slot
+    w_out  : (E, N+1, n_out) per-session trained readouts (last row = bias)
+
+Admitting a session SPLICES its state into the batched arrays at a free
+slot (column writes via .at); retiring resets the column to the engine's
+template so idle lanes keep integrating harmlessly (unit-norm state, zero
+input, default params — no NaN sources) until partial-batch masking or the
+next admit. W^cp / W^in topology is shared across tenants: the paper's
+batched-ensemble speedup comes precisely from every lane contracting
+against the same coupling matrix, so per-tenant physics lives in the
+params/readout columns, not the topology.
+"""
+
+from __future__ import annotations
+
+from typing import List, Optional
+
+import jax.numpy as jnp
+
+from repro.core.constants import STOParams
+from repro.core.reservoir import Reservoir
+from repro.kernels import ref as kref
+
+
+class SlotStore:
+    def __init__(self, res: Reservoir, num_slots: int, n_out: int = 1):
+        self.res = res
+        self.num_slots = num_slots
+        self.n = int(res.m0.shape[0])
+        self.n_in = int(res.w_in.shape[1])
+        self.n_out = n_out
+        self.dtype = res.m0.dtype
+
+        self._m0_col = jnp.transpose(res.m0)  # (3, N) template column
+        self.m = jnp.broadcast_to(
+            self._m0_col[:, :, None], (3, self.n, num_slots)
+        ).astype(self.dtype)
+        self._slot_params: List[STOParams] = [res.params] * num_slots
+        self.w_out = jnp.zeros((num_slots, self.n + 1, n_out), self.dtype)
+        self._active = [False] * num_slots
+
+        # caches derived from _slot_params / _active; rebuilt lazily after
+        # admit/retire (rare) so the per-tick hot path reuses device arrays
+        self._pv: Optional[jnp.ndarray] = None
+        self._params_e: Optional[STOParams] = None
+        self._mask: Optional[jnp.ndarray] = None
+
+    # -- slot lifecycle ----------------------------------------------------
+
+    def free_slots(self) -> List[int]:
+        return [i for i, a in enumerate(self._active) if not a]
+
+    def admit(
+        self,
+        slot: int,
+        m0: Optional[jnp.ndarray] = None,  # (N, 3); None = reservoir default
+        params: Optional[STOParams] = None,  # per-tenant physics
+        w_out: Optional[jnp.ndarray] = None,  # (N+1, n_out) trained readout
+    ) -> None:
+        assert not self._active[slot], f"slot {slot} already occupied"
+        col = (
+            self._m0_col
+            if m0 is None
+            else jnp.transpose(jnp.asarray(m0, self.dtype))
+        )
+        self.m = self.m.at[:, :, slot].set(col)
+        self._slot_params[slot] = params if params is not None else self.res.params
+        if w_out is not None:
+            self.w_out = self.w_out.at[slot].set(
+                jnp.asarray(w_out, self.dtype).reshape(self.n + 1, self.n_out)
+            )
+        self._active[slot] = True
+        self._invalidate()
+
+    def retire(self, slot: int) -> None:
+        assert self._active[slot], f"slot {slot} not occupied"
+        self.m = self.m.at[:, :, slot].set(self._m0_col)
+        self._slot_params[slot] = self.res.params
+        self.w_out = self.w_out.at[slot].set(0.0)
+        self._active[slot] = False
+        self._invalidate()
+
+    def _invalidate(self):
+        self._pv = None
+        self._params_e = None
+        self._mask = None
+
+    # -- derived batched views --------------------------------------------
+
+    @property
+    def active_mask(self) -> jnp.ndarray:  # (E,) bool
+        if self._mask is None:
+            self._mask = jnp.asarray(self._active, dtype=bool)
+        return self._mask
+
+    @property
+    def num_active(self) -> int:
+        return sum(self._active)
+
+    @property
+    def params_vec(self) -> jnp.ndarray:
+        """Packed (NP, E) per-slot parameter columns (kernel backends)."""
+        if self._pv is None:
+            self._pv = kref.pack_params(
+                self.params_ensemble, self.num_slots, dtype=self.dtype
+            )
+        return self._pv
+
+    @property
+    def params_ensemble(self) -> STOParams:
+        """STOParams with (E, 1) leaves (scan backend / pack_params input)."""
+        if self._params_e is None:
+            leaves = {
+                f: jnp.stack(
+                    [
+                        jnp.asarray(getattr(p, f), self.dtype).reshape(())
+                        for p in self._slot_params
+                    ]
+                ).reshape(self.num_slots, 1)
+                for f in STOParams._fields
+            }
+            self._params_e = STOParams(**leaves)
+        return self._params_e
+
+    def a_in_row(self) -> jnp.ndarray:
+        """(E,) per-slot input gains (A_in is per-tenant, like the rest)."""
+        return self.params_ensemble.a_in.reshape(self.num_slots)
+
+    def state_column(self, slot: int) -> jnp.ndarray:
+        """Current (N, 3) magnetization of one slot (user layout)."""
+        return jnp.transpose(self.m[:, :, slot])

@@ -1,0 +1,75 @@
+"""Property-based conservation tests (require the `hypothesis` dev extra).
+
+Guarded with pytest.importorskip so a clean checkout without dev
+requirements still collects and runs the rest of the suite; install
+requirements-dev.txt to enable these.
+"""
+
+import pytest
+
+pytest.importorskip("hypothesis")
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+jax.config.update("jax_enable_x64", True)
+
+from repro.core import (
+    DT,
+    default_params,
+    integrate_scan,
+    llg_field,
+    make_coupling_matrix,
+    norm_error,
+)
+from repro.kernels import ops
+from repro.kernels import ref as kref
+
+
+def _field(params, w):
+    return lambda m, _: llg_field(m, params, w)
+
+
+class TestCoreConservationProperty:
+    @settings(max_examples=10, deadline=None)
+    @given(
+        seed=st.integers(0, 2**31 - 1),
+        n=st.integers(1, 12),
+        steps=st.integers(10, 300),
+    )
+    def test_norm_conserved_property(self, seed, n, steps):
+        """Conservation holds from ANY unit-norm initial state (|m|=1 is an
+        invariant manifold of Eq. 1, [BMS09])."""
+        p = default_params(jnp.float64)
+        w = jnp.asarray(make_coupling_matrix(n, seed=seed % 1000), jnp.float64)
+        rng = np.random.default_rng(seed)
+        m0 = rng.standard_normal((n, 3))
+        m0 /= np.linalg.norm(m0, axis=-1, keepdims=True)
+        mT, _ = integrate_scan(_field(p, w), jnp.asarray(m0), DT, steps)
+        # RK4 truncation drift ~3.5e-10/step; 300 steps => ~1e-7 headroom 10x
+        assert float(norm_error(mT)) < 1e-6
+        assert not bool(jnp.any(jnp.isnan(mT)))
+
+
+class TestKernelConservationProperty:
+    @settings(max_examples=8, deadline=None)
+    @given(
+        n=st.integers(1, 40),
+        e=st.integers(1, 6),
+        seed=st.integers(0, 10_000),
+        steps=st.sampled_from([4, 8, 12]),
+    )
+    def test_kernel_conserves_norm_any_state(self, n, e, seed, steps):
+        p = default_params(jnp.float32)
+        w = jnp.asarray(make_coupling_matrix(n, seed=seed % 97), jnp.float32)
+        rng = np.random.default_rng(seed)
+        m0 = rng.standard_normal((e, n, 3)).astype(np.float32)
+        m0 /= np.linalg.norm(m0, axis=-1, keepdims=True)
+        pv = kref.pack_params(p, e, jnp.float32)
+        out = ops.sto_rk4_integrate(
+            jnp.asarray(m0), w, pv, float(DT), steps, impl="fused", interpret=True
+        )
+        assert float(norm_error(out)) < 1e-4
+        assert np.all(np.isfinite(np.asarray(out)))

@@ -1,0 +1,326 @@
+"""Streaming reservoir engine: correctness contract + scheduling.
+
+The engine's contract (mirroring test_serve_engine for the LLM engine):
+every session's streamed states / readout outputs are element-wise close —
+same dtype/tolerance family as tests/test_kernels_sto.py — to running that
+stream alone through reservoir.drive + predict, including sessions admitted
+and retired mid-run while the batch keeps advancing.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (
+    coerce_input_series,
+    drive,
+    fit_ridge,
+    make_reservoir,
+    predict,
+)
+from repro.kernels import ops
+from repro.serve.reservoir import ReservoirEngine, SessionResult, StreamSession
+from repro.serve.scheduler import SlotScheduler
+
+ATOL = 5e-5  # tests/test_kernels_sto.py's f32 tolerance
+
+
+def _sessions(res, count, rng, lengths=(8, 11, 14), with_readout=True, reg=1e-3):
+    """Build sessions + solo references (drive + predict per stream)."""
+    sessions, refs = [], {}
+    for sid in range(count):
+        t = lengths[sid % len(lengths)]
+        u = rng.uniform(0.0, 0.5, size=(t, 1)).astype(np.float32)
+        _, states = drive(res, jnp.asarray(u))
+        ro = None
+        pred = None
+        if with_readout:
+            ro = fit_ridge(states, jnp.asarray(u[:, 0]), washout=2, reg=reg)
+            pred = predict(ro, states)
+        sessions.append(StreamSession(sid=sid, u_seq=u, readout=ro))
+        refs[sid] = (states, pred)
+    return sessions, refs
+
+
+def _assert_matches(results, refs, atol=ATOL):
+    assert set(results) == set(refs)
+    for sid, r in results.items():
+        s_ref, p_ref = refs[sid]
+        np.testing.assert_allclose(
+            np.asarray(r.states), np.asarray(s_ref), atol=atol,
+            err_msg=f"states mismatch for session {sid}",
+        )
+        if p_ref is not None:
+            np.testing.assert_allclose(
+                np.asarray(r.outputs), np.asarray(p_ref), atol=atol,
+                err_msg=f"outputs mismatch for session {sid}",
+            )
+
+
+class TestEngineMatchesSolo:
+    @pytest.mark.parametrize("backend", ["scan", "ref"])
+    def test_streams_match_solo_drive_and_predict(self, backend):
+        """Slot-batched execution must not change any tenant's math — on the
+        core-layout exact-parity backend AND the planes-layout serving
+        default."""
+        res = make_reservoir(n=16, n_in=1, hold_steps=20, dtype=jnp.float32)
+        eng = ReservoirEngine(res, num_slots=4, backend=backend)
+        sessions, refs = _sessions(res, 10, np.random.default_rng(0))
+        results = eng.run(sessions)
+        _assert_matches(results, refs)
+
+    def test_mid_run_admit_and_retire(self):
+        """More sessions than slots: later sessions are admitted into slots
+        freed mid-run, and still match their solo references."""
+        res = make_reservoir(n=12, n_in=1, hold_steps=10, dtype=jnp.float32)
+        eng = ReservoirEngine(res, num_slots=3, backend="scan")
+        sessions, refs = _sessions(res, 9, np.random.default_rng(1), lengths=(5, 9, 13))
+        results = eng.run(sessions)
+        _assert_matches(results, refs)
+        admits = sorted(r.admitted_tick for r in results.values())
+        assert admits[0] == 0 and admits[-1] > 0  # mid-run admissions happened
+        assert eng.scheduler.stats.retired == 9
+
+    def test_64_concurrent_sessions(self):
+        """Acceptance floor: >= 64 concurrent sessions with slot turnover."""
+        res = make_reservoir(n=8, n_in=1, hold_steps=5, dtype=jnp.float32)
+        eng = ReservoirEngine(res, num_slots=64, backend="auto")
+        sessions, refs = _sessions(
+            res, 80, np.random.default_rng(2), lengths=(4, 6, 8)
+        )
+        results = eng.run(sessions)
+        assert len(results) == 80
+        assert max(len(eng.store.free_slots()), 0) == 64  # all drained
+        # full batch was actually concurrent at some point
+        assert eng.scheduler.stats.session_ticks > 64
+        _assert_matches(results, refs)
+
+    def test_per_tenant_params_lanes(self):
+        """Tenants with different physics share a batch but keep their own
+        dynamics: each matches a solo reservoir with that tenant's params."""
+        res = make_reservoir(n=8, n_in=1, hold_steps=10, dtype=jnp.float32)
+        rng = np.random.default_rng(3)
+        u = rng.uniform(0.0, 0.5, size=(8, 1)).astype(np.float32)
+        currents = [1e-3, 2.5e-3, 4e-3]
+        sessions, refs = [], {}
+        for sid, cur in enumerate(currents):
+            p = res.params._replace(current=jnp.asarray(cur, jnp.float32))
+            solo = res._replace(params=p)
+            _, states = drive(solo, jnp.asarray(u))
+            refs[sid] = (states, None)
+            sessions.append(StreamSession(sid=sid, u_seq=u, params=p))
+        eng = ReservoirEngine(res, num_slots=4, backend="scan")
+        results = eng.run(sessions)
+        _assert_matches(results, refs)
+        # and the dynamics genuinely differ across lanes
+        assert not np.allclose(
+            np.asarray(results[0].states), np.asarray(results[2].states)
+        )
+
+    def test_session_resume_from_final_state(self):
+        """final_m resumes a stream: two half-streams == one full stream."""
+        res = make_reservoir(n=10, n_in=1, hold_steps=10, dtype=jnp.float32)
+        rng = np.random.default_rng(4)
+        u = rng.uniform(0.0, 0.5, size=(12, 1)).astype(np.float32)
+        _, full = drive(res, jnp.asarray(u))
+        eng = ReservoirEngine(res, num_slots=2, backend="scan")
+        first = eng.run([StreamSession(sid=0, u_seq=u[:7])])[0]
+        second = eng.run([StreamSession(sid=1, u_seq=u[7:], m0=first.final_m)])[1]
+        stitched = jnp.concatenate([first.states, second.states])
+        np.testing.assert_allclose(np.asarray(stitched), np.asarray(full), atol=ATOL)
+
+
+class TestKernelBackends:
+    @pytest.mark.parametrize("backend,interpret", [("ref", False), ("fused", True), ("tiled", True)])
+    def test_backend_matches_solo(self, backend, interpret):
+        """The Pallas-layout backends serve the same numbers (interpret mode
+        on CPU; tiny shapes — the pad-to-128 path is exercised either way)."""
+        res = make_reservoir(n=8, n_in=1, hold_steps=4, dtype=jnp.float32)
+        rng = np.random.default_rng(5)
+        eng = ReservoirEngine(res, num_slots=3, backend=backend, interpret=interpret)
+        sessions, refs = _sessions(
+            res, 4, rng, lengths=(3, 5), with_readout=False
+        )
+        results = eng.run(sessions)
+        _assert_matches(results, refs)
+
+    def test_auto_backend_resolves(self):
+        res = make_reservoir(n=8, n_in=1, hold_steps=4, dtype=jnp.float32)
+        eng = ReservoirEngine(res, num_slots=2, backend="auto")
+        assert eng.backend in ("scan", "ref", "fused", "tiled")
+
+    def test_measured_latency_table_drives_dispatch(self):
+        """A measured entry overrides the heuristic for its padded shape."""
+        try:
+            import jax
+
+            platform = jax.default_backend()
+            ops.register_impl_choice(333, 7, "tiled", platform=platform)
+            assert ops.choose_impl(333, 7) == "tiled"
+            # a different padded shape is unaffected
+            assert ops.choose_impl(8, 8) != "tiled" or platform == "tpu"
+        finally:
+            ops._LATENCY_TABLE.clear()
+
+    def test_table_update_applies_to_already_jitted_shape(self):
+        """impl="auto" is resolved OUTSIDE the jit cache: registering a new
+        winner changes the path taken on the next call at the same shape."""
+        from repro.core import DT, default_params, initial_magnetization, make_coupling_matrix
+        from repro.kernels import ref as kref
+
+        n, e = 8, 4
+        w = jnp.asarray(make_coupling_matrix(n, seed=0), jnp.float32)
+        m0 = jnp.broadcast_to(initial_magnetization(n, jnp.float32), (e, n, 3))
+        pv = kref.pack_params(default_params(jnp.float32), e, jnp.float32)
+        try:
+            a = ops.sto_rk4_integrate(m0, w, pv, float(DT), 2)  # auto, cached
+            ops.register_impl_choice(n, e, "bogus-impl")
+            with pytest.raises(ValueError, match="unknown impl"):
+                # proof the re-resolved table entry reached dispatch
+                ops.sto_rk4_integrate(m0, w, pv, float(DT), 2)
+        finally:
+            ops._LATENCY_TABLE.clear()
+        b = ops.sto_rk4_integrate(m0, w, pv, float(DT), 2)
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+    def test_measure_impl_latency_registers_winner(self):
+        try:
+            timings = ops.measure_impl_latency(8, 4, n_steps=2, reps=1)
+            assert timings  # at least the oracle ran
+            assert ops.choose_impl(8, 4) in timings
+        finally:
+            ops._LATENCY_TABLE.clear()
+
+
+class TestPartialBatchMasking:
+    def test_masked_lanes_frozen(self):
+        """ops lane_mask: False lanes return bit-identical input state."""
+        from repro.core import DT, default_params, initial_magnetization, make_coupling_matrix
+        from repro.kernels import ref as kref
+
+        n, e = 8, 4
+        p = default_params(jnp.float32)
+        w = jnp.asarray(make_coupling_matrix(n, seed=0), jnp.float32)
+        m0 = ops.to_planes(
+            jnp.broadcast_to(initial_magnetization(n, jnp.float32), (e, n, 3))
+        )
+        pv = kref.pack_params(p, e, jnp.float32)
+        mask = jnp.asarray([True, False, True, False])
+        out = ops.sto_rk4_integrate_planes(
+            m0, w, pv, float(DT), 4, lane_mask=mask, impl="ref"
+        )
+        np.testing.assert_array_equal(np.asarray(out[:, :, 1]), np.asarray(m0[:, :, 1]))
+        np.testing.assert_array_equal(np.asarray(out[:, :, 3]), np.asarray(m0[:, :, 3]))
+        assert not np.allclose(np.asarray(out[:, :, 0]), np.asarray(m0[:, :, 0]))
+
+    def test_driven_integrate_planes_matches_drive(self):
+        """h_in plane == drive()'s held input field (one hold window)."""
+        res = make_reservoir(n=6, n_in=1, hold_steps=7, dtype=jnp.float32)
+        from repro.kernels import ref as kref
+
+        u0 = jnp.asarray([[0.3]], jnp.float32)
+        _, states = drive(res, u0)  # one tick
+        pv = kref.pack_params(res.params, 1, jnp.float32)
+        h = (res.params.a_in * (res.w_in @ u0[0]))[:, None]  # (N, 1)
+        out = ops.sto_rk4_integrate_planes(
+            ops.to_planes(res.m0), res.w_cp, pv, float(res.dt), res.hold_steps,
+            h_in=h, impl="ref",
+        )
+        np.testing.assert_allclose(
+            np.asarray(out[0, :, 0]), np.asarray(states[0]), atol=ATOL
+        )
+
+
+class TestScheduler:
+    def test_fifo_order_and_slot_reuse(self):
+        sched = SlotScheduler(2)
+        for sid in range(4):
+            sched.submit(f"s{sid}")
+        placed = sched.admissions([0, 1])
+        assert placed == [(0, "s0"), (1, "s1")]
+        assert sched.admissions([]) == []
+        assert sched.retire(0) == "s0"
+        assert sched.admissions([0]) == [(0, "s2")]
+        assert sched.stats.admitted == 3 and sched.stats.retired == 1
+
+    def test_has_work(self):
+        sched = SlotScheduler(1)
+        assert not sched.has_work()
+        sched.submit("x")
+        assert sched.has_work()
+        sched.admissions([0])
+        assert sched.has_work()
+        sched.retire(0)
+        assert not sched.has_work()
+
+
+class TestDriveContract:
+    def test_accepts_1d_for_single_input(self):
+        res = make_reservoir(n=6, n_in=1, hold_steps=5, dtype=jnp.float32)
+        u = np.linspace(0, 0.5, 7).astype(np.float32)
+        _, s1 = drive(res, u)
+        _, s2 = drive(res, u[:, None])
+        np.testing.assert_array_equal(np.asarray(s1), np.asarray(s2))
+
+    def test_rejects_transposed_row_vector(self):
+        res = make_reservoir(n=6, n_in=1, hold_steps=5, dtype=jnp.float32)
+        with pytest.raises(ValueError, match=r"\(T, 1\)"):
+            drive(res, np.zeros((1, 7), np.float32))
+
+    def test_rejects_1d_for_multi_input(self):
+        res = make_reservoir(n=6, n_in=3, hold_steps=5, dtype=jnp.float32)
+        with pytest.raises(ValueError, match="n_in == 3"):
+            drive(res, np.zeros(7, np.float32))
+
+    def test_rejects_wrong_width(self):
+        assert coerce_input_series(np.zeros((4, 2)), 2, jnp.float32).shape == (4, 2)
+        with pytest.raises(ValueError, match=r"\(T, 2\)"):
+            coerce_input_series(np.zeros((4, 3)), 2, jnp.float32)
+
+    def test_resume_m0_equivalent_to_one_drive(self):
+        # chunked drive re-runs the identical op sequence, so equality is
+        # exact (bitwise) even in f32
+        res = make_reservoir(n=8, n_in=1, hold_steps=10, dtype=jnp.float32)
+        u = np.random.default_rng(6).uniform(0, 0.5, size=(10, 1)).astype(np.float32)
+        mT_full, s_full = drive(res, jnp.asarray(u))
+        m_half, s_a = drive(res, jnp.asarray(u[:5]))
+        mT_res, s_b = drive(res, jnp.asarray(u[5:]), m0=m_half)
+        np.testing.assert_allclose(
+            np.asarray(jnp.concatenate([s_a, s_b])), np.asarray(s_full), rtol=1e-12
+        )
+        np.testing.assert_allclose(np.asarray(mT_res), np.asarray(mT_full), rtol=1e-12)
+
+    def test_rejects_bad_m0_shape(self):
+        res = make_reservoir(n=8, n_in=1, hold_steps=5, dtype=jnp.float32)
+        with pytest.raises(ValueError, match="m0 must have shape"):
+            drive(res, np.zeros((3, 1), np.float32), m0=np.zeros((4, 3)))
+
+
+class TestEngineValidation:
+    def test_rejects_bad_stream_shape(self):
+        res = make_reservoir(n=6, n_in=1, hold_steps=5, dtype=jnp.float32)
+        eng = ReservoirEngine(res, num_slots=2, backend="scan")
+        with pytest.raises(ValueError, match=r"\(T, 1\)"):
+            eng.submit(StreamSession(sid=0, u_seq=np.zeros((1, 9), np.float32)))
+
+    def test_rejects_empty_stream(self):
+        res = make_reservoir(n=6, n_in=1, hold_steps=5, dtype=jnp.float32)
+        eng = ReservoirEngine(res, num_slots=2, backend="scan")
+        with pytest.raises(ValueError, match="empty"):
+            eng.submit(StreamSession(sid=0, u_seq=np.zeros((0, 1), np.float32)))
+
+    def test_rejects_unknown_backend(self):
+        res = make_reservoir(n=6, n_in=1, hold_steps=5, dtype=jnp.float32)
+        with pytest.raises(ValueError, match="backend"):
+            ReservoirEngine(res, num_slots=2, backend="warp")
+
+    def test_rejects_misshapen_readout_at_submit(self):
+        from repro.core import Readout
+
+        res = make_reservoir(n=6, n_in=1, hold_steps=5, dtype=jnp.float32)
+        eng = ReservoirEngine(res, num_slots=2, backend="scan")
+        bad = Readout(w_out=jnp.zeros((7,), jnp.float32), washout=0)  # 1-D
+        with pytest.raises(ValueError, match="w_out shape"):
+            eng.submit(
+                StreamSession(sid=0, u_seq=np.zeros((3, 1), np.float32), readout=bad)
+            )
