@@ -8,16 +8,18 @@ import numpy as np
 import jax.numpy as jnp
 
 from benchmarks.common import csv_row, time_fn
-from repro.core import drive, fit_ridge, make_reservoir, nmse, predict, tasks
+from repro.api import compile_plan, make_spec
+from repro.core import fit_ridge, nmse, predict, tasks
 
 
 def run(print_fn=print):
     rows = []
     u, y = tasks.narma_series(400, order=2, seed=0)
-    res = make_reservoir(n=32, n_in=1, hold_steps=30, dtype=jnp.float64)
+    spec = make_spec(n=32, n_in=1, hold_steps=30, dtype=jnp.float64)
+    sim = compile_plan(spec, impl="scan")
 
-    t = time_fn(lambda: drive(res, jnp.asarray(u[:, None]))[1], reps=2)
-    _, states = drive(res, jnp.asarray(u[:, None]))
+    t = time_fn(lambda: sim.drive(jnp.asarray(u[:, None]))[1], reps=2)
+    _, states = sim.drive(jnp.asarray(u[:, None]))
     rows.append(csv_row("reservoir_drive_400samples", t * 1e6,
                         f"us_per_sample_{t/400*1e6:.1f}"))
     print_fn(rows[-1])
@@ -30,7 +32,7 @@ def run(print_fn=print):
 
     rng = np.random.default_rng(1)
     u2 = rng.uniform(-1, 1, 400)
-    _, st2 = drive(res, jnp.asarray(u2[:, None]))
+    _, st2 = sim.drive(jnp.asarray(u2[:, None]))
     tg = tasks.delay_memory_targets(u2, 8)
     ro2 = fit_ridge(st2, jnp.asarray(tg), washout=washout, reg=1e-8)
     mc = tasks.memory_capacity(np.asarray(predict(ro2, st2)), tg[washout:])

@@ -2,9 +2,48 @@
 
 Prints ``name,us_per_call,derived`` CSV rows (shared format). Individual
 modules run standalone too:  python -m benchmarks.table2_timing
+
+``--smoke`` runs a minutes-not-hours subset for CI: a quick serving-
+throughput grid (written to a scratch file, NOT BENCH_serve.json) plus a
+compile-and-drive pass through every unified-API entry point, so the CI
+leg exercises plan compilation, dispatch-table loading, and the serving
+engine end-to-end without paying for the full grids.
 """
 
 from __future__ import annotations
+
+import argparse
+import os
+import tempfile
+
+
+def smoke() -> None:
+    import jax.numpy as jnp
+    import numpy as np
+
+    from benchmarks import serve_throughput
+    from repro.api import ExecPlan, compile_plan, make_spec
+    from repro.kernels import dispatch_table
+
+    print("name,us_per_call,derived")
+
+    # unified API end-to-end: compile (consults the persisted dispatch
+    # table), then touch each entry point once
+    spec = make_spec(n=16, n_in=1, hold_steps=5, dtype=jnp.float32)
+    sim = compile_plan(spec, ensemble=4)
+    u = np.random.default_rng(0).uniform(0.0, 0.5, size=(6, 1)).astype(np.float32)
+    sim.drive_batch(u)
+    compile_plan(spec, ExecPlan(impl="scan")).drive(u)
+    sim_solo = compile_plan(spec)
+    sim_solo.drive(u)
+    print(f"smoke_compile_plan,0.0,impl_{sim.impl}")
+    loaded = dispatch_table.ensure_loaded()  # 0 if already loaded: fine
+    print(f"smoke_dispatch_table,0.0,loaded_{loaded}_entries")
+
+    # quick serving grid to a scratch path so the committed trajectory
+    # (BENCH_serve.json) only changes when the full benchmark runs
+    out = os.path.join(tempfile.gettempdir(), "BENCH_serve.smoke.json")
+    serve_throughput.run(out_path=out, quick=True)
 
 
 def main() -> None:
@@ -29,4 +68,11 @@ def main() -> None:
 
 
 if __name__ == "__main__":
-    main()
+    ap = argparse.ArgumentParser()
+    ap.add_argument(
+        "--smoke",
+        action="store_true",
+        help="fast CI subset: quick serving grid + unified-API compile/drive",
+    )
+    args = ap.parse_args()
+    smoke() if args.smoke else main()

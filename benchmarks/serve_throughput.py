@@ -10,9 +10,15 @@ aggregate tick). Reported:
     sessions/sec  streams completed per second for length-TICKS streams
     speedup     batched aggregate throughput over sequential aggregate
 
+Engines are built through the unified execution API: one SimSpec per N,
+compiled against ExecPlans of different ensemble widths — so the backend
+each cell reports is exactly what `repro.api.compile_plan` resolved from
+the measured-latency dispatch table / platform gate for that (N, E).
+
 Emits the shared `name,us_per_call,derived` CSV rows and writes
 BENCH_serve.json (benchmarks/run.py wires it into the suite) so future PRs
-can track the serving-perf trajectory.
+can track the serving-perf trajectory. `kernels.dispatch_table
+.seed_from_bench` turns that JSON back into persisted dispatch entries.
 
     PYTHONPATH=src python -m benchmarks.serve_throughput [--quick]
 """
@@ -27,7 +33,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from benchmarks.common import csv_row
-from repro.core import make_reservoir
+from repro.api import ExecPlan, compile_plan, make_spec
 from repro.serve.reservoir import ReservoirEngine, StreamSession
 
 NS = (16, 128, 1024)
@@ -68,14 +74,14 @@ def _tick_time(engine, sessions) -> float:
 
 
 def bench_cell(n: int, e: int, print_fn=print):
-    res = make_reservoir(n=n, n_in=1, hold_steps=HOLD_STEPS, dtype=jnp.float32)
+    spec = make_spec(n=n, n_in=1, hold_steps=HOLD_STEPS, dtype=jnp.float32)
     rng = np.random.default_rng(0)
     ticks = WARM_TICKS + MEASURED_TICKS + 2
 
-    batched = ReservoirEngine(res, num_slots=e, backend="auto")
+    batched = ReservoirEngine(compile_plan(spec, ensemble=e))
     t_batched = _tick_time(batched, _mk_sessions(e, ticks, 1, rng))
 
-    solo = ReservoirEngine(res, num_slots=1, backend=batched.backend)
+    solo = ReservoirEngine(compile_plan(spec, ExecPlan(impl=batched.backend, ensemble=1)))
     t_solo = _tick_time(solo, _mk_sessions(1, ticks, 1, rng, base_sid=10_000))
 
     # sequential serving of E streams costs E solo ticks per aggregate tick

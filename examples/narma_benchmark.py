@@ -18,7 +18,8 @@ jax.config.update("jax_enable_x64", True)
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import default_params, drive, fit_ridge, make_reservoir, nmse, predict, tasks
+from repro.api import compile_plan, make_spec
+from repro.core import default_params, fit_ridge, nmse, predict, tasks
 
 
 def main():
@@ -38,12 +39,13 @@ def main():
     total = args.train + args.test
     u, y = tasks.narma_series(total, order=args.order, seed=0)
     params = default_params(jnp.float64)._replace(a_in=jnp.float64(args.a_in))
-    res = make_reservoir(
+    spec = make_spec(
         n=args.n, n_in=1, hold_steps=args.hold, dtype=jnp.float64, params=params
     )
+    sim = compile_plan(spec, impl="scan")
     print(f"driving N={args.n} reservoir over {total} samples "
           f"({total * args.hold} RK4 steps)...")
-    _, states = drive(res, jnp.asarray(u[:, None]))
+    _, states = sim.drive(jnp.asarray(u[:, None]))
     # readout features: node states + their squares + the raw input
     # (standard for STO reservoirs; the readout stays linear-in-features)
     feats = jnp.concatenate(

@@ -1,10 +1,12 @@
 """Ensemble parameter sweep — the paper's motivating workload (§2: "finding
 optimal physical parameters ... is a time-consuming effort").
 
-Sweeps the drive current I across an ensemble of E reservoirs SIMULTANEOUSLY:
-on TPU the coupling becomes an (N x N) @ (N x E) MXU matmul instead of E
-sequential mat-vecs (DESIGN.md §2.1). Reports a per-member signal-variance
-proxy for dynamic richness.
+Sweeps the drive current I across an ensemble of E reservoirs SIMULTANEOUSLY
+through the unified execution API: one SimSpec carrying the swept (E, 1)
+parameter leaves, compiled against an ExecPlan of width E. On TPU the
+coupling becomes an (N x N) @ (N x E) MXU matmul instead of E sequential
+mat-vecs (DESIGN.md §2.1). Reports a per-member signal-variance proxy for
+dynamic richness.
 
 Run:  PYTHONPATH=src python examples/parameter_sweep.py [--n 32] [--e 8]
 """
@@ -18,12 +20,12 @@ jax.config.update("jax_enable_x64", True)
 import jax.numpy as jnp
 import numpy as np
 
+from repro.api import SimSpec, compile_plan
 from repro.core import (
     DT,
     broadcast_params,
     default_params,
     initial_magnetization,
-    integrate_ensemble,
     make_coupling_matrix,
     norm_error,
 )
@@ -45,9 +47,12 @@ def main():
     )
 
     print(f"sweeping I over {args.e} ensemble members x N={args.n} oscillators")
-    mT, traj = integrate_ensemble(
-        pe, w, m0, DT, args.steps, save_every=args.steps // 50
+    spec = SimSpec(
+        params=pe, w_cp=w, w_in=jnp.zeros((args.n, 1), jnp.float64),
+        m0=m0[0], dt=DT, hold_steps=1,
     )
+    sim = compile_plan(spec, impl="scan", ensemble=args.e)
+    mT, traj = sim.integrate(args.steps, m0=m0, save_every=args.steps // 50)
     assert float(norm_error(mT)) < 1e-5
 
     print(f"{'I [mA]':>8s} {'var(m^x)':>10s} {'mean osc amp':>13s}")

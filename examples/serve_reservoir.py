@@ -8,8 +8,8 @@ scenario-diversity the engine exists for:
   tenant 1: sine approximation (nonlinear map of the integrated input)
   tenant 2: delay-line memory (u[t-2]) at a different drive current
 
-Each tenant's readout is trained offline with drive + fit_ridge, then the
-engine streams fresh inputs through all tenants concurrently: one batched
+Each tenant's readout is trained offline with CompiledSim.drive +
+fit_ridge (the unified execution API), then the engine streams fresh inputs through all tenants concurrently: one batched
 RK4 integrate advances every session per tick. Outputs are checked against
 running each stream solo.
 
@@ -19,7 +19,8 @@ Run:  PYTHONPATH=src python examples/serve_reservoir.py
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import drive, fit_ridge, make_reservoir, nmse, predict, tasks
+from repro.api import compile_plan, make_spec
+from repro.core import fit_ridge, nmse, predict, tasks
 from repro.serve.reservoir import ReservoirEngine, StreamSession
 
 N = 64
@@ -29,29 +30,30 @@ T_SERVE = 120
 WASHOUT = 40
 
 
-def train_readout(res, u, y):
-    _, states = drive(res, jnp.asarray(u[:, None], jnp.float32))
+def train_readout(sim, u, y):
+    _, states = sim.drive(jnp.asarray(u[:, None], jnp.float32))
     return fit_ridge(
         states, jnp.asarray(y[:, None], jnp.float32), washout=WASHOUT, reg=1e-6
     )
 
 
 def main():
-    res = make_reservoir(n=N, n_in=1, hold_steps=HOLD, dtype=jnp.float32)
-    hot_params = res.params._replace(current=jnp.asarray(4e-3, jnp.float32))
-    hot_res = res._replace(params=hot_params)
+    spec = make_spec(n=N, n_in=1, hold_steps=HOLD, dtype=jnp.float32)
+    sim = compile_plan(spec, impl="scan")
+    hot_params = spec.params._replace(current=jnp.asarray(4e-3, jnp.float32))
+    hot_sim = compile_plan(spec._replace(params=hot_params), impl="scan")
 
     # --- offline: each tenant trains a readout for its task ---------------
     u_n, y_n = tasks.narma_series(T_TRAIN, order=2, seed=0)
-    ro_narma = train_readout(res, u_n, y_n)
+    ro_narma = train_readout(sim, u_n, y_n)
 
     u_s, y_s = tasks.sine_task(T_TRAIN, seed=1)
-    ro_sine = train_readout(res, u_s, y_s)
+    ro_sine = train_readout(sim, u_s, y_s)
 
     rng = np.random.default_rng(2)
     u_d = rng.uniform(0.0, 0.5, T_TRAIN)
     y_d = tasks.delay_memory_targets(u_d, max_delay=2)[:, 1]  # u[t-2]
-    ro_delay = train_readout(hot_res, u_d, y_d)
+    ro_delay = train_readout(hot_sim, u_d, y_d)
 
     # --- online: stream the tasks through the shared engine ---------------
     # (a 64-node reservoir has little out-of-sample skill — the point here
@@ -69,18 +71,18 @@ def main():
         ),
     ]
 
-    eng = ReservoirEngine(res, num_slots=4)
+    eng = ReservoirEngine(compile_plan(spec, ensemble=4))
     results = eng.run(sessions)
     print(f"backend={eng.backend}  slots=4  tenants={len(results)}")
 
-    for sid, (tenant_res, ro, y) in {
-        0: (res, ro_narma, y1), 1: (res, ro_sine, y2), 2: (hot_res, ro_delay, y3)
+    for sid, (tenant_sim, ro, y) in {
+        0: (sim, ro_narma, y1), 1: (sim, ro_sine, y2), 2: (hot_sim, ro_delay, y3)
     }.items():
         r = results[sid]
         err = nmse(r.outputs, jnp.asarray(y[WASHOUT:, None], jnp.float32))
         # solo check: the same stream alone gives the same outputs
         u = sessions[sid].u_seq
-        _, states = drive(tenant_res, jnp.asarray(u))
+        _, states = tenant_sim.drive(jnp.asarray(u))
         solo = predict(ro, states)
         dev = float(jnp.max(jnp.abs(r.outputs - solo)))
         print(f"  tenant {sid}: NMSE={err:.3f}  |engine - solo|={dev:.2e}")

@@ -1,7 +1,10 @@
 """repro: virtual reservoir acceleration on TPU (JAX + Pallas).
 
 Public surface:
-    repro.core        the paper's coupled-STO reservoir engine
+    repro.api         unified execution API: SimSpec x ExecPlan ->
+                      compile_plan -> CompiledSim (drive / drive_batch /
+                      integrate / tick)
+    repro.core        the paper's coupled-STO reservoir physics
     repro.kernels     Pallas TPU kernels (+ interpret-mode oracles)
     repro.models      assigned-architecture zoo (build_model)
     repro.configs     arch registry (get_config / list_configs)

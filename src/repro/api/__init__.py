@@ -1,0 +1,29 @@
+"""Unified execution API: SimSpec (what to simulate) x ExecPlan (how to run).
+
+The paper's core claim is that the SAME reservoir evolution should be
+dispatched to whichever implementation the hardware favors; this package is
+that separation as an API:
+
+    spec = api.make_spec(n=1024, hold_steps=100)           # pure physics
+    sim = api.compile_plan(spec, ensemble=64)              # resolved exec
+    mT, states = sim.drive_batch(U)                        # jit-cached run
+
+Every impl-dispatch / padding / ensemble / sharding decision in the repo is
+made inside `compile_plan`; `core/reservoir.drive`,
+`core/ensemble.integrate_ensemble{,_sharded}` are deprecation shims over
+it, and `serve/reservoir.ReservoirEngine` serves from a CompiledSim —
+sharded serving is just `ExecPlan(mesh=...)`.
+"""
+
+from repro.api.spec import SimSpec, make_spec
+from repro.api.plan import ExecPlan, PLAN_IMPLS
+from repro.api.compiled import CompiledSim, compile_plan
+
+__all__ = [
+    "SimSpec",
+    "make_spec",
+    "ExecPlan",
+    "PLAN_IMPLS",
+    "CompiledSim",
+    "compile_plan",
+]

@@ -1,0 +1,543 @@
+"""compile_plan(SimSpec, ExecPlan) -> CompiledSim: the one execution surface.
+
+All impl dispatch, padding, ensemble batching, and sharding decisions are
+made HERE, once, at plan compilation:
+
+  - "auto" impls resolve through `kernels.ops.choose_impl`, which consults
+    the measured-latency dispatch table — in-process measurements first,
+    then the persisted per-platform JSON (`kernels/dispatch_table.py`,
+    seeded from BENCH_serve.json) — before the platform gate / VMEM
+    heuristic. `ExecPlan(measure=True)` times the candidates for this
+    (N, E) first and pins the winner.
+  - mesh plans lower the same physics through shard_map with the
+    PartitionSpecs from `distributed.sharding.reservoir_specs`.
+
+The jit-cached entry points on the returned CompiledSim:
+
+  drive(u, m0=None)            solo reservoir over an input series
+  drive_batch(U, m0=None)      E lanes over shared or per-lane series
+  integrate(n_steps, ...)      free-run (u = 0) ensemble integration
+  tick(m, u, lane_mask=None)   ONE hold window for a slot batch — the
+                               serving engine's hot path
+
+All jit'd workers are module-level, so every CompiledSim for the same
+(static-shape, impl) signature shares one compilation.
+
+Numerical contract (pinned by tests/test_api_plan.py): impl="scan" runs the
+exact op sequence of the legacy `reservoir.drive` / `ensemble
+.integrate_ensemble` paths (bit-identical results); the planes impls
+("ref"/"fused"/"tiled") and sharded plans agree within the kernel test
+suite's tolerance.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import integrators, sto
+from repro.core.constants import STOParams
+from repro.kernels import ops
+from repro.kernels import ref as kref
+
+from repro.api.plan import ExecPlan
+from repro.api.spec import SimSpec
+from repro.api import sharded as _sharded
+
+PLANES_IMPLS = ("ref", "fused", "tiled")
+
+
+# ---------------------------------------------------------------------------
+# jit'd workers — core (E, N, 3) layout ("scan" impl; legacy-exact math)
+# ---------------------------------------------------------------------------
+
+
+@functools.partial(jax.jit, static_argnames=("hold_steps", "tableau_name"))
+def _drive_scan(
+    params: STOParams,  # scalar leaves
+    w_cp: jnp.ndarray,
+    w_in: jnp.ndarray,
+    m0: jnp.ndarray,  # (N, 3)
+    u_seq: jnp.ndarray,  # (T, N_in)
+    dt,
+    hold_steps: int,
+    tableau_name: str = "rk4",
+):
+    """Solo drive — the op sequence formerly in core/reservoir._drive_scan,
+    moved verbatim so the legacy `drive` shim stays bit-exact."""
+    tableau = integrators.TABLEAUX[tableau_name]
+
+    def field(m, h_in_x):
+        return sto.llg_field(m, params, w_cp, h_in_x)
+
+    step = integrators.make_step(field, tableau)
+    dt = jnp.asarray(dt, dtype=m0.dtype)
+
+    def per_sample(m, u_t):
+        # Input held piecewise-constant over the hold window (paper: the
+        # input signal is a discrete-point series).
+        h_in_x = params.a_in * (w_in @ u_t)  # (N,)
+
+        def inner(mi, _):
+            return step(mi, dt, h_in_x), None
+
+        m, _ = jax.lax.scan(inner, m, None, length=hold_steps)
+        return m, m[..., 0]  # node states: x-components (paper §3.1)
+
+    mT, states = jax.lax.scan(per_sample, m0, u_seq)
+    return mT, states  # states: (T, N)
+
+
+@functools.partial(jax.jit, static_argnames=("hold_steps", "tableau_name"))
+def _drive_scan_batch(
+    params_e: STOParams,  # leaves (E, 1)
+    w_cp: jnp.ndarray,
+    w_in: jnp.ndarray,
+    m0_e: jnp.ndarray,  # (E, N, 3)
+    u_seq_e: jnp.ndarray,  # (T, E, N_in)
+    dt,
+    hold_steps: int,
+    tableau_name: str = "rk4",
+):
+    """Ensemble drive in the core layout (per-lane params and inputs)."""
+    tableau = integrators.TABLEAUX[tableau_name]
+
+    def field(m, h_in_x):
+        return sto.llg_field(m, params_e, w_cp, h_in_x)
+
+    step = integrators.make_step(field, tableau)
+    dt = jnp.asarray(dt, dtype=m0_e.dtype)
+
+    def per_sample(m, u_t):
+        h_in = params_e.a_in * jnp.einsum("ni,ei->en", w_in, u_t)  # (E, N)
+
+        def inner(mi, _):
+            return step(mi, dt, h_in), None
+
+        m, _ = jax.lax.scan(inner, m, None, length=hold_steps)
+        return m, m[..., 0]
+
+    mT, states = jax.lax.scan(per_sample, m0_e, u_seq_e)
+    return mT, states  # (E, N, 3), (T, E, N)
+
+
+@functools.partial(jax.jit, static_argnames=("hold_steps", "tableau_name"))
+def _tick_scan(params_e, w_cp, w_in, m_planes, u, mask, dt, hold_steps,
+               tableau_name: str = "rk4"):
+    """Advance all E slots one input tick in the core (E, N, 3) layout.
+
+    Takes/returns the slot store's (3, N, E) planes — the layout shuffle
+    lives inside the jit so one dispatch covers the whole tick. The
+    integration mirrors `_drive_scan`'s per_sample exactly (same field, same
+    step, same op order per lane) so scan-impl serving reproduces solo
+    drive() results; masked (idle) lanes return unchanged.
+    """
+    m = jnp.transpose(m_planes, (2, 1, 0))  # (E, N, 3)
+    h_in = params_e.a_in * jnp.einsum("ni,ei->en", w_in, u)  # (E, N)
+
+    def field(mm, h):
+        return sto.llg_field(mm, params_e, w_cp, h)
+
+    step = integrators.make_step(field, integrators.TABLEAUX[tableau_name])
+
+    def inner(mi, _):
+        return step(mi, dt, h_in), None
+
+    m_new, _ = jax.lax.scan(inner, m, None, length=hold_steps)
+    m_new = jnp.where(mask[:, None, None], m_new, m)
+    return jnp.transpose(m_new, (2, 1, 0)), jnp.transpose(m_new[..., 0])
+
+
+# ---------------------------------------------------------------------------
+# jit'd workers — kernel (3, N, E) planes layout ("ref"/"fused"/"tiled")
+# ---------------------------------------------------------------------------
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("dt", "hold_steps", "impl", "n_inner", "block_n", "block_e", "interpret"),
+)
+def _drive_planes(
+    params_e, w_cp, w_in, m0_planes, u_seq_e,
+    *, dt, hold_steps, impl, n_inner, block_n, block_e, interpret,
+):
+    """Ensemble drive through the kernel layout: per input sample, one
+    hold-window integrate with the resolved impl."""
+    e = m0_planes.shape[-1]
+    pv = kref.pack_params(params_e, e, m0_planes.dtype)
+    a_in = jnp.reshape(params_e.a_in, (-1,)) * jnp.ones((e,), m0_planes.dtype)
+
+    def per_sample(m, u_t):  # u_t: (E, N_in)
+        h = jnp.einsum("ni,ei->ne", w_in, u_t) * a_in[None, :]
+        m = ops._integrate_planes_jit(
+            m, w_cp, pv, h, None,
+            dt=dt, n_steps=hold_steps, impl=impl, n_inner=n_inner,
+            block_n=block_n, block_e=block_e, interpret=interpret,
+        )
+        return m, m[0]
+
+    mT, states = jax.lax.scan(per_sample, m0_planes, u_seq_e)
+    return mT, jnp.transpose(states, (0, 2, 1))  # (3, N, E), (T, E, N)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("dt", "hold_steps", "impl", "n_inner", "block_n", "block_e", "interpret"),
+)
+def _tick_planes(
+    params_e, w_cp, w_in, m_planes, u, mask,
+    *, dt, hold_steps, impl, n_inner, block_n, block_e, interpret,
+):
+    """One hold window for a slot batch in the kernel layout; masked lanes
+    come back bit-identical (partial-batch masking in kernels/ops.py)."""
+    e = m_planes.shape[-1]
+    pv = kref.pack_params(params_e, e, m_planes.dtype)
+    a_in = jnp.reshape(params_e.a_in, (-1,)) * jnp.ones((e,), m_planes.dtype)
+    h = jnp.einsum("ni,ei->ne", w_in, u) * a_in[None, :]
+    m_new = ops._integrate_planes_jit(
+        m_planes, w_cp, pv, h, mask,
+        dt=dt, n_steps=hold_steps, impl=impl, n_inner=n_inner,
+        block_n=block_n, block_e=block_e, interpret=interpret,
+    )
+    return m_new, m_new[0]
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("dt", "n_steps", "save_every", "impl", "n_inner", "block_n", "block_e", "interpret"),
+)
+def _integrate_planes(
+    params_e, w_cp, m0_planes,
+    *, dt, n_steps, save_every, impl, n_inner, block_n, block_e, interpret,
+):
+    """Free-run (u = 0) integration in the kernel layout."""
+    e = m0_planes.shape[-1]
+    pv = kref.pack_params(params_e, e, m0_planes.dtype)
+
+    def chunk(m, length):
+        return ops._integrate_planes_jit(
+            m, w_cp, pv, None, None,
+            dt=dt, n_steps=length, impl=impl, n_inner=n_inner,
+            block_n=block_n, block_e=block_e, interpret=interpret,
+        )
+
+    if not save_every:
+        return chunk(m0_planes, n_steps), None
+
+    def body(m, _):
+        m = chunk(m, save_every)
+        return m, m
+
+    mT, traj = jax.lax.scan(body, m0_planes, None, length=n_steps // save_every)
+    return mT, traj
+
+
+# ---------------------------------------------------------------------------
+# CompiledSim
+# ---------------------------------------------------------------------------
+
+
+class CompiledSim:
+    """A SimSpec bound to resolved execution decisions. Build via compile_plan."""
+
+    def __init__(self, spec: SimSpec, plan: ExecPlan, impl: str):
+        self.spec = spec
+        self.plan = plan
+        self.impl = impl  # resolved: scan | ref | fused | tiled (never auto)
+        self.e = plan.ensemble
+        self._block_n = plan.block_n or ops.LANE
+        self._block_e = plan.block_e or ops.LANE
+        self._n_inner = plan.n_inner or spec.hold_steps
+        self._dt_scan = jnp.asarray(spec.dt, spec.dtype)
+        self._params_cache: Optional[STOParams] = None
+
+    # -- parameter plumbing ------------------------------------------------
+
+    def ensemble_params(self, params: Optional[STOParams] = None) -> STOParams:
+        """Per-lane STOParams with (E, 1) leaves (scalar specs broadcast)."""
+        if params is None:
+            if self._params_cache is None:
+                self._params_cache = self._broadcast(self.spec.params)
+            return self._params_cache
+        return self._broadcast(params)
+
+    def _broadcast(self, p: STOParams) -> STOParams:
+        from repro.core.ensemble import broadcast_params
+
+        leaf = jnp.asarray(p.gamma)
+        if leaf.ndim == 2 and leaf.shape == (self.e, 1):
+            return p
+        return broadcast_params(p, self.e)
+
+    def _coerce_batch_u(self, u, keep_shared: bool = False) -> jnp.ndarray:
+        """(T, N_in) shared or (T, E, N_in) per lane -> (T, E, N_in).
+
+        keep_shared=True returns a valid shared series un-broadcast — the
+        sharded path replicates it across devices instead of storing and
+        contracting E per-lane copies.
+        """
+        spec = self.spec
+        u = jnp.asarray(u, dtype=spec.dtype)
+        if u.ndim == 2 and u.shape[1] == spec.n_in:
+            if keep_shared:
+                return u
+            return jnp.broadcast_to(u[:, None, :], (u.shape[0], self.e, spec.n_in))
+        if u.ndim == 3 and u.shape[1:] == (self.e, spec.n_in):
+            return u
+        raise ValueError(
+            f"batch input series must have shape (T, {spec.n_in}) — shared "
+            f"across lanes — or (T, {self.e}, {spec.n_in}) per lane; got "
+            f"{tuple(u.shape)}"
+        )
+
+    def _coerce_batch_m0(self, m0) -> jnp.ndarray:
+        spec = self.spec
+        if m0 is None:
+            return jnp.broadcast_to(spec.m0, (self.e, spec.n, 3))
+        m0 = jnp.asarray(m0, dtype=spec.dtype)
+        if m0.shape == (spec.n, 3):
+            return jnp.broadcast_to(m0, (self.e, spec.n, 3))
+        if m0.shape != (self.e, spec.n, 3):
+            raise ValueError(
+                f"m0 must have shape ({spec.n}, 3) or ({self.e}, {spec.n}, 3); "
+                f"got {tuple(m0.shape)}"
+            )
+        return m0
+
+    # -- entry points ------------------------------------------------------
+
+    def drive(
+        self, u_seq, m0: Optional[jnp.ndarray] = None
+    ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+        """Solo drive: input series (T, N_in) -> (final m (N, 3), states (T, N)).
+
+        Requires ensemble == 1 and an unsharded plan; impl="scan" is
+        bit-identical to the legacy `reservoir.drive`.
+        """
+        from repro.core.reservoir import coerce_input_series
+
+        spec = self.spec
+        if self.e != 1 or self.plan.sharded:
+            raise ValueError(
+                "drive() is the solo entry point (ensemble == 1, no mesh); "
+                "use drive_batch() for ensemble/sharded plans"
+            )
+        u_seq = coerce_input_series(u_seq, spec.n_in, spec.dtype)
+        m_start = spec.m0 if m0 is None else jnp.asarray(m0, dtype=spec.dtype)
+        if m_start.shape != spec.m0.shape:
+            raise ValueError(
+                f"m0 must have shape {tuple(spec.m0.shape)}; got {tuple(m_start.shape)}"
+            )
+        if self.impl == "scan":
+            # a (1, 1)-leaved ensemble-of-one spec is legal; the solo scan
+            # math wants scalar leaves (identical values, broadcast-free)
+            params = jax.tree.map(
+                lambda x: jnp.reshape(x, ()) if jnp.asarray(x).ndim else x,
+                spec.params,
+            )
+            return _drive_scan(
+                params, spec.w_cp, spec.w_in, m_start, u_seq,
+                spec.dt, spec.hold_steps, spec.tableau,
+            )
+        mT, states = _drive_planes(
+            self.ensemble_params(), spec.w_cp, spec.w_in,
+            ops.to_planes(m_start), u_seq[:, None, :],
+            dt=float(spec.dt), hold_steps=spec.hold_steps, impl=self.impl,
+            n_inner=self._n_inner, block_n=self._block_n,
+            block_e=self._block_e, interpret=self.plan.interpret,
+        )
+        return ops.from_planes(mT, ()), states[:, 0, :]
+
+    def drive_batch(
+        self,
+        u_seq,
+        m0: Optional[jnp.ndarray] = None,
+        params: Optional[STOParams] = None,
+    ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+        """Ensemble drive: E lanes, shared (T, N_in) or per-lane
+        (T, E, N_in) input -> (mT (E, N, 3), states (T, E, N))."""
+        spec = self.spec
+        m0_e = self._coerce_batch_m0(m0)
+        params_e = self.ensemble_params(params)
+        if self.plan.sharded:
+            # a shared series stays (T, N_in): replicated on every device,
+            # contracted once per sample ('ni,i->n') instead of per lane
+            u_sh = self._coerce_batch_u(u_seq, keep_shared=True)
+            return _sharded.drive_sharded(
+                self.plan.mesh, params_e, spec.w_cp, spec.w_in, m0_e, u_sh,
+                spec.dt, spec.hold_steps,
+                ensemble_axes=self.plan.ensemble_axes,
+                model_axis=self.plan.model_axis,
+                tableau_name=spec.tableau,
+                gather_dtype=self.plan.gather_dtype,
+            )
+        u_e = self._coerce_batch_u(u_seq)
+        if self.impl == "scan":
+            return _drive_scan_batch(
+                params_e, spec.w_cp, spec.w_in, m0_e, u_e,
+                spec.dt, spec.hold_steps, spec.tableau,
+            )
+        mT, states = _drive_planes(
+            params_e, spec.w_cp, spec.w_in, ops.to_planes(m0_e), u_e,
+            dt=float(spec.dt), hold_steps=spec.hold_steps, impl=self.impl,
+            n_inner=self._n_inner, block_n=self._block_n,
+            block_e=self._block_e, interpret=self.plan.interpret,
+        )
+        return ops.from_planes(mT, (self.e,)), states
+
+    def integrate(
+        self,
+        n_steps: int,
+        m0: Optional[jnp.ndarray] = None,
+        save_every: int = 0,
+        params: Optional[STOParams] = None,
+    ):
+        """Free-run (u = 0) integration of the E-lane ensemble.
+
+        Returns (mT (E, N, 3), traj or None) — traj has shape
+        (n_steps // save_every, E, N, 3) when save_every > 0. impl="scan"
+        reproduces the legacy `ensemble.integrate_ensemble` exactly.
+        """
+        spec = self.spec
+        m0_e = self._coerce_batch_m0(m0)
+        params_e = self.ensemble_params(params)
+        if self.plan.sharded:
+            if save_every:
+                raise NotImplementedError("save_every on sharded plans")
+            return (
+                _sharded.integrate_sharded(
+                    self.plan.mesh, params_e, spec.w_cp, m0_e, spec.dt, n_steps,
+                    ensemble_axes=self.plan.ensemble_axes,
+                    model_axis=self.plan.model_axis,
+                    tableau_name=spec.tableau,
+                    gather_dtype=self.plan.gather_dtype,
+                ),
+                None,
+            )
+        if self.impl == "scan":
+            # unjitted like the legacy integrate_ensemble (lax.scan compiles
+            # the trajectory either way; op-for-op identical results)
+            tableau = integrators.TABLEAUX[spec.tableau]
+
+            def field(m, _):
+                return sto.llg_field(m, params_e, spec.w_cp)
+
+            return integrators.integrate_scan(
+                field, m0_e, spec.dt, n_steps, None, tableau, save_every=save_every
+            )
+        if save_every:
+            assert n_steps % save_every == 0
+        mT, traj = _integrate_planes(
+            params_e, spec.w_cp, ops.to_planes(m0_e),
+            dt=float(spec.dt), n_steps=n_steps, save_every=save_every,
+            impl=self.impl, n_inner=self._n_inner, block_n=self._block_n,
+            block_e=self._block_e, interpret=self.plan.interpret,
+        )
+        mT = ops.from_planes(mT, (self.e,))
+        if traj is not None:
+            traj = jax.vmap(lambda mp: ops.from_planes(mp, (self.e,)))(traj)
+        return mT, traj
+
+    def tick(
+        self,
+        m_planes: jnp.ndarray,  # (3, N, E) slot-store layout
+        u: jnp.ndarray,  # (E, N_in) this tick's input row per lane
+        lane_mask: Optional[jnp.ndarray] = None,  # (E,) bool; None = all active
+        params: Optional[STOParams] = None,  # per-lane STOParams, (E, 1) leaves
+    ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+        """ONE hold window for a slot batch — the serving hot path.
+
+        Returns (m_planes' (3, N, E), states plane (N, E)). Lanes where
+        lane_mask is False come back bit-identical (idle serving slots stay
+        frozen while active slots advance in the same dispatch).
+        """
+        spec = self.spec
+        params_e = self.ensemble_params(params)
+        if lane_mask is None:
+            lane_mask = jnp.ones((self.e,), dtype=bool)
+        if self.plan.sharded:
+            m = jnp.transpose(m_planes, (2, 1, 0))  # (E, N, 3)
+            m_new, states = _sharded.tick_sharded(
+                self.plan.mesh, params_e, spec.w_cp, spec.w_in, m, u, lane_mask,
+                spec.dt, spec.hold_steps,
+                ensemble_axes=self.plan.ensemble_axes,
+                model_axis=self.plan.model_axis,
+                tableau_name=spec.tableau,
+                gather_dtype=self.plan.gather_dtype,
+            )
+            return jnp.transpose(m_new, (2, 1, 0)), jnp.transpose(states)
+        if self.impl == "scan":
+            return _tick_scan(
+                params_e, spec.w_cp, spec.w_in, m_planes, u, lane_mask,
+                self._dt_scan, spec.hold_steps, spec.tableau,
+            )
+        return _tick_planes(
+            params_e, spec.w_cp, spec.w_in, m_planes, u, lane_mask,
+            dt=float(spec.dt), hold_steps=spec.hold_steps, impl=self.impl,
+            n_inner=self._n_inner, block_n=self._block_n,
+            block_e=self._block_e, interpret=self.plan.interpret,
+        )
+
+
+# ---------------------------------------------------------------------------
+# compile_plan
+# ---------------------------------------------------------------------------
+
+
+def compile_plan(spec: SimSpec, plan: Optional[ExecPlan] = None, **overrides) -> CompiledSim:
+    """Bind a SimSpec to an ExecPlan, resolving every execution decision.
+
+    Keyword overrides build/amend the plan: `compile_plan(spec, ensemble=64)`
+    == `compile_plan(spec, ExecPlan(ensemble=64))`. "auto" impls resolve
+    against the measured-latency dispatch table (persisted per-platform JSON
+    included); `measure=True` times the candidates for this (N, E) first and
+    pins the winner, so the choice survives into the committed table via
+    `kernels.dispatch_table.save_table()`.
+    """
+    if plan is None:
+        plan = ExecPlan(**overrides)
+    elif overrides:
+        plan = dataclasses.replace(plan, **overrides)
+
+    if spec.tableau not in integrators.TABLEAUX:
+        raise ValueError(
+            f"unknown tableau {spec.tableau!r}; choose from {sorted(integrators.TABLEAUX)}"
+        )
+
+    # fail here, with the fix spelled out, instead of deep inside a scan
+    # trace: ensemble-leaved params must match the plan's width
+    leaf = jnp.asarray(spec.params.gamma)
+    if leaf.ndim == 2 and leaf.shape != (plan.ensemble, 1):
+        raise ValueError(
+            f"spec.params carries ensemble leaves of shape {tuple(leaf.shape)} "
+            f"but the plan runs ensemble={plan.ensemble}; rebuild the sweep "
+            f"with broadcast_params(base, {plan.ensemble}) or set "
+            f"ExecPlan(ensemble={int(leaf.shape[0])})"
+        )
+    if leaf.ndim not in (0, 2):
+        raise ValueError(
+            f"spec.params leaves must be scalars or (E, 1) ensemble leaves "
+            f"(broadcast_params); got shape {tuple(leaf.shape)}"
+        )
+
+    if plan.sharded:
+        impl = "scan"  # sharded plans integrate in the core layout via shard_map
+    else:
+        impl = plan.impl
+        if impl == "auto":
+            # choose_impl lazily loads the persisted per-platform table
+            if plan.measure:
+                ops.measure_impl_latency(
+                    spec.n, plan.ensemble, dt=float(spec.dt)
+                )
+            impl = ops.choose_impl(spec.n, plan.ensemble, spec.dtype.itemsize)
+    if impl in ("fused", "tiled") and spec.tableau != "rk4":
+        raise ValueError(
+            f"the Pallas kernels integrate classical RK4 only; impl={impl!r} "
+            f"cannot run tableau {spec.tableau!r} (use impl='scan' or 'ref')"
+        )
+    return CompiledSim(spec, plan, impl)

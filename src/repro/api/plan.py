@@ -1,0 +1,65 @@
+"""ExecPlan: HOW to execute a SimSpec — backend, padding, batching, sharding.
+
+Every execution decision that used to be scattered across
+`core/reservoir.py`, `core/ensemble.py`, `kernels/ops.py`, and
+`serve/reservoir.py` is declared here and resolved exactly once, in
+`repro.api.compile_plan`:
+
+  impl       "auto" consults the measured-latency dispatch table
+             (in-process + the persisted per-platform JSON from
+             kernels/dispatch_table.py), then the platform gate / VMEM
+             heuristic — `kernels.ops.choose_impl`. Explicit values:
+             "scan" (core (E, N, 3) layout, bit-identical to the legacy
+             `drive` math), "ref" (planes-layout jnp oracle), "fused" /
+             "tiled" (Pallas TPU kernels).
+  ensemble   E: how many reservoir lanes run per dispatch (1 = solo).
+  block_n/e  MXU padding granules for the Pallas kernels.
+  n_inner    fused-kernel inner steps (None = one hold window per launch).
+  mesh       a jax Mesh makes the plan SHARDED: E spans `ensemble_axes`,
+             N spans `model_axis`, with PartitionSpecs from
+             `distributed.sharding.reservoir_specs`.
+  gather_dtype  reduced-precision coupling path for sharded plans (bf16
+             wire + matmul; see core/ensemble.py §Perf C notes).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Sequence, Tuple
+
+try:  # jax is a hard dependency of the repo; guard only for doc tooling
+    from jax.sharding import Mesh
+except Exception:  # pragma: no cover
+    Mesh = object  # type: ignore
+
+PLAN_IMPLS = ("auto", "scan", "ref", "fused", "tiled")
+
+
+@dataclasses.dataclass(frozen=True)
+class ExecPlan:
+    impl: str = "auto"
+    ensemble: int = 1
+    block_n: Optional[int] = None  # None = kernels' LANE default
+    block_e: Optional[int] = None
+    n_inner: Optional[int] = None  # None = full hold window per kernel launch
+    mesh: Optional[Mesh] = None
+    ensemble_axes: Sequence[str] = ("data",)
+    model_axis: Optional[str] = "model"
+    gather_dtype: Optional[object] = None
+    interpret: bool = False
+    measure: bool = False  # time impl candidates at compile, pin the winner
+
+    def __post_init__(self):
+        if self.impl not in PLAN_IMPLS:
+            raise ValueError(f"impl must be one of {PLAN_IMPLS}; got {self.impl!r}")
+        if self.ensemble < 1:
+            raise ValueError(f"ensemble must be >= 1; got {self.ensemble}")
+        if self.mesh is not None and self.impl not in ("auto", "scan"):
+            raise ValueError(
+                "sharded plans integrate in the core layout via shard_map; "
+                f"impl must be 'auto' or 'scan' when mesh is set, got {self.impl!r}"
+            )
+
+    @property
+    def sharded(self) -> bool:
+        return self.mesh is not None

@@ -1,0 +1,98 @@
+"""SimSpec: WHAT to simulate — the pure physics of a coupled-STO reservoir.
+
+A `SimSpec` is everything the paper's equations need and nothing the
+hardware cares about: the LLG/STO parameter set, the coupling and input
+topologies, the initial magnetization, the RK timestep/tableau, and the
+hold window (integration steps per input sample). How that evolution is
+executed — impl choice, padding, ensemble batching, sharding — lives in
+`repro.api.plan.ExecPlan`; `repro.api.compile_plan(spec, plan)` marries the
+two.
+
+`SimSpec` subsumes `repro.core.reservoir.Reservoir` (same leading fields,
+plus the tableau); `SimSpec.from_reservoir` / `.to_reservoir` convert
+losslessly, so legacy call sites interoperate during the migration.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax.numpy as jnp
+
+from repro.core import constants, coupling
+from repro.core.constants import STOParams
+
+
+class SimSpec(NamedTuple):
+    """Pure physics description of one reservoir (or an ensemble template).
+
+    params may carry scalar leaves (one physical device) or (E, 1) ensemble
+    leaves from `repro.core.ensemble.broadcast_params` (a parameter sweep);
+    execution width is still the ExecPlan's call — scalar params broadcast
+    into however many lanes the plan runs.
+    """
+
+    params: STOParams
+    w_cp: jnp.ndarray  # (N, N) coupling topology
+    w_in: jnp.ndarray  # (N, N_in) input topology
+    m0: jnp.ndarray  # (N, 3) canonical initial magnetization
+    dt: float
+    hold_steps: int  # integration steps per input sample
+    tableau: str = "rk4"
+
+    @property
+    def n(self) -> int:
+        return int(self.m0.shape[0])
+
+    @property
+    def n_in(self) -> int:
+        return int(self.w_in.shape[1])
+
+    @property
+    def dtype(self):
+        return self.m0.dtype
+
+    @classmethod
+    def from_reservoir(cls, res, tableau: str = "rk4") -> "SimSpec":
+        """Adopt a legacy `repro.core.reservoir.Reservoir`."""
+        return cls(
+            params=res.params,
+            w_cp=res.w_cp,
+            w_in=res.w_in,
+            m0=res.m0,
+            dt=res.dt,
+            hold_steps=res.hold_steps,
+            tableau=tableau,
+        )
+
+    def to_reservoir(self):
+        """Project back to the legacy Reservoir tuple (drops the tableau)."""
+        from repro.core.reservoir import Reservoir
+
+        return Reservoir(
+            params=self.params,
+            w_cp=self.w_cp,
+            w_in=self.w_in,
+            m0=self.m0,
+            dt=self.dt,
+            hold_steps=self.hold_steps,
+        )
+
+
+def make_spec(
+    n: int,
+    n_in: int = 1,
+    seed: int = 0,
+    dt: float = constants.DT,
+    hold_steps: int = 100,
+    dtype=jnp.float32,
+    params: Optional[STOParams] = None,
+    tableau: str = "rk4",
+) -> SimSpec:
+    """Build a SimSpec with the paper's Table-1 defaults (cf. make_reservoir)."""
+    if params is None:
+        params = constants.default_params(dtype)
+    w_cp = jnp.asarray(coupling.make_coupling_matrix(n, seed=seed), dtype=dtype)
+    w_in = jnp.asarray(coupling.make_input_matrix(n, n_in, seed=seed + 1), dtype=dtype)
+    m0 = constants.initial_magnetization(n, dtype=dtype)
+    return SimSpec(params, w_cp, w_in, m0, dt, hold_steps, tableau)

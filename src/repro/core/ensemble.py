@@ -1,30 +1,32 @@
-"""Ensemble (batched) and sharded execution of the coupled-STO integrator.
+"""Ensemble (batched) and sharded execution — legacy shims + param helpers.
 
-This is the paper's technique as a *distributed first-class feature*:
+The execution bodies moved into the unified API (`repro.api`): ensemble
+width, impl dispatch, and mesh sharding are ExecPlan decisions resolved by
+`repro.api.compile_plan`, and the shard_map decompositions live in
+`repro.api.sharded` (PartitionSpecs from
+`distributed.sharding.reservoir_specs`). What remains here:
 
 - `broadcast_params` builds an ensemble of parameter sets (the paper's
-  motivating use-case: sweeping physical parameters / reservoir hyper-
-  parameters is "a computationally expensive task", §2).
-- `integrate_ensemble` runs E reservoirs at once. On TPU the coupling becomes
-  an (N x N) @ (N x E) matmul — MXU-shaped, unlike the paper's mat-vec.
-- `integrate_ensemble_sharded` distributes E over the data/pod mesh axes and N
-  over the model axis: W^cp is row-sharded, and each RK stage all-gathers the
-  m^x slice (N*E_local floats — negligible next to the O(N^2 E) compute).
+  motivating use-case: sweeping physical parameters is "a computationally
+  expensive task", §2) — pure pytree plumbing, still first-class.
+- `fit_ridge_ensemble` per-member ridge readouts.
+- `integrate_ensemble` / `integrate_ensemble_sharded`: thin DEPRECATED
+  shims over compile_plan, kept signature-compatible (and, for the
+  unsharded path, bit-identical — the api's impl="scan" runs the same op
+  sequence).
+- `drive_ensemble_sharded`: delegates to `repro.api.sharded.drive_sharded`
+  (prefer `compile_plan(spec, ExecPlan(mesh=...)).drive_batch(u)`).
 """
 
 from __future__ import annotations
 
-import functools
-from typing import Optional, Sequence, Tuple
+import warnings
+from typing import Optional, Sequence
 
 import jax
 import jax.numpy as jnp
-from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+from jax.sharding import Mesh, NamedSharding
 
-from repro.core.compat import SHARD_MAP_CHECK_KW as _SHARD_MAP_CHECK_KW
-from repro.core.compat import shard_map
-
-from repro.core import integrators, sto
 from repro.core.constants import STOParams
 
 
@@ -48,6 +50,22 @@ def broadcast_params(base: STOParams, size: int, **sweeps) -> STOParams:
     return STOParams(**leaves)
 
 
+def _spec_for(params: STOParams, w_cp, m0, dt, hold_steps, tableau_name):
+    """Wrap legacy ensemble arguments in a SimSpec (no input topology)."""
+    from repro import api
+
+    n = int(m0.shape[-2])
+    return api.SimSpec(
+        params=params,
+        w_cp=w_cp,
+        w_in=jnp.zeros((n, 1), dtype=m0.dtype),
+        m0=m0[0] if m0.ndim == 3 else m0,
+        dt=dt,
+        hold_steps=hold_steps,
+        tableau=tableau_name,
+    )
+
+
 def integrate_ensemble(
     params: STOParams,  # leaves (E, 1)
     w_cp: jnp.ndarray,  # (N, N), shared topology
@@ -57,15 +75,25 @@ def integrate_ensemble(
     tableau_name: str = "rk4",
     save_every: int = 0,
 ):
-    """Batched integration of E independent reservoirs (shared W^cp)."""
-    tableau = integrators.TABLEAUX[tableau_name]
+    """Batched integration of E independent reservoirs (shared W^cp).
 
-    def field(m, _):
-        return sto.llg_field(m, params, w_cp)
-
-    return integrators.integrate_scan(
-        field, m0, dt, n_steps, None, tableau, save_every=save_every
+    .. deprecated:: thin shim over `repro.api.compile_plan(spec,
+       ensemble=E, impl="scan").integrate(n_steps, ...)` — bit-identical.
+    """
+    warnings.warn(
+        "repro.core.ensemble.integrate_ensemble is deprecated; use "
+        "repro.api.compile_plan(spec, ensemble=E).integrate(n_steps, ...)",
+        DeprecationWarning,
+        stacklevel=2,
     )
+    from repro import api
+
+    sim = api.compile_plan(
+        _spec_for(params, w_cp, m0, dt, 1, tableau_name),
+        impl="scan",
+        ensemble=int(m0.shape[0]),
+    )
+    return sim.integrate(n_steps, m0=m0, save_every=save_every, params=params)
 
 
 def integrate_ensemble_sharded(
@@ -82,54 +110,31 @@ def integrate_ensemble_sharded(
 ):
     """shard_map'd integration: E over `ensemble_axes`, N over `model_axis`.
 
-    Per device: m_local (E/|ens|, N/|model|, 3); W row-shard (N/|model|, N).
-    Each field evaluation all-gathers m^x along `model_axis` (tiled), then the
-    local coupling rows are one contraction — the paper's Numba-parallel
-    decomposition mapped onto mesh collectives.
-
-    gather_dtype (e.g. jnp.bfloat16) runs the COUPLING PATH in reduced
-    precision: m^x is cast before the all-gather (half the wire bytes) and
-    the coupling matmul runs bf16 x bf16 -> f32 (MXU-native accumulate).
-    Consuming bf16 directly in the dot is what keeps XLA from cancelling the
-    converts around the collective and silently restoring an f32 gather
-    (observed; §Perf C). Physically benign: |H_cp| <= A_cp ~ 1 Oe against
-    ~600 Oe local fields, and |m|=1 conservation is structural.
+    .. deprecated:: thin shim over `repro.api.compile_plan(spec,
+       ExecPlan(mesh=...)).integrate(n_steps)`; the shard_map body now lives
+       in `repro.api.sharded.integrate_sharded` (same decomposition, same
+       gather_dtype semantics — see that module's docstring).
     """
-    tableau = integrators.TABLEAUX[tableau_name]
-    ens = tuple(ensemble_axes)
-
-    p_params = P(ens)
-    p_w = P(model_axis, None)
-    p_m = P(ens, model_axis, None)
-
-    def local_run(params_l: STOParams, w_l, m0_l):
-        w_mm = w_l.astype(gather_dtype) if gather_dtype is not None else w_l
-
-        def field(m, _):
-            mx = m[..., 0]  # (E_l, N_l)
-            if gather_dtype is not None:
-                mx = mx.astype(gather_dtype)
-            if model_axis is not None:
-                mx_full = jax.lax.all_gather(mx, model_axis, axis=-1, tiled=True)
-            else:
-                mx_full = mx
-            h_x = params_l.a_cp * jnp.einsum(
-                "ki,...i->...k", w_mm, mx_full, preferred_element_type=m.dtype
-            )
-            b = sto.effective_field_b(m, params_l, h_x)
-            return sto.llg_rhs_from_b(m, b, params_l)
-
-        yT, _ = integrators.integrate_scan(field, m0_l, dt, n_steps, None, tableau)
-        return yT
-
-    fn = shard_map(
-        local_run,
-        mesh=mesh,
-        in_specs=(jax.tree.map(lambda _: p_params, params), p_w, p_m),
-        out_specs=p_m,
-        **_SHARD_MAP_CHECK_KW,
+    warnings.warn(
+        "repro.core.ensemble.integrate_ensemble_sharded is deprecated; use "
+        "repro.api.compile_plan(spec, ExecPlan(mesh=...)).integrate(n_steps)",
+        DeprecationWarning,
+        stacklevel=2,
     )
-    return fn(params, w_cp, m0)
+    from repro import api
+
+    sim = api.compile_plan(
+        _spec_for(params, w_cp, m0, dt, 1, tableau_name),
+        api.ExecPlan(
+            ensemble=int(m0.shape[0]),
+            mesh=mesh,
+            ensemble_axes=tuple(ensemble_axes),
+            model_axis=model_axis,
+            gather_dtype=gather_dtype,
+        ),
+    )
+    mT, _ = sim.integrate(n_steps, m0=m0, params=params)
+    return mT
 
 
 def drive_ensemble_sharded(
@@ -146,67 +151,17 @@ def drive_ensemble_sharded(
     tableau_name: str = "rk4",
     gather_dtype=None,
 ):
-    """Reservoir DRIVE (input on) for an ensemble, sharded like
-    integrate_ensemble_sharded. Returns (mT (E,N,3), states (T,E,N)) with
-    states = m^x sampled after each hold window — the full paper
-    application (sweep + drive + readout) on the production mesh.
-
-    The input field h_in = A_in * (W_in u_t) depends only on the LOCAL N
-    rows, so the input path adds no collectives; only the coupling gathers.
+    """Reservoir DRIVE (input on) for a sharded ensemble. Returns
+    (mT (E,N,3), states (T,E,N)). Delegates to the unified API's sharded
+    body; prefer `compile_plan(spec, ExecPlan(mesh=...)).drive_batch(u)`.
     """
-    tableau = integrators.TABLEAUX[tableau_name]
-    ens = tuple(ensemble_axes)
-    p_params = P(ens)
-    p_w = P(model_axis, None)
-    p_win = P(model_axis, None)
-    p_m = P(ens, model_axis, None)
-    p_states = P(None, ens, model_axis)
+    from repro.api import sharded
 
-    def local_run(params_l: STOParams, w_l, win_l, m0_l, u):
-        w_mm = w_l.astype(gather_dtype) if gather_dtype is not None else w_l
-
-        def field(m, h_in_x):
-            mx = m[..., 0]
-            if gather_dtype is not None:
-                mx = mx.astype(gather_dtype)
-            if model_axis is not None:
-                mx_full = jax.lax.all_gather(mx, model_axis, axis=-1, tiled=True)
-            else:
-                mx_full = mx
-            h_x = params_l.a_cp * jnp.einsum(
-                "ki,...i->...k", w_mm, mx_full, preferred_element_type=m.dtype
-            )
-            h_x = h_x + h_in_x
-            b = sto.effective_field_b(m, params_l, h_x)
-            return sto.llg_rhs_from_b(m, b, params_l)
-
-        step = integrators.make_step(field, tableau)
-        dt_c = jnp.asarray(dt, m0_l.dtype)
-
-        def per_sample(m, u_t):
-            h_in = params_l.a_in * jnp.einsum("ni,i->n", win_l, u_t)  # (N_l,)
-            h_in = jnp.broadcast_to(h_in, m[..., 0].shape)
-
-            def inner(mi, _):
-                return step(mi, dt_c, h_in), None
-
-            m, _ = jax.lax.scan(inner, m, None, length=hold_steps)
-            return m, m[..., 0]
-
-        mT, states = jax.lax.scan(per_sample, m0_l, u)
-        return mT, states
-
-    fn = shard_map(
-        local_run,
-        mesh=mesh,
-        in_specs=(
-            jax.tree.map(lambda _: p_params, params),
-            p_w, p_win, p_m, P(None, None),
-        ),
-        out_specs=(p_m, p_states),
-        **_SHARD_MAP_CHECK_KW,
+    return sharded.drive_sharded(
+        mesh, params, w_cp, w_in, m0, u_seq, dt, hold_steps,
+        ensemble_axes=ensemble_axes, model_axis=model_axis,
+        tableau_name=tableau_name, gather_dtype=gather_dtype,
     )
-    return fn(params, w_cp, w_in, m0, u_seq)
 
 
 def fit_ridge_ensemble(states: jnp.ndarray, targets: jnp.ndarray, reg: float = 1e-6,
@@ -244,7 +199,9 @@ def lower_sharded_ensemble(
 ):
     """Dry-run entry: lower+compile the sharded ensemble integrator from
     ShapeDtypeStructs (no allocation). Returns the jax `Lowered`."""
+    from repro.api import sharded
     from repro.core import constants
+    from repro.distributed.sharding import reservoir_specs
 
     base = constants.default_params(dtype)
     params = jax.tree.map(
@@ -254,15 +211,15 @@ def lower_sharded_ensemble(
     w = jax.ShapeDtypeStruct((n, n), dtype)
     m0 = jax.ShapeDtypeStruct((e, n, 3), dtype)
 
-    ens = tuple(ensemble_axes)
+    specs = reservoir_specs(tuple(ensemble_axes), model_axis)
     shardings = (
-        jax.tree.map(lambda _: NamedSharding(mesh, P(ens)), params),
-        NamedSharding(mesh, P(model_axis, None)),
-        NamedSharding(mesh, P(ens, model_axis, None)),
+        jax.tree.map(lambda _: NamedSharding(mesh, specs["params"]), params),
+        NamedSharding(mesh, specs["w"]),
+        NamedSharding(mesh, specs["m"]),
     )
 
     def run(params_, w_, m0_):
-        return integrate_ensemble_sharded(
+        return sharded.integrate_sharded(
             mesh, params_, w_, m0_, dt, n_steps,
             ensemble_axes=ensemble_axes, model_axis=model_axis,
             gather_dtype=gather_dtype,

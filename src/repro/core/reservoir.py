@@ -10,14 +10,12 @@ the simulation of the reservoir itself, `drive()`.
 
 from __future__ import annotations
 
-import functools
+import warnings
 from typing import NamedTuple, Optional, Tuple
 
-import jax
 import jax.numpy as jnp
-import numpy as np
 
-from repro.core import constants, coupling, integrators, sto
+from repro.core import constants, coupling
 from repro.core.constants import STOParams
 
 
@@ -45,40 +43,6 @@ def make_reservoir(
     w_in = jnp.asarray(coupling.make_input_matrix(n, n_in, seed=seed + 1), dtype=dtype)
     m0 = constants.initial_magnetization(n, dtype=dtype)
     return Reservoir(params, w_cp, w_in, m0, dt, hold_steps)
-
-
-@functools.partial(jax.jit, static_argnames=("hold_steps", "tableau_name"))
-def _drive_scan(
-    params: STOParams,
-    w_cp: jnp.ndarray,
-    w_in: jnp.ndarray,
-    m0: jnp.ndarray,
-    u_seq: jnp.ndarray,  # (T, N_in)
-    dt,
-    hold_steps: int,
-    tableau_name: str = "rk4",
-):
-    tableau = integrators.TABLEAUX[tableau_name]
-
-    def field(m, h_in_x):
-        return sto.llg_field(m, params, w_cp, h_in_x)
-
-    step = integrators.make_step(field, tableau)
-    dt = jnp.asarray(dt, dtype=m0.dtype)
-
-    def per_sample(m, u_t):
-        # Input held piecewise-constant over the hold window (paper: the
-        # input signal is a discrete-point series).
-        h_in_x = params.a_in * (w_in @ u_t)  # (N,)
-
-        def inner(mi, _):
-            return step(mi, dt, h_in_x), None
-
-        m, _ = jax.lax.scan(inner, m, None, length=hold_steps)
-        return m, m[..., 0]  # node states: x-components (paper §3.1)
-
-    mT, states = jax.lax.scan(per_sample, m0, u_seq)
-    return mT, states  # states: (T, N)
 
 
 def coerce_input_series(u_seq: jnp.ndarray, n_in: int, dtype) -> jnp.ndarray:
@@ -113,22 +77,29 @@ def drive(
 ) -> Tuple[jnp.ndarray, jnp.ndarray]:
     """Run the reservoir over an input series. Returns (final m, states (T,N)).
 
-    u_seq follows the explicit (T, N_in) contract ((T,) allowed for
-    n_in == 1). m0 optionally resumes integration from an arbitrary (N, 3)
-    magnetization state — e.g. the streamed state of a paused serving
-    session — instead of the reservoir's canonical initial state; driving in
-    chunks with the carried-over final state is exactly equivalent to one
-    long drive.
+    .. deprecated:: thin shim over the unified execution API. New code:
+
+        sim = repro.api.compile_plan(repro.api.SimSpec.from_reservoir(res),
+                                     impl="scan")
+        mT, states = sim.drive(u_seq, m0=m0)
+
+    The shim compiles an impl="scan" plan, which runs the exact op sequence
+    this function always ran — results are bit-identical. u_seq follows the
+    explicit (T, N_in) contract ((T,) allowed for n_in == 1); m0 optionally
+    resumes integration from an arbitrary (N, 3) magnetization state, and
+    driving in chunks with the carried-over final state is exactly
+    equivalent to one long drive.
     """
-    u_seq = coerce_input_series(u_seq, res.w_in.shape[1], res.m0.dtype)
-    m_start = res.m0 if m0 is None else jnp.asarray(m0, dtype=res.m0.dtype)
-    if m_start.shape != res.m0.shape:
-        raise ValueError(
-            f"m0 must have shape {tuple(res.m0.shape)}; got {tuple(m_start.shape)}"
-        )
-    return _drive_scan(
-        res.params, res.w_cp, res.w_in, m_start, u_seq, res.dt, res.hold_steps
+    warnings.warn(
+        "repro.core.reservoir.drive is deprecated; use "
+        "repro.api.compile_plan(SimSpec.from_reservoir(res), impl='scan').drive(...)",
+        DeprecationWarning,
+        stacklevel=2,
     )
+    from repro import api
+
+    sim = api.compile_plan(api.SimSpec.from_reservoir(res), impl="scan")
+    return sim.drive(u_seq, m0=m0)
 
 
 class Readout(NamedTuple):
@@ -144,12 +115,27 @@ def fit_ridge(
 ) -> Readout:
     """Ridge regression readout: solve (X^T X + reg I) W = X^T Y.
 
+    targets follows an explicit shape contract mirroring
+    `coerce_input_series`: (T, n_out) — one row per sample, aligned with
+    states (T, N) — or 1-D (T,) for a single output. A (1, T) row vector is
+    rejected rather than silently transposed (the old auto-transpose also
+    mangled legitimate single-sample (1, n_out) targets).
+
     The Gram matrix is accumulated in f32/f64 regardless of state dtype; the
     solve is tiny ((N+1)^2) next to the simulation cost.
     """
-    targets = jnp.atleast_2d(jnp.asarray(targets))
-    if targets.shape[0] == 1:
-        targets = targets.T
+    states = jnp.asarray(states)
+    targets = jnp.asarray(targets)
+    t = states.shape[0]
+    if targets.ndim == 1:
+        targets = targets[:, None]
+    if targets.ndim != 2 or targets.shape[0] != t:
+        raise ValueError(
+            f"targets must have shape ({t}, n_out) — one row per state "
+            f"sample — or ({t},) for a single output; got "
+            f"{tuple(targets.shape)} against states {tuple(states.shape)}. "
+            f"A (1, T) row vector must be passed as (T,) or (T, 1)."
+        )
     x = states[washout:]
     y = targets[washout:].astype(jnp.float64 if x.dtype == jnp.float64 else jnp.float32)
     x = x.astype(y.dtype)

@@ -291,6 +291,48 @@ def cache_spec_for(path: str, leaf, mesh: Mesh) -> P:
     return P(*spec)
 
 
+# ---------------------------------------------------------------------------
+# Reservoir ensemble shardings (consumed by repro.api's sharded plans)
+# ---------------------------------------------------------------------------
+
+
+def reservoir_specs(
+    ensemble_axes: Sequence[str] = ("data",),
+    model_axis: Optional[str] = "model",
+):
+    """PartitionSpecs for the coupled-STO ensemble state.
+
+    The layout every sharded reservoir path in this repo uses: the ensemble
+    axis E spans `ensemble_axes` (data/pod parallelism — independent
+    reservoirs), the oscillator axis N spans `model_axis` (W^cp row-sharded;
+    each RK stage all-gathers the m^x slice). Keys:
+
+      params  STOParams leaves (E, 1)
+      w       coupling matrix (N, N), row-sharded
+      w_in    input matrix (N, N_in), row-sharded like w
+      m       magnetization (E, N, 3)
+      u       shared input series (T, N_in), replicated
+      u_e     per-lane input (T, E, N_in)
+      u_tick  one tick's per-lane input rows (E, N_in)
+      lane    per-lane vectors (E,) — masks, gains
+      states  collected node states (T, E, N)
+      states_tick  one tick's states plane (E, N)
+    """
+    ens = tuple(ensemble_axes)
+    return {
+        "params": P(ens),
+        "w": P(model_axis, None),
+        "w_in": P(model_axis, None),
+        "m": P(ens, model_axis, None),
+        "u": P(None, None),
+        "u_e": P(None, ens, None),
+        "u_tick": P(ens, None),
+        "lane": P(ens),
+        "states": P(None, ens, model_axis),
+        "states_tick": P(ens, model_axis),
+    }
+
+
 def logical_summary(mesh: Mesh, params) -> str:
     """Debug helper: param path -> spec table."""
     rows = []

@@ -57,19 +57,25 @@ def fused_fits_vmem(n: int, block_e: int, itemsize: int = 4) -> bool:
 # Measured-latency dispatch table
 # ---------------------------------------------------------------------------
 
-# (platform, N_padded, E_padded) -> impl name. Populated by
-# measure_impl_latency() (or register_impl_choice() from persisted results);
-# consulted by choose_impl() before falling back to the VMEM heuristic.
-_LATENCY_TABLE: Dict[Tuple[str, int, int], str] = {}
+# (platform, N_padded, E_padded, itemsize) -> impl name. Populated by
+# measure_impl_latency(), register_impl_choice(), or the persisted
+# per-platform JSON tables (kernels/dispatch_table.py, loaded lazily by
+# choose_impl); consulted before falling back to the VMEM heuristic.
+# itemsize is part of the key because a choice measured at f32 says nothing
+# about the f64 VMEM footprint / bandwidth at the same padded shape.
+_LATENCY_TABLE: Dict[Tuple[str, int, int, int], str] = {}
 
 
-def register_impl_choice(n: int, e: int, impl: str, platform: Optional[str] = None):
-    """Pin the dispatch choice for a padded (N, E) shape on a platform."""
+def register_impl_choice(
+    n: int, e: int, impl: str, platform: Optional[str] = None, itemsize: int = 4
+):
+    """Pin the dispatch choice for a padded (N, E, itemsize) shape on a
+    platform."""
     platform = platform or jax.default_backend()
-    _LATENCY_TABLE[(platform, _round_up(n, LANE), _round_up(e, LANE))] = impl
+    _LATENCY_TABLE[(platform, _round_up(n, LANE), _round_up(e, LANE), itemsize)] = impl
 
 
-def latency_table() -> Dict[Tuple[str, int, int], str]:
+def latency_table() -> Dict[Tuple[str, int, int, int], str]:
     return dict(_LATENCY_TABLE)
 
 
@@ -81,12 +87,17 @@ def choose_impl(
 ) -> str:
     """Resolve impl="auto" for a given (N, E) problem shape.
 
-    Priority: measured-latency table > platform gate (Pallas kernels only
-    compile on TPU; everything else integrates through the jnp oracle, which
-    XLA fuses well on CPU/GPU) > VMEM-fit heuristic.
+    Priority: measured-latency table (in-process measurements, then the
+    committed per-platform JSON from kernels/dispatch_table.py) > platform
+    gate (Pallas kernels only compile on TPU; everything else integrates
+    through the jnp oracle, which XLA fuses well on CPU/GPU) > VMEM-fit
+    heuristic.
     """
+    from repro.kernels import dispatch_table
+
     platform = platform or jax.default_backend()
-    key = (platform, _round_up(n, LANE), _round_up(e, LANE))
+    dispatch_table.ensure_loaded(platform)
+    key = (platform, _round_up(n, LANE), _round_up(e, LANE), itemsize)
     if key in _LATENCY_TABLE:
         return _LATENCY_TABLE[key]
     if platform != "tpu":
@@ -136,7 +147,10 @@ def measure_impl_latency(
         except Exception:  # impl unavailable on this backend/shape
             continue
     if register and timings:
-        register_impl_choice(n, e, min(timings, key=timings.get))
+        register_impl_choice(
+            n, e, min(timings, key=timings.get),
+            itemsize=jnp.dtype(dtype).itemsize,
+        )
     return timings
 
 

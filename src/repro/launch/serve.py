@@ -65,16 +65,19 @@ def main_reservoir(args):
     import jax.numpy as jnp
     import numpy as np
 
-    from repro.core import drive, fit_ridge, make_reservoir, tasks
+    from repro.api import ExecPlan, compile_plan, make_spec
+    from repro.core import fit_ridge, tasks
     from repro.serve.reservoir import ReservoirEngine, StreamSession
 
-    res = make_reservoir(
+    spec = make_spec(
         n=args.n, n_in=1, hold_steps=args.hold_steps, dtype=jnp.float32
     )
     # one shared trained readout per task flavor (NARMA here); tenants could
     # each bring their own — see examples/serve_reservoir.py
     u_tr, y_tr = tasks.narma_series(args.ticks * 4, order=2, seed=0)
-    _, states_tr = drive(res, jnp.asarray(u_tr[:, None], jnp.float32))
+    _, states_tr = compile_plan(spec, impl="scan").drive(
+        jnp.asarray(u_tr[:, None], jnp.float32)
+    )
     readout = fit_ridge(
         states_tr, jnp.asarray(y_tr[:, None], jnp.float32), washout=10, reg=1e-6
     )
@@ -91,7 +94,12 @@ def main_reservoir(args):
     ]
 
     eng = ReservoirEngine(
-        res, num_slots=args.slots, backend=args.backend, measure=args.measure
+        compile_plan(
+            spec,
+            ExecPlan(
+                impl=args.backend, ensemble=args.slots, measure=args.measure
+            ),
+        )
     )
     t0 = time.time()
     results = eng.run(sessions)

@@ -11,10 +11,15 @@ session carries its own trained Readout and input stream (NARMA, parity,
 sine-approx, ... — anything the reservoir was trained for); readout
 application is itself slot-batched (one einsum over E).
 
-Backend dispatch: "auto" consults kernels/ops.py — the measured-latency
-table when populated (measure=True times the candidates for this (N, E) at
-engine construction), else the VMEM-fit heuristic on TPU, else the plain
-lax.scan path over the kernel layout ("ref"). The extra "scan" backend
+Execution rides on the unified API (repro/api): the engine holds a
+CompiledSim and its per-tick hot path is `CompiledSim.tick`, so every
+impl-dispatch / padding / sharding decision is made once, in
+`repro.api.compile_plan`. Construct from a Reservoir/SimSpec (the engine
+compiles an ExecPlan for you; backend="auto" consults the measured-latency
+dispatch table, persisted per-platform JSON included, then the VMEM
+heuristic) or hand the engine an already-compiled sim — including a
+sharded one (`ExecPlan(mesh=...)`), which serves the slot batch across the
+device mesh with E on the data axes and N on the model axis. The extra "scan" backend
 integrates in the core (E, N, 3) layout with exactly `reservoir.drive`'s
 math, so per-session streamed states are numerically indistinguishable
 from running the stream alone; every other backend agrees with solo runs
@@ -30,17 +35,15 @@ advances all of them in lockstep.
 from __future__ import annotations
 
 import dataclasses
-import functools
-from typing import Dict, List, Optional
+from typing import Dict, List, Optional, Union
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import integrators, sto
+from repro.api import CompiledSim, ExecPlan, SimSpec, compile_plan
 from repro.core.constants import STOParams
 from repro.core.reservoir import Readout, Reservoir, coerce_input_series
-from repro.kernels import ops
 from repro.serve.scheduler import SlotScheduler
 from repro.serve.state_store import SlotStore
 
@@ -85,40 +88,8 @@ class SessionResult:
 
 
 # ---------------------------------------------------------------------------
-# jit'd per-tick batched steps
+# jit'd per-tick readout (the integrate tick itself lives in repro/api)
 # ---------------------------------------------------------------------------
-
-
-@functools.partial(jax.jit, static_argnames=("hold_steps",))
-def _tick_scan(params_e, w_cp, w_in, m_planes, u, mask, dt, hold_steps):
-    """Advance all E slots one input tick in the core (E, N, 3) layout.
-
-    Takes/returns the store's (3, N, E) planes — the layout shuffle lives
-    inside the jit so one dispatch covers the whole tick. The integration
-    itself mirrors reservoir._drive_scan's per_sample exactly (same field,
-    same step, same op order per lane) so scan-backend sessions reproduce
-    solo drive() results; masked (idle) lanes return unchanged.
-    """
-    m = jnp.transpose(m_planes, (2, 1, 0))  # (E, N, 3)
-    h_in = params_e.a_in * jnp.einsum("ni,ei->en", w_in, u)  # (E, N)
-
-    def field(mm, h):
-        return sto.llg_field(mm, params_e, w_cp, h)
-
-    step = integrators.make_step(field, integrators.RK4)
-
-    def inner(mi, _):
-        return step(mi, dt, h_in), None
-
-    m_new, _ = jax.lax.scan(inner, m, None, length=hold_steps)
-    m_new = jnp.where(mask[:, None, None], m_new, m)
-    return jnp.transpose(m_new, (2, 1, 0)), jnp.transpose(m_new[..., 0])
-
-
-@jax.jit
-def _h_plane(w_in, u, a_in):
-    """(N, E) input-drive x-field for the kernel backends."""
-    return jnp.einsum("ni,ei->ne", w_in, u) * a_in[None, :]
 
 
 @jax.jit
@@ -139,38 +110,68 @@ def _apply_readouts(states_plane, w_out):
 class ReservoirEngine:
     """Serve many concurrent reservoir streams from one batched simulator.
 
-    res is the shared reservoir template (topology W^cp/W^in, dt,
-    hold_steps, default params); num_slots is the ensemble capacity E.
+    Construct either from a reservoir template (Reservoir or SimSpec —
+    topology W^cp/W^in, dt, hold_steps, default params) plus num_slots (the
+    ensemble capacity E), in which case the engine compiles an ExecPlan
+    itself; or from an already-compiled `repro.api.CompiledSim` (num_slots
+    defaults to the plan's ensemble width) — the route to sharded serving:
+
+        sim = compile_plan(spec, ExecPlan(ensemble=64, mesh=mesh))
+        eng = ReservoirEngine(sim)
     """
 
     def __init__(
         self,
-        res: Reservoir,
-        num_slots: int,
+        res: Union[Reservoir, SimSpec, CompiledSim],
+        num_slots: Optional[int] = None,
         backend: str = "auto",
         n_out: int = 1,
         measure: bool = False,
         interpret: bool = False,
     ):
-        if backend not in BACKENDS:
-            raise ValueError(f"backend must be one of {BACKENDS}; got {backend!r}")
-        self.res = res
-        self.store = SlotStore(res, num_slots, n_out=n_out)
+        if isinstance(res, CompiledSim):
+            sim = res
+            if num_slots is not None and num_slots != sim.plan.ensemble:
+                raise ValueError(
+                    f"num_slots ({num_slots}) must match the compiled plan's "
+                    f"ensemble width ({sim.plan.ensemble}); omit num_slots to "
+                    f"use the plan's"
+                )
+            if backend != "auto" or measure or interpret:
+                raise ValueError(
+                    "backend/measure/interpret are ExecPlan decisions; when "
+                    "constructing from a CompiledSim, set them on the plan "
+                    "passed to compile_plan instead"
+                )
+            num_slots = sim.plan.ensemble
+        else:
+            if num_slots is None:
+                raise TypeError("num_slots is required when constructing from a reservoir template")
+            if backend not in BACKENDS:
+                raise ValueError(f"backend must be one of {BACKENDS}; got {backend!r}")
+            spec = res if isinstance(res, SimSpec) else SimSpec.from_reservoir(res)
+            # backend="auto" resolves inside compile_plan: measured-latency
+            # dispatch table (in-process + persisted JSON) > platform gate >
+            # VMEM heuristic. On CPU that lands on "ref" — the plain-lax.scan
+            # XLA path over the planes layout (unpadded, measured faster than
+            # the core-layout scan at every (N, E)); "scan" remains available
+            # as the core-layout mode that reproduces solo drive() bit-for-bit.
+            sim = compile_plan(
+                spec,
+                ExecPlan(
+                    impl=backend,
+                    ensemble=num_slots,
+                    interpret=interpret,
+                    measure=measure,
+                ),
+            )
+        self.sim = sim
+        self.res = sim.spec
+        self.store = SlotStore(sim.spec, num_slots, n_out=n_out)
         self.scheduler = SlotScheduler(num_slots)
-        self.interpret = interpret
         self.tick_count = 0
         self.results: Dict[int, SessionResult] = {}
-        self._dt_scan = jnp.asarray(res.dt, self.store.dtype)
-
-        if backend == "auto":
-            if measure:
-                ops.measure_impl_latency(self.store.n, num_slots, dt=float(res.dt))
-            # "ref" here = the plain-lax.scan XLA path over the planes layout
-            # (unpadded — measured faster than the core-layout scan at every
-            # (N, E) on CPU); "scan" remains available as the core-layout
-            # mode that reproduces solo drive() bit-for-bit.
-            backend = ops.choose_impl(self.store.n, num_slots)
-        self.backend = backend
+        self.backend = sim.impl
 
     # -- session lifecycle -------------------------------------------------
 
@@ -228,32 +229,12 @@ class ReservoirEngine:
     def _advance(self, u: jnp.ndarray) -> jnp.ndarray:
         """One input tick for every slot; returns the (N, E) states plane."""
         store = self.store
-        if self.backend == "scan":
-            store.m, states_plane = _tick_scan(
-                store.params_ensemble,
-                self.res.w_cp,
-                self.res.w_in,
-                store.m,
-                u,
-                store.active_mask,
-                self._dt_scan,
-                self.res.hold_steps,
-            )
-        else:
-            h = _h_plane(self.res.w_in, u, store.a_in_row())
-            store.m = ops.sto_rk4_integrate_planes(
-                store.m,
-                self.res.w_cp,
-                store.params_vec,
-                float(self.res.dt),
-                self.res.hold_steps,
-                h_in=h,
-                lane_mask=store.active_mask,
-                impl=self.backend,
-                n_inner=self.res.hold_steps,
-                interpret=self.interpret,
-            )
-            states_plane = store.m[0]
+        store.m, states_plane = self.sim.tick(
+            store.m,
+            u,
+            lane_mask=store.active_mask,
+            params=store.params_ensemble,
+        )
         return states_plane
 
     def step(self) -> bool:

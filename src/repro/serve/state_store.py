@@ -24,12 +24,13 @@ from typing import List, Optional
 import jax.numpy as jnp
 
 from repro.core.constants import STOParams
-from repro.core.reservoir import Reservoir
 from repro.kernels import ref as kref
 
 
 class SlotStore:
-    def __init__(self, res: Reservoir, num_slots: int, n_out: int = 1):
+    def __init__(self, res, num_slots: int, n_out: int = 1):
+        # res: the engine's physics template — a repro.api.SimSpec (or the
+        # legacy Reservoir tuple; both carry params/w_cp/w_in/m0/dt).
         self.res = res
         self.num_slots = num_slots
         self.n = int(res.m0.shape[0])

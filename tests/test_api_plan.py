@@ -1,0 +1,398 @@
+"""Unified SimSpec/ExecPlan execution API: equivalence + dispatch contracts.
+
+The acceptance bar for the api_redesign: `repro.api.compile_plan` is the
+single place execution decisions are made, the legacy entry points are
+shims over it with NUMERICALLY IDENTICAL results (bit-exact for the scan
+paths), sharded plans match unsharded on a 1-device mesh, and the
+measured-latency dispatch table survives a process restart via JSON.
+"""
+
+import json
+import os
+import warnings
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import api
+from repro.core import (
+    DT,
+    broadcast_params,
+    default_params,
+    drive,
+    fit_ridge,
+    initial_magnetization,
+    integrate_ensemble,
+    integrate_ensemble_sharded,
+    make_coupling_matrix,
+    make_reservoir,
+)
+from repro.kernels import dispatch_table, ops
+from repro.serve.reservoir import ReservoirEngine, StreamSession
+
+ATOL = 5e-5  # the kernel test suite's f32 cross-impl tolerance
+
+_REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def _spec(n=8, hold_steps=5, dtype=jnp.float32, **kw):
+    return api.make_spec(n=n, n_in=1, hold_steps=hold_steps, dtype=dtype, **kw)
+
+
+def _u(t=6, n_in=1, seed=0):
+    return np.random.default_rng(seed).uniform(0.0, 0.5, (t, n_in)).astype(np.float32)
+
+
+class TestCompiledEquivalence:
+    def test_scan_drive_bitexact_with_legacy_drive(self):
+        """The legacy drive shim and an explicit impl='scan' plan run the
+        same jit'd op sequence — results are bit-identical."""
+        res = make_reservoir(n=8, n_in=1, hold_steps=5, dtype=jnp.float32)
+        u = _u()
+        sim = api.compile_plan(api.SimSpec.from_reservoir(res), impl="scan")
+        mT_a, s_a = sim.drive(u)
+        with warnings.catch_warnings():
+            warnings.simplefilter("ignore", DeprecationWarning)
+            mT_b, s_b = drive(res, u)
+        np.testing.assert_array_equal(np.asarray(s_a), np.asarray(s_b))
+        np.testing.assert_array_equal(np.asarray(mT_a), np.asarray(mT_b))
+
+    def test_scan_drive_resume_m0(self):
+        sim = api.compile_plan(_spec(), impl="scan")
+        u = _u(10)
+        _, full = sim.drive(u)
+        m_half, s_a = sim.drive(u[:5])
+        _, s_b = sim.drive(u[5:], m0=m_half)
+        np.testing.assert_array_equal(
+            np.asarray(jnp.concatenate([s_a, s_b])), np.asarray(full)
+        )
+
+    @pytest.mark.parametrize("impl,interpret", [("ref", False), ("fused", True), ("tiled", True)])
+    def test_planes_impls_match_scan(self, impl, interpret):
+        spec = _spec()
+        u = _u()
+        _, s_scan = api.compile_plan(spec, impl="scan").drive(u)
+        _, s = api.compile_plan(spec, impl=impl, interpret=interpret).drive(u)
+        np.testing.assert_allclose(np.asarray(s), np.asarray(s_scan), atol=ATOL)
+
+    def test_drive_batch_matches_per_lane_solo_drive(self):
+        """Each lane of a swept-parameter batch drive == a solo drive with
+        that lane's params (the integrate_ensemble-based driving contract)."""
+        spec = _spec(hold_steps=4)
+        e = 3
+        currents = [1e-3, 2.5e-3, 4e-3]
+        pe = broadcast_params(spec.params, e, current=jnp.asarray(currents))
+        u = _u(5)
+        sim = api.compile_plan(spec._replace(params=pe), impl="scan", ensemble=e)
+        _, states = sim.drive_batch(u)  # (T, E, N)
+        for i, cur in enumerate(currents):
+            solo_spec = spec._replace(
+                params=spec.params._replace(current=jnp.asarray(cur, jnp.float32))
+            )
+            _, s_solo = api.compile_plan(solo_spec, impl="scan").drive(u)
+            np.testing.assert_allclose(
+                np.asarray(states[:, i]), np.asarray(s_solo), atol=ATOL,
+                err_msg=f"lane {i}",
+            )
+
+    def test_drive_batch_per_lane_inputs(self):
+        """(T, E, N_in) per-lane input: each lane == solo drive of its series."""
+        spec = _spec(hold_steps=4)
+        e = 2
+        u_lanes = [_u(5, seed=1), _u(5, seed=2)]
+        u_e = np.stack(u_lanes, axis=1)  # (T, E, 1)
+        sim = api.compile_plan(spec, impl="scan", ensemble=e)
+        solo = api.compile_plan(spec, impl="scan")
+        _, states = sim.drive_batch(u_e)
+        for i in range(e):
+            _, s_solo = solo.drive(u_lanes[i])
+            np.testing.assert_allclose(
+                np.asarray(states[:, i]), np.asarray(s_solo), atol=ATOL
+            )
+
+    def test_integrate_bitexact_with_legacy_ensemble(self):
+        n, e = 8, 4
+        p = default_params(jnp.float32)
+        pe = broadcast_params(p, e, current=jnp.linspace(1e-3, 4e-3, e))
+        w = jnp.asarray(make_coupling_matrix(n, seed=0), jnp.float32)
+        m0 = jnp.broadcast_to(initial_magnetization(n, jnp.float32), (e, n, 3))
+        with warnings.catch_warnings():
+            warnings.simplefilter("ignore", DeprecationWarning)
+            ref, traj_ref = integrate_ensemble(pe, w, m0, DT, 20, save_every=10)
+        spec = api.SimSpec(
+            params=pe, w_cp=w, w_in=jnp.zeros((n, 1), jnp.float32),
+            m0=m0[0], dt=DT, hold_steps=1,
+        )
+        sim = api.compile_plan(spec, impl="scan", ensemble=e)
+        out, traj = sim.integrate(20, m0=m0, save_every=10)
+        np.testing.assert_array_equal(np.asarray(out), np.asarray(ref))
+        np.testing.assert_array_equal(np.asarray(traj), np.asarray(traj_ref))
+
+    def test_integrate_planes_impl_close(self):
+        n, e = 8, 4
+        spec = _spec(n)
+        pe = broadcast_params(spec.params, e)
+        m0 = jnp.broadcast_to(spec.m0, (e, n, 3))
+        sspec = spec._replace(params=pe)
+        ref, _ = api.compile_plan(sspec, impl="scan", ensemble=e).integrate(20, m0=m0)
+        out, _ = api.compile_plan(sspec, impl="ref", ensemble=e).integrate(20, m0=m0)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=ATOL)
+
+    def test_drive_requires_solo_plan(self):
+        sim = api.compile_plan(_spec(), impl="scan", ensemble=4)
+        with pytest.raises(ValueError, match="drive_batch"):
+            sim.drive(_u())
+
+    def test_batch_u_shape_contract(self):
+        sim = api.compile_plan(_spec(), impl="scan", ensemble=4)
+        with pytest.raises(ValueError, match=r"\(T, 4, 1\)"):
+            sim.drive_batch(np.zeros((5, 3, 1), np.float32))
+
+    def test_non_rk4_tableau_rejected_on_kernel_impls(self):
+        with pytest.raises(ValueError, match="RK4"):
+            api.compile_plan(_spec(tableau="heun"), impl="fused")
+        # ...but fine on the core-layout path
+        api.compile_plan(_spec(tableau="heun"), impl="scan").drive(_u())
+
+
+class TestShardedPlans:
+    def _mesh(self):
+        return jax.make_mesh((1, 1), ("data", "model"))
+
+    def test_sharded_matches_unsharded_1device(self):
+        spec = _spec(hold_steps=4)
+        e, u = 4, _u(5)
+        mesh = self._mesh()
+        sh = api.compile_plan(spec, api.ExecPlan(ensemble=e, mesh=mesh))
+        un = api.compile_plan(spec, impl="scan", ensemble=e)
+        mT_s, s_s = sh.drive_batch(u)
+        mT_u, s_u = un.drive_batch(u)
+        np.testing.assert_allclose(np.asarray(s_s), np.asarray(s_u), atol=1e-6)
+        np.testing.assert_allclose(np.asarray(mT_s), np.asarray(mT_u), atol=1e-6)
+        out_s, _ = sh.integrate(20)
+        out_u, _ = un.integrate(20)
+        np.testing.assert_allclose(np.asarray(out_s), np.asarray(out_u), atol=1e-6)
+
+    def test_sharded_tick_masks_and_matches(self):
+        spec = _spec(hold_steps=4)
+        e = 4
+        mesh = self._mesh()
+        sh = api.compile_plan(spec, api.ExecPlan(ensemble=e, mesh=mesh))
+        un = api.compile_plan(spec, impl="scan", ensemble=e)
+        m = jnp.broadcast_to(jnp.transpose(spec.m0)[:, :, None], (3, spec.n, e))
+        u_t = jnp.asarray(_u(e).reshape(e, 1))
+        mask = jnp.asarray([True, False, True, True])
+        m_s, st_s = sh.tick(m, u_t, mask)
+        m_u, st_u = un.tick(m, u_t, mask)
+        np.testing.assert_allclose(np.asarray(m_s), np.asarray(m_u), atol=1e-6)
+        np.testing.assert_allclose(np.asarray(st_s), np.asarray(st_u), atol=1e-6)
+        # frozen lane is bit-identical to its input
+        np.testing.assert_array_equal(np.asarray(m_s[:, :, 1]), np.asarray(m[:, :, 1]))
+
+    def test_sharded_serving_engine(self):
+        """Sharded serving falls out as ExecPlan(mesh=...): the engine on a
+        1-device mesh serves streams that match solo drive references."""
+        spec = _spec(n=8, hold_steps=5)
+        sim = api.compile_plan(spec, api.ExecPlan(ensemble=3, mesh=self._mesh()))
+        eng = ReservoirEngine(sim)
+        solo = api.compile_plan(spec, impl="scan")
+        rng = np.random.default_rng(3)
+        sessions, refs = [], {}
+        for sid in range(5):
+            u = rng.uniform(0.0, 0.5, size=(4 + sid, 1)).astype(np.float32)
+            _, states = solo.drive(jnp.asarray(u))
+            refs[sid] = states
+            sessions.append(StreamSession(sid=sid, u_seq=u))
+        results = eng.run(sessions)
+        assert set(results) == set(refs)
+        for sid, r in results.items():
+            np.testing.assert_allclose(
+                np.asarray(r.states), np.asarray(refs[sid]), atol=ATOL,
+                err_msg=f"session {sid}",
+            )
+
+    def test_sharded_plan_rejects_kernel_impls(self):
+        with pytest.raises(ValueError, match="mesh"):
+            api.ExecPlan(impl="fused", mesh=self._mesh())
+
+
+class TestEngineCompiledSim:
+    def test_engine_from_compiled_sim_matches_solo(self):
+        spec = _spec(n=8, hold_steps=5)
+        eng = ReservoirEngine(api.compile_plan(spec, impl="scan", ensemble=3))
+        assert eng.backend == "scan"
+        solo = api.compile_plan(spec, impl="scan")
+        u = _u(6, seed=7)
+        _, ref = solo.drive(u)
+        r = eng.run([StreamSession(sid=0, u_seq=u)])[0]
+        np.testing.assert_allclose(np.asarray(r.states), np.asarray(ref), atol=ATOL)
+
+    def test_num_slots_must_match_plan(self):
+        sim = api.compile_plan(_spec(), ensemble=4)
+        with pytest.raises(ValueError, match="ensemble width"):
+            ReservoirEngine(sim, num_slots=8)
+
+    def test_template_path_requires_num_slots(self):
+        with pytest.raises(TypeError, match="num_slots"):
+            ReservoirEngine(make_reservoir(n=8, n_in=1))
+
+    def test_compiled_sim_rejects_exec_args(self):
+        """backend/measure/interpret belong to the ExecPlan — passing them
+        alongside a CompiledSim raises instead of being silently dropped."""
+        sim = api.compile_plan(_spec(), ensemble=2)
+        with pytest.raises(ValueError, match="ExecPlan"):
+            ReservoirEngine(sim, backend="scan")
+        with pytest.raises(ValueError, match="ExecPlan"):
+            ReservoirEngine(sim, interpret=True)
+
+
+class TestDeprecationShims:
+    def test_drive_warns(self):
+        res = make_reservoir(n=8, n_in=1, hold_steps=4, dtype=jnp.float32)
+        with pytest.warns(DeprecationWarning, match="compile_plan"):
+            drive(res, _u())
+
+    def test_integrate_ensemble_warns(self):
+        n, e = 8, 2
+        pe = broadcast_params(default_params(jnp.float32), e)
+        w = jnp.asarray(make_coupling_matrix(n, seed=0), jnp.float32)
+        m0 = jnp.broadcast_to(initial_magnetization(n, jnp.float32), (e, n, 3))
+        with pytest.warns(DeprecationWarning, match="compile_plan"):
+            integrate_ensemble(pe, w, m0, DT, 2)
+
+    def test_integrate_ensemble_sharded_warns_and_matches(self):
+        n, e = 8, 2
+        pe = broadcast_params(default_params(jnp.float32), e)
+        w = jnp.asarray(make_coupling_matrix(n, seed=0), jnp.float32)
+        m0 = jnp.broadcast_to(initial_magnetization(n, jnp.float32), (e, n, 3))
+        mesh = jax.make_mesh((1, 1), ("data", "model"))
+        with pytest.warns(DeprecationWarning, match="compile_plan"):
+            out = integrate_ensemble_sharded(mesh, pe, w, m0, DT, 10)
+        with warnings.catch_warnings():
+            warnings.simplefilter("ignore", DeprecationWarning)
+            ref, _ = integrate_ensemble(pe, w, m0, DT, 10)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=1e-6)
+
+
+class TestDispatchTablePersistence:
+    def test_round_trip_survives_table_clear(self, tmp_path):
+        """register -> save -> clear (process restart stand-in) -> load ->
+        choose_impl returns the persisted choice."""
+        path = str(tmp_path / "dispatch_table.test.json")
+        try:
+            dispatch_table.ensure_loaded("cpu")  # committed entries out of the way
+            ops._LATENCY_TABLE.clear()
+            ops.register_impl_choice(640, 24, "tiled", platform="cpu")
+            dispatch_table.save_table(path, platform="cpu")
+            ops._LATENCY_TABLE.clear()
+            assert ops.choose_impl(640, 24, platform="cpu") == "ref"  # heuristic
+            n = dispatch_table.load_table(path, platform="cpu")
+            assert n == 1
+            assert ops.choose_impl(640, 24, platform="cpu") == "tiled"
+        finally:
+            ops._LATENCY_TABLE.clear()
+
+    def test_in_process_measurements_beat_persisted(self, tmp_path):
+        path = str(tmp_path / "dispatch_table.test.json")
+        try:
+            ops.register_impl_choice(640, 24, "tiled", platform="cpu")
+            dispatch_table.save_table(path, platform="cpu")
+            ops._LATENCY_TABLE.clear()
+            ops.register_impl_choice(640, 24, "fused", platform="cpu")
+            dispatch_table.load_table(path, platform="cpu")
+            assert ops.choose_impl(640, 24, platform="cpu") == "fused"
+            dispatch_table.load_table(path, platform="cpu", override=True)
+            assert ops.choose_impl(640, 24, platform="cpu") == "tiled"
+        finally:
+            ops._LATENCY_TABLE.clear()
+
+    def test_committed_cpu_table_loads_on_choose_impl(self):
+        """The committed dispatch_table.cpu.json is picked up lazily by
+        choose_impl — the dispatch table survives process restart."""
+        committed = dispatch_table.table_path("cpu")
+        assert os.path.exists(committed), committed
+        try:
+            ops._LATENCY_TABLE.clear()
+            dispatch_table.reset_loaded()
+            ops.choose_impl(128, 64, platform="cpu")
+            table = ops.latency_table()
+            # N=128, E=64 pads to (128, 128); the serve bench measures f32
+            assert ("cpu", 128, 128, 4) in table
+            assert table[("cpu", 128, 128, 4)] == "ref"
+        finally:
+            ops._LATENCY_TABLE.clear()
+
+    def test_seed_from_bench(self):
+        bench = os.path.join(_REPO_ROOT, "BENCH_serve.json")
+        try:
+            ops._LATENCY_TABLE.clear()
+            n = dispatch_table.seed_from_bench(bench)
+            with open(bench) as f:
+                cells = json.load(f)["cells"]
+            keys = {
+                (ops._round_up(c["n"], ops.LANE), ops._round_up(c["e"], ops.LANE))
+                for c in cells
+                if c["backend"] in ("ref", "fused", "tiled")
+            }
+            assert n == len(keys)  # one entry per distinct padded key
+            assert len(ops.latency_table()) == n
+        finally:
+            ops._LATENCY_TABLE.clear()
+
+    def test_seed_from_bench_conflict_prefers_largest_cell(self, tmp_path):
+        """Cells colliding on one padded key: the least-padded (largest n*e)
+        measurement wins instead of silent last-write-wins."""
+        bench = tmp_path / "bench.json"
+        bench.write_text(json.dumps({
+            "backend_platform": "tpu",
+            "cells": [
+                {"n": 128, "e": 64, "backend": "tiled"},
+                {"n": 16, "e": 8, "backend": "fused"},
+            ],
+        }))
+        try:
+            ops._LATENCY_TABLE.clear()
+            n = dispatch_table.seed_from_bench(str(bench))
+            assert n == 1
+            assert ops.latency_table()[("tpu", 128, 128, 4)] == "tiled"
+        finally:
+            ops._LATENCY_TABLE.clear()
+
+    def test_compile_plan_consults_persisted_choice(self):
+        try:
+            ops.register_impl_choice(8, 4, "fused")
+            # the table's word is final for auto plans at this padded shape;
+            # interpret=True keeps the Pallas kernel runnable on CPU
+            sim = api.compile_plan(_spec(), ensemble=4, interpret=True)
+            assert sim.impl == "fused"
+        finally:
+            ops._LATENCY_TABLE.clear()
+
+
+class TestFitRidgeContract:
+    def test_1d_targets_equal_column(self):
+        rng = np.random.default_rng(0)
+        states = jnp.asarray(rng.standard_normal((20, 4)))
+        y = rng.standard_normal(20)
+        a = fit_ridge(states, jnp.asarray(y))
+        b = fit_ridge(states, jnp.asarray(y[:, None]))
+        np.testing.assert_array_equal(np.asarray(a.w_out), np.asarray(b.w_out))
+
+    def test_rejects_row_vector(self):
+        states = jnp.asarray(np.random.default_rng(1).standard_normal((20, 4)))
+        with pytest.raises(ValueError, match="row vector"):
+            fit_ridge(states, jnp.zeros((1, 20)))
+
+    def test_rejects_length_mismatch(self):
+        states = jnp.asarray(np.random.default_rng(2).standard_normal((20, 4)))
+        with pytest.raises(ValueError, match=r"\(20, n_out\)"):
+            fit_ridge(states, jnp.zeros((19, 1)))
+
+    def test_single_sample_multioutput_no_longer_transposed(self):
+        """(1, n_out) targets against a single state sample used to be
+        silently transposed into (n_out, 1); now they fit as declared."""
+        states = jnp.asarray(np.random.default_rng(3).standard_normal((1, 4)))
+        ro = fit_ridge(states, jnp.asarray([[1.0, 2.0, 3.0]]), reg=1e-3)
+        assert ro.w_out.shape == (5, 3)
