@@ -5,9 +5,17 @@ modules run standalone too:  python -m benchmarks.table2_timing
 
 ``--smoke`` runs a minutes-not-hours subset for CI: a quick serving-
 throughput grid (written to a scratch file, NOT BENCH_serve.json) plus a
-compile-and-drive pass through every unified-API entry point, so the CI
-leg exercises plan compilation, dispatch-table loading, and the serving
+compile-and-drive pass through every unified-API entry point — including
+the chunked `tick_chunk` serving path and an autoscaling engine — so the
+CI leg exercises plan compilation, dispatch-table loading, and the serving
 engine end-to-end without paying for the full grids.
+
+``--save-dispatch-table`` persists measured dispatch choices after the
+run: the fresh serving grid is seeded into the in-process table
+(`kernels.dispatch_table.seed_from_bench`) alongside anything
+`ExecPlan(measure=True)` recorded, then written out via
+`dispatch_table.save_table()` — the workflow for committing a
+GPU/TPU-measured `dispatch_table.<platform>.json`.
 """
 
 from __future__ import annotations
@@ -17,7 +25,18 @@ import os
 import tempfile
 
 
-def smoke() -> None:
+def _save_dispatch_table(bench_json: str, print_fn=print) -> None:
+    from benchmarks.common import csv_row
+    from repro.kernels import dispatch_table
+
+    if os.path.exists(bench_json):
+        seeded = dispatch_table.seed_from_bench(bench_json)
+        print_fn(csv_row("dispatch_table_seeded", 0.0, f"{seeded}_entries"))
+    path = dispatch_table.save_table()
+    print_fn(csv_row("dispatch_table_saved", 0.0, path))
+
+
+def smoke(save_dispatch_table: bool = False) -> None:
     import jax.numpy as jnp
     import numpy as np
 
@@ -37,6 +56,23 @@ def smoke() -> None:
     sim_solo = compile_plan(spec)
     sim_solo.drive(u)
     print(f"smoke_compile_plan,0.0,impl_{sim.impl}")
+
+    # chunked serving path: one tick_chunk dispatch + an autoscaling engine
+    from repro.serve.reservoir import ReservoirEngine, StreamSession
+
+    chunked = compile_plan(spec, ExecPlan(ensemble=4, chunk_ticks=4))
+    eng = ReservoirEngine(chunked, autoscale=True, min_slots=2, max_slots=8)
+    sessions = [
+        StreamSession(
+            sid=i,
+            u_seq=np.random.default_rng(i).uniform(0, 0.5, (6, 1)).astype(np.float32),
+            collect_states=False,
+        )
+        for i in range(6)
+    ]
+    results = eng.run(sessions)
+    print(f"smoke_serve_chunked,0.0,served_{len(results)}_chunk_{eng.chunk_ticks}")
+
     loaded = dispatch_table.ensure_loaded()  # 0 if already loaded: fine
     print(f"smoke_dispatch_table,0.0,loaded_{loaded}_entries")
 
@@ -44,9 +80,11 @@ def smoke() -> None:
     # (BENCH_serve.json) only changes when the full benchmark runs
     out = os.path.join(tempfile.gettempdir(), "BENCH_serve.smoke.json")
     serve_throughput.run(out_path=out, quick=True)
+    if save_dispatch_table:
+        _save_dispatch_table(out)
 
 
-def main() -> None:
+def main(save_dispatch_table: bool = False) -> None:
     from benchmarks import (
         fig2_vectorfield,
         reservoir_tasks,
@@ -65,6 +103,8 @@ def main() -> None:
     # serving-perf trajectory: sessions/sec + ticks/sec over the (N, E) grid,
     # persisted to BENCH_serve.json for PR-over-PR comparison
     serve_throughput.run()
+    if save_dispatch_table:
+        _save_dispatch_table("BENCH_serve.json")
 
 
 if __name__ == "__main__":
@@ -74,5 +114,15 @@ if __name__ == "__main__":
         action="store_true",
         help="fast CI subset: quick serving grid + unified-API compile/drive",
     )
+    ap.add_argument(
+        "--save-dispatch-table",
+        action="store_true",
+        help="after the run, persist measured dispatch choices for this "
+        "platform via kernels.dispatch_table.save_table() (commit the "
+        "resulting dispatch_table.<platform>.json from a GPU/TPU host)",
+    )
     args = ap.parse_args()
-    smoke() if args.smoke else main()
+    if args.smoke:
+        smoke(save_dispatch_table=args.save_dispatch_table)
+    else:
+        main(save_dispatch_table=args.save_dispatch_table)

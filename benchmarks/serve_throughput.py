@@ -1,14 +1,36 @@
-"""Serving throughput: slot-batched reservoir engine vs one-at-a-time.
+"""Serving throughput: pipelined chunked engine vs synchronous vs solo.
 
-For each (N, E) cell the batched engine serves E concurrent streams with one
-integrate per tick; the baseline serves the same streams through a
-single-slot engine, one session at a time (its per-tick cost measured once
-and charged E times — sequential serving is exactly E solo ticks per
-aggregate tick). Reported:
+For each (N, E) cell the same workload — WAVES generations of E concurrent
+length-TICKS streams, so admit/retire churn is part of the bill — runs
+through three serving modes:
 
-    ticks/sec   aggregate session-ticks per second (E / batched tick time)
-    sessions/sec  streams completed per second for length-TICKS streams
-    speedup     batched aggregate throughput over sequential aggregate
+  sequential   one-at-a-time baseline: a single-slot engine's per-tick cost
+               measured once and charged per session-tick
+  sync         slot-batched per-tick serving (`engine.step()` loop): one
+               `CompiledSim.tick` dispatch + per-tick harvest
+  pipelined    chunked double-buffered serving (`engine.run()` with
+               `ExecPlan(chunk_ticks=K)`): one dispatch and ONE bulk
+               device->host transfer per K ticks, host assembly overlapped
+               with device execution
+
+plus, on the smaller grid rows, autoscale-vs-fixed: the same burst served
+by a fixed E-slot engine and by an autoscaling engine that starts at E/4
+and grows through the bucketed plan cache.
+
+Reported per cell:
+
+    ticks_per_sec     aggregate session-ticks per second, pipelined, from a
+                      STEADY run (one wave of E long streams — boundary
+                      churn amortizes to ~nothing, matching the warm-tick
+                      methodology behind the earlier trajectory numbers)
+    sessions_per_sec  ticks_per_sec / REF_STREAM_TICKS — completions/sec of
+                      a reference 7-tick stream; 7 is the stream length
+                      behind the PR-2 trajectory, so this column is
+                      comparable across BENCH_serve.json history
+    sessions_per_sec_sync  the same PR-2 formula from the per-tick median
+    ticks_per_sec_burst / pipelined_speedup  the BURST workload (WAVES
+                      generations, churn billed): pipelined vs step() wall
+    speedup_vs_sequential  steady pipelined aggregate over sequential
 
 Engines are built through the unified execution API: one SimSpec per N,
 compiled against ExecPlans of different ensemble widths — so the backend
@@ -18,7 +40,8 @@ the measured-latency dispatch table / platform gate for that (N, E).
 Emits the shared `name,us_per_call,derived` CSV rows and writes
 BENCH_serve.json (benchmarks/run.py wires it into the suite) so future PRs
 can track the serving-perf trajectory. `kernels.dispatch_table
-.seed_from_bench` turns that JSON back into persisted dispatch entries.
+.seed_from_bench` turns that JSON back into persisted dispatch entries
+(`benchmarks/run.py --save-dispatch-table` commits them).
 
     PYTHONPATH=src python -m benchmarks.serve_throughput [--quick]
 """
@@ -35,12 +58,20 @@ import numpy as np
 from benchmarks.common import csv_row
 from repro.api import ExecPlan, compile_plan, make_spec
 from repro.serve.reservoir import ReservoirEngine, StreamSession
+from repro.serve.scheduler import QueueDepthPolicy
 
 NS = (16, 128, 1024)
 ES = (8, 64, 256)
 HOLD_STEPS = 5
+CHUNK_TICKS = 8
+TICKS = 32  # burst stream length: 4 chunks, boundary churn amortizes realistically
+STEADY_TICKS = 56  # steady-median stream length: 7 chunks (warm 2 + median 3 + drain)
+STEADY_REPS = 3  # best-of, like the per-tick median: noise spikes don't bill
+WAVES = 2  # stream generations per burst measurement -> full-batch turnover
+REF_STREAM_TICKS = 7  # PR-2 trajectory's stream length; sessions/sec anchor
 WARM_TICKS = 2
 MEASURED_TICKS = 3
+AUTOSCALE_MAX_N = 128  # autoscale columns only where the grid row is cheap
 
 
 def _mk_sessions(num, t, n_in, rng, base_sid=0):
@@ -73,37 +104,141 @@ def _tick_time(engine, sessions) -> float:
     return times[len(times) // 2]
 
 
+def _steady_chunk_time(engine, sessions, warm=WARM_TICKS, measured=MEASURED_TICKS):
+    """Median wall time of one mid-run CHUNK once the batch is warm.
+
+    The chunked analogue of `_tick_time` — same estimator (median of a few
+    warm samples, churn excluded) as the per-tick trajectory numbers this
+    file has always reported, so sessions/sec stays comparable across
+    BENCH_serve.json history. Each sample blocks on the chunk, which is
+    the pessimistic (unpipelined) bound for steady throughput."""
+    for s in sessions:
+        engine.submit(s)
+    times = []
+    for _ in range(warm + measured):
+        t0 = time.perf_counter()
+        more = engine.step_chunk()
+        jax.block_until_ready(engine.store.m)
+        times.append(time.perf_counter() - t0)
+        if not more:
+            break
+    engine.run([])  # drain the remainder through the public path
+    times = sorted(times[warm:])
+    return times[len(times) // 2]
+
+
+def _drain_time(engine, sessions, pipelined: bool):
+    """(wall seconds, session-ticks served) for a full drain of sessions."""
+    ticks0 = engine.scheduler.stats.session_ticks
+    t0 = time.perf_counter()
+    if pipelined:
+        engine.run(sessions)
+    else:
+        for s in sessions:
+            engine.submit(s)
+        while engine.scheduler.has_work():
+            engine.step()
+    jax.block_until_ready(engine.store.m)
+    dt = time.perf_counter() - t0
+    return dt, engine.scheduler.stats.session_ticks - ticks0
+
+
 def bench_cell(n: int, e: int, print_fn=print):
     spec = make_spec(n=n, n_in=1, hold_steps=HOLD_STEPS, dtype=jnp.float32)
     rng = np.random.default_rng(0)
-    ticks = WARM_TICKS + MEASURED_TICKS + 2
 
-    batched = ReservoirEngine(compile_plan(spec, ensemble=e))
-    t_batched = _tick_time(batched, _mk_sessions(e, ticks, 1, rng))
+    # -- pipelined chunked serving (the headline path) ---------------------
+    pipe_eng = ReservoirEngine(
+        compile_plan(spec, ExecPlan(ensemble=e, chunk_ticks=CHUNK_TICKS)),
+        max_retained=e,
+    )
+    backend = pipe_eng.backend
+    _drain_time(pipe_eng, _mk_sessions(e, CHUNK_TICKS, 1, rng), pipelined=True)  # warm
+    # steady chunk median: one wave of E long streams — the trajectory metric
+    t_chunk = min(
+        _steady_chunk_time(
+            pipe_eng,
+            _mk_sessions(e, STEADY_TICKS, 1, rng, base_sid=60_000 + 1000 * r),
+        )
+        for r in range(STEADY_REPS)
+    )
+    # burst run: WAVES generations, admit/retire churn billed
+    t_pipe, ticks_pipe = _drain_time(
+        pipe_eng, _mk_sessions(WAVES * e, TICKS, 1, rng, base_sid=20_000), pipelined=True
+    )
 
-    solo = ReservoirEngine(compile_plan(spec, ExecPlan(impl=batched.backend, ensemble=1)))
-    t_solo = _tick_time(solo, _mk_sessions(1, ticks, 1, rng, base_sid=10_000))
+    # -- synchronous per-tick serving (the PR-2 path), same workload -------
+    sync_eng = ReservoirEngine(
+        compile_plan(spec, ExecPlan(impl=backend, ensemble=e)), max_retained=e
+    )
+    t_tick_sync = _tick_time(sync_eng, _mk_sessions(e, WARM_TICKS + MEASURED_TICKS + 2, 1, rng))
+    t_sync, ticks_sync = _drain_time(
+        sync_eng, _mk_sessions(WAVES * e, TICKS, 1, rng, base_sid=30_000), pipelined=False
+    )
 
-    # sequential serving of E streams costs E solo ticks per aggregate tick
-    agg_batched = e / t_batched
+    # -- sequential baseline: E streams = E solo ticks per aggregate tick --
+    solo = ReservoirEngine(compile_plan(spec, ExecPlan(impl=backend, ensemble=1)))
+    t_solo = _tick_time(solo, _mk_sessions(1, WARM_TICKS + MEASURED_TICKS + 2, 1, rng, base_sid=10_000))
+
+    ticks_per_sec = e * CHUNK_TICKS / t_chunk
+    ticks_per_sec_burst = ticks_pipe / t_pipe
+    ticks_per_sec_sync = ticks_sync / t_sync
     agg_solo = 1.0 / t_solo
-    speedup = agg_batched / agg_solo
     cell = {
         "n": n,
         "e": e,
-        "backend": batched.backend,
-        "batched_tick_s": t_batched,
+        "backend": backend,
+        "chunk_ticks": CHUNK_TICKS,
+        "stream_ticks": TICKS,
+        "steady_ticks": STEADY_TICKS,
+        "waves": WAVES,
+        "steady_chunk_s": t_chunk,
+        "pipelined_drain_s": t_pipe,
+        "sync_drain_s": t_sync,
+        "batched_tick_s": t_tick_sync,
         "solo_tick_s": t_solo,
-        "ticks_per_sec": agg_batched,
-        "sessions_per_sec": agg_batched / ticks,
-        "speedup_vs_sequential": speedup,
+        "ticks_per_sec": ticks_per_sec,
+        "ticks_per_sec_burst": ticks_per_sec_burst,
+        "ticks_per_sec_sync": ticks_per_sec_sync,
+        "sessions_per_sec": ticks_per_sec / REF_STREAM_TICKS,
+        "sessions_per_sec_sync": (e / t_tick_sync) / REF_STREAM_TICKS,
+        "pipelined_speedup": t_sync / t_pipe,
+        "speedup_vs_sequential": ticks_per_sec / agg_solo,
         "hold_steps": HOLD_STEPS,
     }
+
+    # -- autoscale vs fixed: the same burst through the bucketed cache -----
+    if n <= AUTOSCALE_MAX_N and e >= 16:
+        start = max(8, e // 4)
+        auto = ReservoirEngine(
+            compile_plan(spec, ExecPlan(impl=backend, ensemble=start, chunk_ticks=CHUNK_TICKS)),
+            autoscale=QueueDepthPolicy(),
+            min_slots=start,
+            max_slots=e,
+            max_retained=e,
+        )
+        # warm the start-width compile out of the timed region (the fixed
+        # engine got the same courtesy); growth-bucket compiles during the
+        # burst stay billed — they ARE autoscale's cost
+        _drain_time(auto, _mk_sessions(start, CHUNK_TICKS, 1, rng, base_sid=45_000), pipelined=True)
+        t_auto, _ = _drain_time(
+            auto, _mk_sessions(WAVES * e, TICKS, 1, rng, base_sid=50_000), pipelined=True
+        )
+        cell.update(
+            autoscale_start_slots=start,
+            autoscale_final_slots=auto.num_slots,
+            autoscale_grows=auto.scheduler.stats.grows,
+            fixed_burst_s=t_pipe,
+            autoscale_burst_s=t_auto,
+            autoscale_vs_fixed=t_pipe / t_auto,
+        )
+
     print_fn(
         csv_row(
             f"serve_n{n}_e{e}",
-            t_batched * 1e6,
-            f"backend_{batched.backend}_speedup_{speedup:.1f}x",
+            (t_pipe / max(1, ticks_pipe)) * e * 1e6,  # us per aggregate tick
+            f"backend_{backend}_pipelined_{cell['pipelined_speedup']:.1f}x"
+            f"_vs_seq_{cell['speedup_vs_sequential']:.1f}x",
         )
     )
     return cell
@@ -117,6 +252,9 @@ def run(out_path: str = "BENCH_serve.json", quick: bool = False, print_fn=print)
         "benchmark": "serve_throughput",
         "backend_platform": jax.default_backend(),
         "hold_steps": HOLD_STEPS,
+        "chunk_ticks": CHUNK_TICKS,
+        "stream_ticks": TICKS,
+        "ref_stream_ticks": REF_STREAM_TICKS,
         "cells": cells,
     }
     with open(out_path, "w") as f:

@@ -9,9 +9,11 @@ scenario-diversity the engine exists for:
   tenant 2: delay-line memory (u[t-2]) at a different drive current
 
 Each tenant's readout is trained offline with CompiledSim.drive +
-fit_ridge (the unified execution API), then the engine streams fresh inputs through all tenants concurrently: one batched
-RK4 integrate advances every session per tick. Outputs are checked against
-running each stream solo.
+fit_ridge (the unified execution API), then the engine streams fresh
+inputs through all tenants concurrently — pipelined in chunks of
+`chunk_ticks=8` input ticks, so one batched RK4 dispatch (and one bulk
+device->host transfer) covers 8 ticks of every session. Outputs are
+checked against running each stream solo.
 
 Run:  PYTHONPATH=src python examples/serve_reservoir.py
 """
@@ -71,9 +73,10 @@ def main():
         ),
     ]
 
-    eng = ReservoirEngine(compile_plan(spec, ensemble=4))
+    eng = ReservoirEngine(compile_plan(spec, ensemble=4, chunk_ticks=8))
     results = eng.run(sessions)
-    print(f"backend={eng.backend}  slots=4  tenants={len(results)}")
+    print(f"backend={eng.backend}  slots=4  chunk_ticks={eng.chunk_ticks}  "
+          f"tenants={len(results)}")
 
     for sid, (tenant_sim, ro, y) in {
         0: (sim, ro_narma, y1), 1: (sim, ro_sine, y2), 2: (hot_sim, ro_delay, y3)

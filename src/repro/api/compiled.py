@@ -152,6 +152,41 @@ def _tick_scan(params_e, w_cp, w_in, m_planes, u, mask, dt, hold_steps,
     return jnp.transpose(m_new, (2, 1, 0)), jnp.transpose(m_new[..., 0])
 
 
+@functools.partial(jax.jit, static_argnames=("hold_steps", "tableau_name"))
+def _tick_chunk_scan(params_e, w_cp, w_in, m_planes, u_block, mask_block, dt,
+                     hold_steps, tableau_name: str = "rk4"):
+    """Advance all E slots through K input ticks in ONE dispatch (core layout).
+
+    u_block is (K, E, N_in), mask_block (K, E). The per-tick body is exactly
+    `_tick_scan`'s (same h_in einsum, same hold-window scan, same masked
+    jnp.where) with the layout shuffle hoisted out of the K-loop — transposes
+    are pure data movement, so a K-chunk is bit-identical to K sequential
+    `_tick_scan` calls. The stacked states live on device until the caller
+    transfers them: (K, N, E) states block, one host copy per chunk instead
+    of per tick.
+    """
+    m = jnp.transpose(m_planes, (2, 1, 0))  # (E, N, 3)
+
+    def field(mm, h):
+        return sto.llg_field(mm, params_e, w_cp, h)
+
+    step = integrators.make_step(field, integrators.TABLEAUX[tableau_name])
+
+    def per_tick(m_c, tick_in):
+        u_t, mask_t = tick_in
+        h_in = params_e.a_in * jnp.einsum("ni,ei->en", w_in, u_t)  # (E, N)
+
+        def inner(mi, _):
+            return step(mi, dt, h_in), None
+
+        m_new, _ = jax.lax.scan(inner, m_c, None, length=hold_steps)
+        m_new = jnp.where(mask_t[:, None, None], m_new, m_c)
+        return m_new, jnp.transpose(m_new[..., 0])  # (N, E)
+
+    mT, states = jax.lax.scan(per_tick, m, (u_block, mask_block))
+    return jnp.transpose(mT, (2, 1, 0)), states  # (3, N, E), (K, N, E)
+
+
 # ---------------------------------------------------------------------------
 # jit'd workers — kernel (3, N, E) planes layout ("ref"/"fused"/"tiled")
 # ---------------------------------------------------------------------------
@@ -204,6 +239,35 @@ def _tick_planes(
         block_n=block_n, block_e=block_e, interpret=interpret,
     )
     return m_new, m_new[0]
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("dt", "hold_steps", "impl", "n_inner", "block_n", "block_e", "interpret"),
+)
+def _tick_chunk_planes(
+    params_e, w_cp, w_in, m_planes, u_block, mask_block,
+    *, dt, hold_steps, impl, n_inner, block_n, block_e, interpret,
+):
+    """K serving ticks in one dispatch, kernel layout. Per-tick body is
+    `_tick_planes`' exactly, with pack_params hoisted out of the K-loop
+    (it is value-identical each tick). Returns ((3, N, E), (K, N, E))."""
+    e = m_planes.shape[-1]
+    pv = kref.pack_params(params_e, e, m_planes.dtype)
+    a_in = jnp.reshape(params_e.a_in, (-1,)) * jnp.ones((e,), m_planes.dtype)
+
+    def per_tick(m_c, tick_in):
+        u_t, mask_t = tick_in
+        h = jnp.einsum("ni,ei->ne", w_in, u_t) * a_in[None, :]
+        m_new = ops._integrate_planes_jit(
+            m_c, w_cp, pv, h, mask_t,
+            dt=dt, n_steps=hold_steps, impl=impl, n_inner=n_inner,
+            block_n=block_n, block_e=block_e, interpret=interpret,
+        )
+        return m_new, m_new[0]
+
+    mT, states = jax.lax.scan(per_tick, m_planes, (u_block, mask_block))
+    return mT, states  # (3, N, E), (K, N, E)
 
 
 @functools.partial(
@@ -477,6 +541,74 @@ class CompiledSim:
             )
         return _tick_planes(
             params_e, spec.w_cp, spec.w_in, m_planes, u, lane_mask,
+            dt=float(spec.dt), hold_steps=spec.hold_steps, impl=self.impl,
+            n_inner=self._n_inner, block_n=self._block_n,
+            block_e=self._block_e, interpret=self.plan.interpret,
+        )
+
+    def tick_chunk(
+        self,
+        m_planes: jnp.ndarray,  # (3, N, E) slot-store layout
+        u_block: jnp.ndarray,  # (K, E, N_in) input rows for K ticks
+        lane_mask: Optional[jnp.ndarray] = None,  # (K, E) or (E,) bool
+        params: Optional[STOParams] = None,  # per-lane STOParams, (E, 1) leaves
+    ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+        """K serving ticks (K hold windows) for a slot batch in ONE dispatch.
+
+        The chunked serving hot path (`ExecPlan.chunk_ticks`): a lax.scan
+        over the K input ticks keeps every intermediate states plane in a
+        device-side buffer, so the host pays one transfer per chunk instead
+        of one per tick. Returns (m_planes' (3, N, E), states (K, N, E)).
+
+        lane_mask may be per tick (K, E) — a lane masked False for rows
+        [0, k) and True after integrates exactly as if admitted at tick k
+        (frozen lanes are bit-identical), and the mirror image retires a
+        lane mid-chunk; or a single (E,) row applied to every tick. On the
+        scan impl a K-chunk is bit-identical to K sequential `tick` calls
+        (pinned by tests/test_serve_chunked.py); the planes impls and
+        sharded plans agree within the kernel suite's tolerance.
+        """
+        spec = self.spec
+        params_e = self.ensemble_params(params)
+        u_block = jnp.asarray(u_block, spec.dtype)
+        if u_block.ndim != 3 or u_block.shape[1:] != (self.e, spec.n_in):
+            raise ValueError(
+                f"u_block must have shape (K, {self.e}, {spec.n_in}); "
+                f"got {tuple(u_block.shape)}"
+            )
+        k = u_block.shape[0]
+        if lane_mask is None:
+            mask_block = jnp.ones((k, self.e), dtype=bool)
+        else:
+            lane_mask = jnp.asarray(lane_mask, dtype=bool)
+            if lane_mask.shape == (self.e,):
+                mask_block = jnp.broadcast_to(lane_mask[None, :], (k, self.e))
+            elif lane_mask.shape == (k, self.e):
+                mask_block = lane_mask
+            else:
+                raise ValueError(
+                    f"lane_mask must have shape ({k}, {self.e}) or ({self.e},); "
+                    f"got {tuple(lane_mask.shape)}"
+                )
+        if self.plan.sharded:
+            m = jnp.transpose(m_planes, (2, 1, 0))  # (E, N, 3)
+            m_new, states = _sharded.tick_chunk_sharded(
+                self.plan.mesh, params_e, spec.w_cp, spec.w_in, m,
+                u_block, mask_block, spec.dt, spec.hold_steps,
+                ensemble_axes=self.plan.ensemble_axes,
+                model_axis=self.plan.model_axis,
+                tableau_name=spec.tableau,
+                gather_dtype=self.plan.gather_dtype,
+            )
+            # states arrive (K, E, N): shuffle to the (K, N, E) block contract
+            return jnp.transpose(m_new, (2, 1, 0)), jnp.transpose(states, (0, 2, 1))
+        if self.impl == "scan":
+            return _tick_chunk_scan(
+                params_e, spec.w_cp, spec.w_in, m_planes, u_block, mask_block,
+                self._dt_scan, spec.hold_steps, spec.tableau,
+            )
+        return _tick_chunk_planes(
+            params_e, spec.w_cp, spec.w_in, m_planes, u_block, mask_block,
             dt=float(spec.dt), hold_steps=spec.hold_steps, impl=self.impl,
             n_inner=self._n_inner, block_n=self._block_n,
             block_e=self._block_e, interpret=self.plan.interpret,

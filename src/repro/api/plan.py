@@ -20,12 +20,21 @@ Every execution decision that used to be scattered across
              `distributed.sharding.reservoir_specs`.
   gather_dtype  reduced-precision coupling path for sharded plans (bf16
              wire + matmul; see core/ensemble.py §Perf C notes).
+  chunk_ticks  K: how many input ticks one serving dispatch covers.
+             K > 1 turns `CompiledSim.tick_chunk` into a lax.scan over K
+             ticks whose per-tick states stay in a device-side buffer and
+             reach the host as ONE transfer per chunk — the pipelined
+             serving path (`serve.reservoir.ReservoirEngine.run`) overlaps
+             host u-block assembly with device execution of the previous
+             chunk. K = 1 keeps per-tick serving semantics.
 """
 
 from __future__ import annotations
 
 import dataclasses
 from typing import Optional, Sequence, Tuple
+
+import numpy as np
 
 try:  # jax is a hard dependency of the repo; guard only for doc tooling
     from jax.sharding import Mesh
@@ -46,6 +55,7 @@ class ExecPlan:
     ensemble_axes: Sequence[str] = ("data",)
     model_axis: Optional[str] = "model"
     gather_dtype: Optional[object] = None
+    chunk_ticks: int = 1
     interpret: bool = False
     measure: bool = False  # time impl candidates at compile, pin the winner
 
@@ -59,6 +69,22 @@ class ExecPlan:
                 "sharded plans integrate in the core layout via shard_map; "
                 f"impl must be 'auto' or 'scan' when mesh is set, got {self.impl!r}"
             )
+        if isinstance(self.chunk_ticks, bool) or not isinstance(self.chunk_ticks, int):
+            raise ValueError(
+                f"chunk_ticks must be an int >= 1; got {self.chunk_ticks!r}"
+            )
+        if self.chunk_ticks < 1:
+            raise ValueError(
+                f"chunk_ticks must be >= 1; got {self.chunk_ticks}"
+            )
+        if self.gather_dtype is not None:
+            try:
+                np.dtype(self.gather_dtype)
+            except TypeError:
+                raise ValueError(
+                    f"gather_dtype must be a dtype (e.g. jnp.bfloat16) or None; "
+                    f"got {self.gather_dtype!r}"
+                ) from None
 
     @property
     def sharded(self) -> bool:

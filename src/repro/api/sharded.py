@@ -217,6 +217,101 @@ def _tick_sharded_fn(
     )
 
 
+@functools.lru_cache(maxsize=None)
+def _tick_chunk_sharded_fn(
+    mesh: Mesh,
+    ensemble_axes: tuple,
+    model_axis: Optional[str],
+    tableau_name: str,
+    dt: float,
+    hold_steps: int,
+    gather_dtype,
+):
+    """Build (once per signature) the jit'd shard_map'd K-tick chunk.
+
+    Chunked serving's sharded path: the local body scans over the K input
+    ticks, so per-tick states stay device-side and shard-local until the
+    engine's once-per-chunk harvest. Cached like `_tick_sharded_fn` — the
+    engine calls this every chunk and a fresh closure would retrace.
+    """
+    tableau = integrators.TABLEAUX[tableau_name]
+    specs = reservoir_specs(ensemble_axes, model_axis)
+
+    def local_run(params_l: STOParams, w_l, win_l, m_l, u_l, mask_l):
+        # u_l: (K, E_l, N_in), mask_l: (K, E_l)
+        w_mm = w_l.astype(gather_dtype) if gather_dtype is not None else w_l
+
+        def field(mm, h_in_x):
+            h_x = _coupling_field(params_l, w_mm, mm, model_axis, gather_dtype)
+            h_x = h_x + h_in_x
+            b = sto.effective_field_b(mm, params_l, h_x)
+            return sto.llg_rhs_from_b(mm, b, params_l)
+
+        step = integrators.make_step(field, tableau)
+        dt_c = jnp.asarray(dt, m_l.dtype)
+
+        def per_tick(m_c, tick_in):
+            u_t, mask_t = tick_in
+            h_in = params_l.a_in * jnp.einsum("ni,ei->en", win_l, u_t)
+
+            def inner(mi, _):
+                return step(mi, dt_c, h_in), None
+
+            m_new, _ = jax.lax.scan(inner, m_c, None, length=hold_steps)
+            m_new = jnp.where(mask_t[:, None, None], m_new, m_c)
+            return m_new, m_new[..., 0]
+
+        mT, states = jax.lax.scan(per_tick, m_l, (u_l, mask_l))
+        return mT, states  # (E_l, N_l, 3), (K, E_l, N_l)
+
+    p_params = STOParams(*([specs["params"]] * len(STOParams._fields)))
+    return jax.jit(
+        shard_map(
+            local_run,
+            mesh=mesh,
+            in_specs=(
+                p_params,
+                specs["w"],
+                specs["w_in"],
+                specs["m"],
+                specs["u_e"],
+                specs["lane_block"],
+            ),
+            out_specs=(specs["m"], specs["states"]),
+            **_SHARD_MAP_CHECK_KW,
+        )
+    )
+
+
+def tick_chunk_sharded(
+    mesh: Mesh,
+    params: STOParams,  # leaves (E, 1)
+    w_cp: jnp.ndarray,  # (N, N)
+    w_in: jnp.ndarray,  # (N, N_in)
+    m: jnp.ndarray,  # (E, N, 3)
+    u_block: jnp.ndarray,  # (K, E, N_in) input rows for K ticks
+    mask_block: jnp.ndarray,  # (K, E) bool; False = lane frozen that tick
+    dt: float,
+    hold_steps: int,
+    ensemble_axes: Sequence[str] = ("data",),
+    model_axis: Optional[str] = "model",
+    tableau_name: str = "rk4",
+    gather_dtype=None,
+):
+    """K serving ticks for a sharded slot batch in one dispatch.
+
+    The sharded analogue of `CompiledSim.tick_chunk`: per-tick lane masks
+    support mid-chunk admit/retire (masked ticks are bit-identical), and the
+    (K, E, N) states block stays on device until the engine's bulk harvest.
+    Returns (m' (E, N, 3), states (K, E, N)).
+    """
+    fn = _tick_chunk_sharded_fn(
+        mesh, tuple(ensemble_axes), model_axis, tableau_name,
+        float(dt), int(hold_steps), gather_dtype,
+    )
+    return fn(params, w_cp, w_in, m, u_block, mask_block)
+
+
 def tick_sharded(
     mesh: Mesh,
     params: STOParams,  # leaves (E, 1)

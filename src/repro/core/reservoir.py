@@ -45,15 +45,17 @@ def make_reservoir(
     return Reservoir(params, w_cp, w_in, m0, dt, hold_steps)
 
 
-def coerce_input_series(u_seq: jnp.ndarray, n_in: int, dtype) -> jnp.ndarray:
+def coerce_input_series(u_seq: jnp.ndarray, n_in: int, dtype, xp=jnp) -> jnp.ndarray:
     """Validate an input series against the explicit (T, N_in) contract.
 
     Accepts (T, N_in), or 1-D (T,) when n_in == 1. Anything else — including
     the previously silently-transposed (1, T) — raises with the expected
     shape spelled out. Shared by `drive` and the serving engine so both
-    enforce the same contract.
+    enforce the same contract. xp=numpy keeps the series host-side (the
+    serving engine assembles u blocks on host; a device round-trip per
+    submit is pure overhead).
     """
-    u_seq = jnp.asarray(u_seq, dtype=dtype)
+    u_seq = xp.asarray(u_seq, dtype=dtype)
     if u_seq.ndim == 1:
         if n_in != 1:
             raise ValueError(

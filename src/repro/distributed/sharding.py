@@ -315,6 +315,7 @@ def reservoir_specs(
       u_e     per-lane input (T, E, N_in)
       u_tick  one tick's per-lane input rows (E, N_in)
       lane    per-lane vectors (E,) — masks, gains
+      lane_block  per-tick per-lane mask block (K, E) — chunked serving
       states  collected node states (T, E, N)
       states_tick  one tick's states plane (E, N)
     """
@@ -328,6 +329,7 @@ def reservoir_specs(
         "u_e": P(None, ens, None),
         "u_tick": P(ens, None),
         "lane": P(ens),
+        "lane_block": P(None, ens),
         "states": P(None, ens, model_axis),
         "states_tick": P(ens, model_axis),
     }

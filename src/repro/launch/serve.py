@@ -11,10 +11,14 @@ finished slots refill immediately via prefill + cache splice.
 
 Reservoir mode — the multi-tenant streaming reservoir engine
 (repro/serve/reservoir.py): client streams are slot-batched onto the
-ensemble axis so one batched RK4 integrate advances every session per tick.
+ensemble axis so one batched RK4 integrate advances every session per
+tick. `--chunk-ticks K` serves K ticks per dispatch through the pipelined
+chunked path (one bulk transfer per chunk); `--autoscale` grows/shrinks
+the slot count under load through the bucketed plan cache.
 
     PYTHONPATH=src python -m repro.launch.serve --mode reservoir \
-        --n 128 --slots 64 --sessions 96 --ticks 50 --backend auto
+        --n 128 --slots 64 --sessions 96 --ticks 50 --backend auto \
+        --chunk-ticks 8 --autoscale --max-slots 256
 """
 
 import argparse
@@ -93,23 +97,37 @@ def main_reservoir(args):
         for i in range(args.sessions)
     ]
 
+    autoscale_kw = {}
+    if args.autoscale:
+        autoscale_kw = dict(
+            autoscale=True,
+            min_slots=args.min_slots or args.slots,
+            max_slots=args.max_slots or args.slots,
+        )
     eng = ReservoirEngine(
         compile_plan(
             spec,
             ExecPlan(
-                impl=args.backend, ensemble=args.slots, measure=args.measure
+                impl=args.backend,
+                ensemble=args.slots,
+                measure=args.measure,
+                chunk_ticks=args.chunk_ticks,
             ),
-        )
+        ),
+        **autoscale_kw,
     )
     t0 = time.time()
     results = eng.run(sessions)
     dt = time.time() - t0
     st = eng.scheduler.stats
-    print(f"backend={eng.backend} slots={args.slots} N={args.n} "
-          f"hold_steps={args.hold_steps}")
+    print(f"backend={eng.backend} slots={eng.num_slots} N={args.n} "
+          f"hold_steps={args.hold_steps} chunk_ticks={eng.chunk_ticks}")
     print(f"served {len(results)} sessions / {st.session_ticks} session-ticks "
           f"in {dt:.2f}s ({st.session_ticks / dt:.1f} ticks/s incl. compile; "
-          f"{st.ticks} batched ticks)")
+          f"{st.ticks} wall ticks, occupancy {eng.scheduler.occupancy():.2f}, "
+          f"mean queue wait {eng.scheduler.mean_queue_wait():.1f} ticks"
+          + (f", grows {st.grows} shrinks {st.shrinks}" if args.autoscale else "")
+          + ")")
 
 
 def main(argv=None):
@@ -130,6 +148,15 @@ def main(argv=None):
     ap.add_argument("--backend", default="auto")
     ap.add_argument("--measure", action="store_true",
                     help="time backend candidates for this (N, E) first")
+    ap.add_argument("--chunk-ticks", type=int, default=8,
+                    help="input ticks per serving dispatch (pipelined chunks)")
+    ap.add_argument("--autoscale", action="store_true",
+                    help="grow/shrink the slot count under load "
+                         "(bucketed plan cache, QueueDepthPolicy)")
+    ap.add_argument("--min-slots", type=int, default=None,
+                    help="autoscale floor (default: --slots)")
+    ap.add_argument("--max-slots", type=int, default=None,
+                    help="autoscale ceiling (default: --slots)")
     args = ap.parse_args(argv)
 
     if args.mode == "reservoir":

@@ -12,19 +12,35 @@ sine-approx, ... — anything the reservoir was trained for); readout
 application is itself slot-batched (one einsum over E).
 
 Execution rides on the unified API (repro/api): the engine holds a
-CompiledSim and its per-tick hot path is `CompiledSim.tick`, so every
-impl-dispatch / padding / sharding decision is made once, in
-`repro.api.compile_plan`. Construct from a Reservoir/SimSpec (the engine
-compiles an ExecPlan for you; backend="auto" consults the measured-latency
-dispatch table, persisted per-platform JSON included, then the VMEM
-heuristic) or hand the engine an already-compiled sim — including a
-sharded one (`ExecPlan(mesh=...)`), which serves the slot batch across the
-device mesh with E on the data axes and N on the model axis. The extra "scan" backend
-integrates in the core (E, N, 3) layout with exactly `reservoir.drive`'s
-math, so per-session streamed states are numerically indistinguishable
-from running the stream alone; every other backend agrees with solo runs
-to the kernel test suite's tolerance (tests/test_serve_reservoir.py pins
-all of them).
+CompiledSim and its hot path is `CompiledSim.tick_chunk` — a lax.scan over
+`ExecPlan.chunk_ticks` input ticks whose states stay in a device-side
+buffer until ONE bulk transfer per chunk. `run()` is a double-buffered
+pipeline: while the device executes the current chunk (JAX async
+dispatch), the host harvests the previous chunk and assembles the next
+K-tick u block, applying admissions/retirements to the staging slot store
+at chunk boundaries. `step()` keeps the synchronous per-tick path (one
+`CompiledSim.tick` + per-slot harvest per call) for externally-clocked
+callers and as the pipelined path's baseline.
+
+Under load the engine AUTOSCALES the slot count: a bucketed plan cache
+(one `compile_plan` per power-of-two ensemble width between min_slots and
+max_slots) lets a chunk boundary grow or shrink the batch by migrating the
+occupied SlotStore columns between cached CompiledSims. The decision rule
+is a pluggable `serve.scheduler.AutoscalePolicy` fed by the scheduler's
+occupancy / queue-depth / queue-wait stats (default: `QueueDepthPolicy`,
+grow-on-demand + hysteretic shrink).
+
+Construct from a Reservoir/SimSpec (the engine compiles an ExecPlan for
+you; backend="auto" consults the measured-latency dispatch table, persisted
+per-platform JSON included, then the VMEM heuristic) or hand the engine an
+already-compiled sim — including a sharded one (`ExecPlan(mesh=...)`),
+which serves the slot batch across the device mesh with E on the data axes
+and N on the model axis. The extra "scan" backend integrates in the core
+(E, N, 3) layout with exactly `reservoir.drive`'s math, so per-session
+streamed states are numerically indistinguishable from running the stream
+alone — chunked or per-tick (tests/test_serve_chunked.py pins the K>1 /
+K=1 bit-equality); every other backend agrees with solo runs to the kernel
+test suite's tolerance (tests/test_serve_reservoir.py pins all of them).
 
 This is the serving front for time-multiplexed STO reservoir hardware
 (Riou et al., arXiv:1904.11236; Kanao et al., arXiv:1905.07937): each
@@ -35,7 +51,7 @@ advances all of them in lockstep.
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Optional, Union
+from typing import Dict, List, Optional, Tuple, Union
 
 import jax
 import jax.numpy as jnp
@@ -44,7 +60,7 @@ import numpy as np
 from repro.api import CompiledSim, ExecPlan, SimSpec, compile_plan
 from repro.core.constants import STOParams
 from repro.core.reservoir import Readout, Reservoir, coerce_input_series
-from repro.serve.scheduler import SlotScheduler
+from repro.serve.scheduler import AutoscalePolicy, QueueDepthPolicy, SlotScheduler
 from repro.serve.state_store import SlotStore
 
 BACKENDS = ("auto", "scan", "ref", "fused", "tiled")
@@ -74,21 +90,39 @@ class StreamSession:
     _states: list = dataclasses.field(default_factory=list, repr=False)
     _outs: list = dataclasses.field(default_factory=list, repr=False)
     _admitted_tick: int = dataclasses.field(default=-1, repr=False)
+    _finished_tick: int = dataclasses.field(default=-1, repr=False)
 
 
 @dataclasses.dataclass
 class SessionResult:
     sid: int
-    states: Optional[jnp.ndarray]  # (T, N) streamed node states
-    outputs: Optional[jnp.ndarray]  # (T - washout, n_out) readout outputs
-    final_m: jnp.ndarray  # (N, 3) — resumable via StreamSession.m0 / drive(m0=)
+    # states/outputs are host (numpy) arrays — harvested device->host once;
+    # final_m resumes a stream via StreamSession.m0 / drive(m0=) (host on
+    # the chunked path, device on the per-tick path; both coerce on use)
+    states: Optional[np.ndarray]  # (T, N) streamed node states
+    outputs: Optional[np.ndarray]  # (T - washout, n_out) readout outputs
+    final_m: np.ndarray  # (N, 3)
     admitted_tick: int
     finished_tick: int
     slot: int
 
 
+@dataclasses.dataclass
+class _ChunkPlan:
+    """One launched chunk's host-side record: who occupied which slot for
+    how many of the K ticks, plus the device handles to harvest."""
+
+    # (session, slot, n_ticks served in rows [0, n_ticks) of the chunk)
+    entries: List[Tuple[StreamSession, int, int]]
+    u: np.ndarray  # (K, E, N_in) assembled input block
+    mask: np.ndarray  # (K, E) per-tick lane activity
+    any_readout: bool
+    states_block: Optional[jnp.ndarray] = None  # (K, N, E) device
+    outs_block: Optional[jnp.ndarray] = None  # (K, E, n_out) device
+
+
 # ---------------------------------------------------------------------------
-# jit'd per-tick readout (the integrate tick itself lives in repro/api)
+# jit'd readout application (the integrate tick itself lives in repro/api)
 # ---------------------------------------------------------------------------
 
 
@@ -100,6 +134,31 @@ def _apply_readouts(states_plane, w_out):
         [states_plane, jnp.ones((1, e), states_plane.dtype)], axis=0
     )
     return jnp.einsum("ne,eno->eo", xb, w_out)
+
+
+def _apply_readouts_chunk(states_block, w_out):
+    """Chunked readout: (K, N, E) x (E, N+1, n_out) -> (K, E, n_out).
+
+    K dispatches of the SAME compiled `_apply_readouts` the per-tick path
+    uses, stacked on device — a single batched einsum ("kne,eno->keo")
+    contracts in a different order and drifts from the per-tick outputs by
+    a ULP, and chunked serving pins bit-equality with per-tick serving.
+    The stack stays device-side until the once-per-chunk harvest."""
+    return jnp.stack(
+        [_apply_readouts(states_block[t], w_out) for t in range(states_block.shape[0])]
+    )
+
+
+def _bucket_slots(demand: int, min_slots: int, max_slots: int) -> int:
+    """Smallest cached bucket covering demand: min_slots * 2^k, clamped.
+
+    Power-of-two widths keep the plan cache tiny (log2 of the range) and —
+    for buckets >= the kernels' LANE — MXU-aligned, so every bucket's padded
+    shapes are ones the dispatch table already knows."""
+    b = min_slots
+    while b < demand and b < max_slots:
+        b *= 2
+    return min(b, max_slots)
 
 
 # ---------------------------------------------------------------------------
@@ -116,8 +175,19 @@ class ReservoirEngine:
     itself; or from an already-compiled `repro.api.CompiledSim` (num_slots
     defaults to the plan's ensemble width) — the route to sharded serving:
 
-        sim = compile_plan(spec, ExecPlan(ensemble=64, mesh=mesh))
+        sim = compile_plan(spec, ExecPlan(ensemble=64, mesh=mesh, chunk_ticks=16))
         eng = ReservoirEngine(sim)
+
+    Serving knobs:
+      chunk_ticks   (template route; CompiledSim route: set on the ExecPlan)
+                    K ticks per dispatch — `run()` pipelines K-tick chunks.
+      max_retained  cap on finished SessionResults kept in `results`; oldest
+                    are evicted. Pair with `pop_results()` for long-running
+                    serving so retired-session state can't accumulate.
+      autoscale     an AutoscalePolicy (or True for QueueDepthPolicy()):
+                    grow/shrink the slot count between min_slots and
+                    max_slots at chunk boundaries via the bucketed plan
+                    cache (powers of two from min_slots).
     """
 
     def __init__(
@@ -128,6 +198,11 @@ class ReservoirEngine:
         n_out: int = 1,
         measure: bool = False,
         interpret: bool = False,
+        chunk_ticks: Optional[int] = None,
+        max_retained: Optional[int] = None,
+        autoscale: Union[AutoscalePolicy, bool, None] = None,
+        min_slots: Optional[int] = None,
+        max_slots: Optional[int] = None,
     ):
         if isinstance(res, CompiledSim):
             sim = res
@@ -137,11 +212,11 @@ class ReservoirEngine:
                     f"ensemble width ({sim.plan.ensemble}); omit num_slots to "
                     f"use the plan's"
                 )
-            if backend != "auto" or measure or interpret:
+            if backend != "auto" or measure or interpret or chunk_ticks is not None:
                 raise ValueError(
-                    "backend/measure/interpret are ExecPlan decisions; when "
-                    "constructing from a CompiledSim, set them on the plan "
-                    "passed to compile_plan instead"
+                    "backend/measure/interpret/chunk_ticks are ExecPlan "
+                    "decisions; when constructing from a CompiledSim, set "
+                    "them on the plan passed to compile_plan instead"
                 )
             num_slots = sim.plan.ensemble
         else:
@@ -163,25 +238,77 @@ class ReservoirEngine:
                     ensemble=num_slots,
                     interpret=interpret,
                     measure=measure,
+                    chunk_ticks=1 if chunk_ticks is None else chunk_ticks,
                 ),
             )
         self.sim = sim
         self.res = sim.spec
+        self.chunk_ticks = sim.plan.chunk_ticks
         self.store = SlotStore(sim.spec, num_slots, n_out=n_out)
         self.scheduler = SlotScheduler(num_slots)
         self.tick_count = 0
         self.results: Dict[int, SessionResult] = {}
+        self.max_retained = max_retained
         self.backend = sim.impl
+
+        # -- autoscaling: bucketed plan cache over ensemble widths ---------
+        if autoscale is True:
+            autoscale = QueueDepthPolicy()
+        self.autoscale: Optional[AutoscalePolicy] = autoscale or None
+        self.min_slots = num_slots if min_slots is None else min_slots
+        self.max_slots = num_slots if max_slots is None else max_slots
+        if self.autoscale is not None:
+            if not (1 <= self.min_slots <= num_slots <= self.max_slots):
+                raise ValueError(
+                    f"autoscale bounds must satisfy 1 <= min_slots <= "
+                    f"num_slots <= max_slots; got min={self.min_slots} "
+                    f"num={num_slots} max={self.max_slots}"
+                )
+            if sim.plan.sharded:
+                raise ValueError(
+                    "autoscale on sharded plans is not supported yet: "
+                    "resizing E would change the mesh decomposition mid-serve"
+                )
+            leaf = jnp.asarray(sim.spec.params.gamma)
+            if leaf.ndim != 0:
+                raise ValueError(
+                    "autoscale requires scalar-leaved spec params (per-tenant "
+                    "params ride in session lanes, not the spec)"
+                )
+        self._sims: Dict[int, CompiledSim] = {num_slots: sim}
+
+        # -- pipelined-chunk bookkeeping ------------------------------------
+        # sessions whose final tick was served by the most recently LAUNCHED
+        # chunk (slot still holds their state until the next boundary)
+        self._finishing: List[Tuple[int, StreamSession]] = []
+        # one boundary's retired sessions awaiting their last chunk's
+        # harvest: ([(slot, session), ...], (k, N, 3) final-m device block)
+        self._awaiting: Optional[
+            Tuple[List[Tuple[int, StreamSession]], jnp.ndarray]
+        ] = None
+        # device copy of the last chunk's lane-mask block; steady-state
+        # chunks repeat the same mask, so skip the re-upload
+        self._mask_np: Optional[np.ndarray] = None
+        self._mask_dev: Optional[jnp.ndarray] = None
+        # the launched-but-unharvested chunk (the pipeline's second buffer)
+        self._pending: Optional[_ChunkPlan] = None
+
+    @property
+    def num_slots(self) -> int:
+        return self.store.num_slots
 
     # -- session lifecycle -------------------------------------------------
 
     def submit(self, session: StreamSession) -> None:
+        # xp=np: the engine assembles u blocks host-side, so the series must
+        # stay a numpy array — coercing through the device would round-trip
+        # every stream through HBM for nothing
         u = coerce_input_series(
-            session.u_seq, self.store.n_in, self.store.dtype
+            session.u_seq, self.store.n_in, self.store.dtype, xp=np
         )
         if u.shape[0] == 0:
             raise ValueError(f"session {session.sid}: empty input stream")
-        session.u_seq = np.asarray(u)
+        session.u_seq = u
         if session.readout is not None:
             w = np.asarray(session.readout.w_out)
             if w.shape != (self.store.n + 1, self.store.n_out):
@@ -192,39 +319,119 @@ class ReservoirEngine:
         self.scheduler.submit(session)
 
     def _admit_pending(self) -> None:
-        for slot, sess in self.scheduler.admissions(self.store.free_slots()):
-            self.store.admit(
-                slot,
-                m0=sess.m0,
-                params=sess.params,
-                w_out=None if sess.readout is None else sess.readout.w_out,
+        placed = self.scheduler.admissions(self.store.free_slots())
+        if not placed:
+            return
+        items = []
+        for slot, sess in placed:
+            items.append(
+                (
+                    slot,
+                    sess.m0,
+                    sess.params,
+                    None if sess.readout is None else sess.readout.w_out,
+                )
             )
             sess._slot = slot
             sess._t = 0
             sess._states = []
             sess._outs = []
             sess._admitted_tick = self.tick_count
+        self.store.admit_many(items)  # one scatter per array, not per session
 
-    def _retire(self, slot: int) -> None:
-        sess = self.scheduler.retire(slot)
-        states = (
-            jnp.stack(sess._states) if sess.collect_states else None
-        )  # (T, N)
+    def _record_result(
+        self, sess: StreamSession, slot: int, final_m: jnp.ndarray
+    ) -> None:
+        """Assemble a SessionResult from the session's harvested pieces.
+
+        The per-tick path accumulates (N,) device state rows / (n_out,)
+        output rows; the chunked path accumulates host (n, N) / (n, n_out)
+        blocks — both concatenate to the same (T, N) / (T, n_out).
+        Assembly is numpy: the chunked path's blocks were already bulk
+        device->host transfers, and re-uploading the history just so the
+        caller can pull it back down would round-trip every finished
+        session's full state through the device."""
+        states = None
+        if sess.collect_states:
+            states = np.concatenate(
+                [np.atleast_2d(np.asarray(s)) for s in sess._states]
+            )
         outputs = None
         if sess.readout is not None:
-            outputs = jnp.stack(sess._outs)[sess.readout.washout :]
+            outs = np.concatenate(
+                [np.atleast_2d(np.asarray(o)) for o in sess._outs]
+            )
+            outputs = outs[sess.readout.washout :]
         self.results[sess.sid] = SessionResult(
             sid=sess.sid,
             states=states,
             outputs=outputs,
-            final_m=self.store.state_column(slot),
+            final_m=final_m,
             admitted_tick=sess._admitted_tick,
-            finished_tick=self.tick_count,
+            finished_tick=sess._finished_tick,
             slot=slot,
         )
+        sess._states = []
+        sess._outs = []
+        if self.max_retained is not None:
+            while len(self.results) > self.max_retained:
+                self.results.pop(next(iter(self.results)))
+
+    def pop_results(self) -> Dict[int, SessionResult]:
+        """Drain finished-session results: returns sid -> SessionResult and
+        clears the retained map. Long-running serving loops should call this
+        (or set max_retained) so retired-session state cannot accumulate."""
+        out = self.results
+        self.results = {}
+        return out
+
+    def _retire(self, slot: int) -> None:
+        """Per-tick path: retire immediately (state column is current)."""
+        sess = self.scheduler.retire(slot)
+        sess._finished_tick = self.tick_count
+        final_m = self.store.state_column(slot)
+        self._record_result(sess, slot, final_m)
         self.store.retire(slot)
 
-    # -- the batched tick --------------------------------------------------
+    # -- autoscaling --------------------------------------------------------
+
+    def _maybe_autoscale(self) -> None:
+        sched = self.scheduler
+        active = len(sched.running)
+        target = self.autoscale.target_slots(
+            active=active,
+            queued=len(sched.queue),
+            num_slots=self.num_slots,
+            min_slots=self.min_slots,
+            max_slots=self.max_slots,
+        )
+        target = max(target, active, 1)
+        bucket = _bucket_slots(target, self.min_slots, self.max_slots)
+        if bucket != self.num_slots:
+            self._rescale(bucket)
+
+    def _rescale(self, new_e: int) -> None:
+        """Migrate serving onto the cached CompiledSim of width new_e.
+
+        Occupied slots compact into the low lanes of the new store (one
+        gather-scatter of the (3, N, E) planes + readout lanes); running
+        sessions keep streaming across the boundary bit-identically."""
+        sim = self._sims.get(new_e)
+        if sim is None:
+            sim = compile_plan(
+                self.sim.spec,
+                dataclasses.replace(self.sim.plan, ensemble=new_e),
+            )
+            self._sims[new_e] = sim
+        slot_map = {old: new for new, old in enumerate(sorted(self.scheduler.running))}
+        self.store = self.store.resized(new_e, slot_map)
+        self.scheduler.remap(slot_map, new_e)
+        for slot, sess in self.scheduler.running.items():
+            sess._slot = slot
+        self.sim = sim
+        self.backend = sim.impl
+
+    # -- the synchronous per-tick path --------------------------------------
 
     def _advance(self, u: jnp.ndarray) -> jnp.ndarray:
         """One input tick for every slot; returns the (N, E) states plane."""
@@ -238,7 +445,12 @@ class ReservoirEngine:
         return states_plane
 
     def step(self) -> bool:
-        """Admit, advance one tick, harvest. Returns False when drained."""
+        """Admit, advance one tick, harvest. Returns False when drained.
+
+        The synchronous baseline: one `CompiledSim.tick` dispatch and one
+        per-slot harvest per input tick. `run()` is the pipelined chunked
+        path; both produce identical per-session results on the scan
+        backend (bit-exact) and tolerance-equal elsewhere."""
         self._admit_pending()
         running = self.scheduler.running
         if not running:
@@ -256,6 +468,7 @@ class ReservoirEngine:
             else None
         )
         self.scheduler.on_tick()
+        self.tick_count += 1
 
         for slot, sess in list(running.items()):
             if sess.collect_states:
@@ -265,15 +478,155 @@ class ReservoirEngine:
             sess._t += 1
             if sess._t >= sess.u_seq.shape[0]:
                 self._retire(slot)
-        self.tick_count += 1
         return True
+
+    # -- the pipelined chunked path -----------------------------------------
+
+    def _assemble_chunk(self) -> Optional[_ChunkPlan]:
+        """Host-side boundary work: finalize the previous chunk's finishers,
+        autoscale, admit, and build the next K-tick u/mask block.
+
+        Returns None when nothing is left to serve. Runs while the device
+        executes the previously launched chunk — this is the overlap the
+        pipeline exists for."""
+        # 1) sessions that finished inside the launched chunk: their lanes
+        # were masked off after their last tick, so the chunk-output column
+        # (store.m is that chunk's — still in flight — result; jnp arrays
+        # are immutable, slicing now snapshots it) IS their final state.
+        # One gather snapshots every finisher; one scatter frees the slots.
+        if self._finishing:
+            slots = [slot for slot, _ in self._finishing]
+            finals = self.store.state_columns(slots)  # (k, N, 3) device, lazy
+            for slot, sess in self._finishing:
+                self.scheduler.retire(slot)
+            self._awaiting = (self._finishing, finals)
+            self.store.retire_many(slots)
+            self._finishing = []
+
+        # 2) resize at the boundary (slots now reflect retirements)
+        if self.autoscale is not None:
+            self._maybe_autoscale()
+
+        # 3) refill freed slots
+        self._admit_pending()
+        running = self.scheduler.running
+        if not running:
+            return None
+
+        # 4) K-tick input block + per-tick lane masks (mid-chunk retires
+        # mask a lane's trailing rows off; the slot refills next boundary)
+        k = self.chunk_ticks
+        e, n_in = self.store.num_slots, self.store.n_in
+        u = np.zeros((k, e, n_in), self.store.dtype)
+        mask = np.zeros((k, e), dtype=bool)
+        entries = []
+        any_readout = False
+        session_ticks = 0
+        for slot, sess in running.items():
+            t0 = sess._t
+            n = min(k, sess.u_seq.shape[0] - t0)
+            u[:n, slot] = sess.u_seq[t0 : t0 + n]
+            mask[:n, slot] = True
+            sess._t = t0 + n
+            entries.append((sess, slot, n))
+            session_ticks += n
+            any_readout = any_readout or sess.readout is not None
+            if sess._t >= sess.u_seq.shape[0]:
+                sess._finished_tick = self.tick_count + n
+                self._finishing.append((slot, sess))
+        self.scheduler.on_ticks(k, session_ticks)
+        self.tick_count += k
+
+        return _ChunkPlan(
+            entries=entries, u=u, mask=mask, any_readout=any_readout
+        )
+
+    def _launch_chunk(self, plan: _ChunkPlan) -> None:
+        """Dispatch the chunk; returns immediately (JAX async dispatch)."""
+        store = self.store
+        if self._mask_np is None or not (
+            self._mask_np.shape == plan.mask.shape
+            and np.array_equal(self._mask_np, plan.mask)
+        ):
+            self._mask_np = plan.mask
+            self._mask_dev = jnp.asarray(plan.mask)
+        store.m, states_block = self.sim.tick_chunk(
+            store.m,
+            jnp.asarray(plan.u),
+            lane_mask=self._mask_dev,
+            params=store.params_ensemble,
+        )
+        plan.states_block = states_block
+        if plan.any_readout:
+            plan.outs_block = _apply_readouts_chunk(states_block, store.w_out)
+
+    def _harvest_chunk(self, plan: _ChunkPlan) -> None:
+        """ONE bulk device->host transfer for the chunk, then host-side
+        per-session masking/slicing — replaces per-tick per-slot slicing.
+
+        When nobody in the chunk collects states, the (K, N, E) block never
+        leaves the device (at N=1024, E=256, K=8 that is an 8 MB transfer
+        per chunk saved)."""
+        states_np = (
+            np.asarray(plan.states_block)  # (K, N, E)
+            if any(sess.collect_states for sess, _, _ in plan.entries)
+            else None
+        )
+        outs_np = (
+            np.asarray(plan.outs_block) if plan.outs_block is not None else None
+        )
+        # .copy(): a bare slice is a VIEW pinning the whole (K, N, E) block
+        # for the session's lifetime — a long-running collector would retain
+        # every chunk block it ever touched instead of its own lane
+        for sess, slot, n in plan.entries:
+            if sess.collect_states:
+                sess._states.append(states_np[:n, :, slot].copy())  # (n, N)
+            if sess.readout is not None:
+                sess._outs.append(outs_np[:n, slot].copy())  # (n, n_out)
+        # sessions retired at the last boundary: their final chunk is now
+        # harvested, so their results are complete (final states arrive as
+        # one bulk transfer, handed out as zero-copy row views)
+        if self._awaiting is not None:
+            finishers, finals = self._awaiting
+            finals_np = np.asarray(finals)  # (k, N, 3)
+            for i, (slot, sess) in enumerate(finishers):
+                # .copy() for the same reason as above: a row view would
+                # pin the whole boundary's finals block per retained result
+                self._record_result(sess, slot, finals_np[i].copy())
+            self._awaiting = None
+
+    def step_chunk(self) -> bool:
+        """Advance the pipeline by one chunk. Returns False when drained.
+
+        One call = assemble + launch the next K-tick chunk, then harvest
+        the PREVIOUSLY launched one (which the device finished while the
+        host assembled). The final call launches nothing and harvests the
+        trailing chunk. Callers driving this directly (benchmarks, external
+        event loops) must keep calling until it returns False — or hand
+        control back to `run()` — so no launched chunk is left unharvested;
+        don't interleave with per-tick `step()` while a chunk is in flight.
+        """
+        plan = self._assemble_chunk()
+        if plan is not None:
+            self._launch_chunk(plan)
+        if self._pending is not None:
+            self._harvest_chunk(self._pending)
+        self._pending = plan
+        return plan is not None
 
     def run(
         self, sessions: Optional[List[StreamSession]] = None
     ) -> Dict[int, SessionResult]:
-        """Serve sessions to completion; returns sid -> SessionResult."""
+        """Serve sessions to completion; returns sid -> SessionResult.
+
+        Double-buffered chunk pipeline: assemble chunk C+1 and harvest
+        chunk C on the host while the device executes chunk C+1's
+        predecessor — admissions, retirements, and autoscaling all happen
+        at chunk boundaries. With chunk_ticks == 1 this degenerates to
+        per-tick serving with bulk harvest (still one transfer per tick,
+        never per slot)."""
         for s in sessions or []:
             self.submit(s)
-        while self.scheduler.has_work():
-            self.step()
+        while self.step_chunk():
+            pass
         return self.results

@@ -1,11 +1,19 @@
 """Slot scheduler for the streaming reservoir engine.
 
 The reservoir analogue of continuous batching (serve/engine.py): a FIFO
-admission queue feeds a fixed pool of ensemble-lane slots. Admission and
-retirement happen between ticks — the batched integrate never stalls on a
-straggler session, and a freed slot is refilled on the very next tick.
+admission queue feeds a pool of ensemble-lane slots. Admission and
+retirement happen between ticks (between CHUNKS on the pipelined path) —
+the batched integrate never stalls on a straggler session, and a freed
+slot is refilled at the very next boundary.
 
-Kept deliberately dumb (FIFO + first-free-slot): policies like
+The scheduler also keeps the load signals the autoscaler consumes:
+occupancy (served session-ticks over offered slot-ticks), queue depth, and
+queue wait (ticks a session sat queued before admission). `AutoscalePolicy`
+is the pluggable decision rule — given those signals it returns a target
+slot count, which the engine rounds to its bucketed plan cache
+(power-of-two ensemble widths) and applies by migrating the slot store.
+
+Admission stays deliberately dumb (FIFO + first-free-slot): policies like
 shortest-stream-first or tenant fairness plug in by overriding `pick`.
 """
 
@@ -24,6 +32,15 @@ class SchedulerStats:
     ticks: int = 0
     # aggregate session-ticks actually served (for throughput accounting)
     session_ticks: int = 0
+    # aggregate slot-ticks offered (num_slots summed per tick) — occupancy
+    # denominator; tracks resizes because num_slots is sampled per update
+    slot_ticks: int = 0
+    # total ticks sessions spent queued before admission
+    queue_wait_ticks: int = 0
+    max_queue_len: int = 0
+    # autoscale events applied via remap()
+    grows: int = 0
+    shrinks: int = 0
 
 
 class SlotScheduler:
@@ -32,10 +49,13 @@ class SlotScheduler:
         self.queue: Deque = deque()
         self.running: Dict[int, object] = {}  # slot -> session
         self.stats = SchedulerStats()
+        self._enq_tick: Dict[int, int] = {}  # id(session) -> tick at submit
 
     def submit(self, session) -> None:
         self.queue.append(session)
         self.stats.submitted += 1
+        self._enq_tick[id(session)] = self.stats.ticks
+        self.stats.max_queue_len = max(self.stats.max_queue_len, len(self.queue))
 
     def has_work(self) -> bool:
         return bool(self.queue) or bool(self.running)
@@ -54,6 +74,8 @@ class SlotScheduler:
             self.running[slot] = session
             placed.append((slot, session))
             self.stats.admitted += 1
+            enq = self._enq_tick.pop(id(session), self.stats.ticks)
+            self.stats.queue_wait_ticks += self.stats.ticks - enq
         return placed
 
     def retire(self, slot: int) -> object:
@@ -61,6 +83,92 @@ class SlotScheduler:
         self.stats.retired += 1
         return session
 
+    def remap(self, slot_map: Dict[int, int], num_slots: int) -> None:
+        """Apply an autoscale resize: running sessions move old -> new slot."""
+        if num_slots > self.num_slots:
+            self.stats.grows += 1
+        elif num_slots < self.num_slots:
+            self.stats.shrinks += 1
+        self.running = {slot_map[s]: sess for s, sess in self.running.items()}
+        self.num_slots = num_slots
+
     def on_tick(self) -> None:
-        self.stats.ticks += 1
-        self.stats.session_ticks += len(self.running)
+        self.on_ticks(1, len(self.running))
+
+    def on_ticks(self, n_ticks: int, session_ticks: int) -> None:
+        """Account a served chunk: n_ticks wall ticks, session_ticks of
+        actual per-session work (sessions may finish mid-chunk)."""
+        self.stats.ticks += n_ticks
+        self.stats.session_ticks += session_ticks
+        self.stats.slot_ticks += n_ticks * self.num_slots
+
+    # -- load signals (autoscaler inputs) ----------------------------------
+
+    def occupancy(self) -> float:
+        """Served session-ticks / offered slot-ticks, lifetime aggregate."""
+        return self.stats.session_ticks / max(1, self.stats.slot_ticks)
+
+    def queue_depth(self) -> int:
+        return len(self.queue)
+
+    def mean_queue_wait(self) -> float:
+        """Mean ticks an admitted session waited in the queue."""
+        return self.stats.queue_wait_ticks / max(1, self.stats.admitted)
+
+
+# ---------------------------------------------------------------------------
+# Autoscale policies
+# ---------------------------------------------------------------------------
+
+
+class AutoscalePolicy:
+    """Decide a target slot count from the scheduler's load signals.
+
+    Called by the engine at every chunk boundary (after retirements, before
+    admissions). Return a desired slot count in [min_slots, max_slots]; the
+    engine rounds UP to its next cached bucket (power-of-two widths from
+    min_slots) and never shrinks below the number of running sessions.
+    Stateful policies (hysteresis, EWMAs) are fine — one policy instance
+    belongs to one engine.
+    """
+
+    def target_slots(
+        self,
+        *,
+        active: int,
+        queued: int,
+        num_slots: int,
+        min_slots: int,
+        max_slots: int,
+    ) -> int:
+        raise NotImplementedError
+
+
+@dataclasses.dataclass
+class QueueDepthPolicy(AutoscalePolicy):
+    """Default policy: grow to cover demand, shrink on sustained idleness.
+
+    Grow: whenever active + queued exceeds the current width, target the
+    demand (the engine buckets it upward), so a burst is absorbed within
+    one chunk. Shrink: only after `hysteresis` consecutive boundary checks
+    with demand at or below `shrink_occupancy` of the width — brief lulls
+    between bursts don't thrash the plan cache.
+    """
+
+    shrink_occupancy: float = 0.25
+    hysteresis: int = 2
+    _low_streak: int = dataclasses.field(default=0, repr=False)
+
+    def target_slots(self, *, active, queued, num_slots, min_slots, max_slots):
+        demand = active + queued
+        if demand > num_slots:
+            self._low_streak = 0
+            return min(max_slots, demand)
+        if num_slots > min_slots and demand <= self.shrink_occupancy * num_slots:
+            self._low_streak += 1
+            if self._low_streak >= self.hysteresis:
+                self._low_streak = 0
+                return max(min_slots, demand)
+            return num_slots
+        self._low_streak = 0
+        return num_slots
