@@ -73,6 +73,36 @@ def smoke(save_dispatch_table: bool = False) -> None:
     results = eng.run(sessions)
     print(f"smoke_serve_chunked,0.0,served_{len(results)}_chunk_{eng.chunk_ticks}")
 
+    # online learning end-to-end: a learning engine trains per-tenant
+    # readouts while streaming; the learned weights must match the offline
+    # fit_rls oracle run over the harvested states (scan backend: bitwise)
+    from repro.core.reservoir import fit_rls
+
+    learn_eng = ReservoirEngine(
+        compile_plan(
+            spec, ExecPlan(impl="scan", ensemble=4, chunk_ticks=4, learn="rls",
+                           learn_reg=1e-2)
+        )
+    )
+    rng = np.random.default_rng(7)
+    learners = [
+        StreamSession(
+            sid=i,
+            u_seq=rng.uniform(0, 0.5, (10, 1)).astype(np.float32),
+            targets=rng.uniform(0, 0.5, (10, 1)).astype(np.float32),
+            learn_washout=2,
+        )
+        for i in range(6)
+    ]
+    targets = {s.sid: s.targets for s in learners}
+    learned = learn_eng.run(learners)
+    for sid, r in learned.items():
+        oracle = fit_rls(r.states, targets[sid], washout=2, reg=1e-2, block=4)
+        assert np.array_equal(
+            np.asarray(r.learned_readout.w_out), np.asarray(oracle.w_out)
+        ), f"smoke: session {sid} learned readout != fit_rls oracle"
+    print(f"smoke_serve_learn,0.0,trained_{len(learned)}_bitmatch_oracle")
+
     loaded = dispatch_table.ensure_loaded()  # 0 if already loaded: fine
     print(f"smoke_dispatch_table,0.0,loaded_{loaded}_entries")
 

@@ -15,7 +15,14 @@ through three serving modes:
 
 plus, on the smaller grid rows, autoscale-vs-fixed: the same burst served
 by a fixed E-slot engine and by an autoscaling engine that starts at E/4
-and grows through the bucketed plan cache.
+and grows through the bucketed plan cache, and — at N <= LEARN_MAX_N —
+learn-on vs learn-off: the steady workload re-served with every session
+learning its readout online (`ExecPlan(learn="rls")`, per-tick fused RLS
+updates + target upload + prediction harvest), reported as
+`sessions_per_sec_learn` and the within-run `learn_overhead` ratio.
+(Learning at N=1024 would allocate E (N+1)^2 P-matrices — ~1 GB at E=256 —
+so the column stops at N=128, which is also where the acceptance bar for
+the overhead lives.)
 
 Reported per cell:
 
@@ -66,20 +73,26 @@ HOLD_STEPS = 5
 CHUNK_TICKS = 8
 TICKS = 32  # burst stream length: 4 chunks, boundary churn amortizes realistically
 STEADY_TICKS = 56  # steady-median stream length: 7 chunks (warm 2 + median 3 + drain)
-STEADY_REPS = 3  # best-of, like the per-tick median: noise spikes don't bill
+STEADY_REPS = 5  # best-of, like the per-tick median: noise spikes don't bill
 WAVES = 2  # stream generations per burst measurement -> full-batch turnover
 REF_STREAM_TICKS = 7  # PR-2 trajectory's stream length; sessions/sec anchor
 WARM_TICKS = 2
 MEASURED_TICKS = 3
 AUTOSCALE_MAX_N = 128  # autoscale columns only where the grid row is cheap
+LEARN_MAX_N = 128  # learn-on column: P is (E, N+1, N+1) — skip the 1 GB row
 
 
-def _mk_sessions(num, t, n_in, rng, base_sid=0):
+def _mk_sessions(num, t, n_in, rng, base_sid=0, learn=False):
     return [
         StreamSession(
             sid=base_sid + i,
             u_seq=rng.uniform(0.0, 0.5, size=(t, n_in)).astype(np.float32),
             collect_states=False,
+            targets=(
+                rng.uniform(0.0, 0.5, size=(t, 1)).astype(np.float32)
+                if learn
+                else None
+            ),
         )
         for i in range(num)
     ]
@@ -154,14 +167,46 @@ def bench_cell(n: int, e: int, print_fn=print):
     )
     backend = pipe_eng.backend
     _drain_time(pipe_eng, _mk_sessions(e, CHUNK_TICKS, 1, rng), pipelined=True)  # warm
-    # steady chunk median: one wave of E long streams — the trajectory metric
-    t_chunk = min(
-        _steady_chunk_time(
-            pipe_eng,
-            _mk_sessions(e, STEADY_TICKS, 1, rng, base_sid=60_000 + 1000 * r),
+    # learn-on twin engine (N <= LEARN_MAX_N): same plan + learn="rls";
+    # its steady reps INTERLEAVE with the learn-off reps below so a slow
+    # container episode bills both sides of the overhead ratio equally
+    learn_eng = None
+    if n <= LEARN_MAX_N:
+        learn_eng = ReservoirEngine(
+            compile_plan(
+                spec,
+                ExecPlan(
+                    impl=backend, ensemble=e, chunk_ticks=CHUNK_TICKS,
+                    learn="rls", learn_reg=1e-2,
+                ),
+            ),
+            max_retained=e,
         )
-        for r in range(STEADY_REPS)
-    )
+        _drain_time(
+            learn_eng,
+            _mk_sessions(e, CHUNK_TICKS, 1, rng, base_sid=70_000, learn=True),
+            pipelined=True,
+        )  # warm
+    # steady chunk median: one wave of E long streams — the trajectory metric
+    chunk_reps, learn_reps = [], []
+    for r in range(STEADY_REPS):
+        chunk_reps.append(
+            _steady_chunk_time(
+                pipe_eng,
+                _mk_sessions(e, STEADY_TICKS, 1, rng, base_sid=60_000 + 1000 * r),
+            )
+        )
+        if learn_eng is not None:
+            learn_reps.append(
+                _steady_chunk_time(
+                    learn_eng,
+                    _mk_sessions(
+                        e, STEADY_TICKS, 1, rng,
+                        base_sid=80_000 + 1000 * r, learn=True,
+                    ),
+                )
+            )
+    t_chunk = min(chunk_reps)
     # burst run: WAVES generations, admit/retire churn billed
     t_pipe, ticks_pipe = _drain_time(
         pipe_eng, _mk_sessions(WAVES * e, TICKS, 1, rng, base_sid=20_000), pipelined=True
@@ -206,6 +251,23 @@ def bench_cell(n: int, e: int, print_fn=print):
         "speedup_vs_sequential": ticks_per_sec / agg_solo,
         "hold_steps": HOLD_STEPS,
     }
+
+    # -- learn-on vs learn-off columns (reps measured interleaved above) ---
+    if learn_eng is not None:
+        t_chunk_learn = min(learn_reps)
+        # the overhead ratio uses MEDIANS of the rep samples, not mins: a
+        # single outlier-fast base rep would otherwise inflate the ratio by
+        # the container's full ±40% noise band
+        med = lambda xs: sorted(xs)[len(xs) // 2]
+        cell.update(
+            steady_chunk_learn_s=t_chunk_learn,
+            ticks_per_sec_learn=e * CHUNK_TICKS / t_chunk_learn,
+            sessions_per_sec_learn=(e * CHUNK_TICKS / t_chunk_learn)
+            / REF_STREAM_TICKS,
+            # within-run ratio (the ROADMAP's ±40% container-noise caveat:
+            # judge learn overhead by THIS column, not absolute numbers)
+            learn_overhead=med(learn_reps) / med(chunk_reps),
+        )
 
     # -- autoscale vs fixed: the same burst through the bucketed cache -----
     if n <= AUTOSCALE_MAX_N and e >= 16:

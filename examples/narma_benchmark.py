@@ -4,9 +4,14 @@
   -> NMSE on held-out data.
 
 This is the full pipeline whose expensive stage (the drive) the paper
-accelerates. A few hundred reservoir updates train the readout end-to-end.
+accelerates, built on the unified execution API (make_spec + compile_plan;
+docs/ARCHITECTURE.md). A few hundred reservoir updates train the readout
+end-to-end. `--online` additionally trains the readout with recursive
+least squares (`fit_rls` — the offline form of the serving engine's
+streaming `ExecPlan.learn="rls"`) and shows it matches batch ridge.
 
 Run:  PYTHONPATH=src python examples/narma_benchmark.py [--n 64] [--order 2]
+      [--online]
 """
 
 import argparse
@@ -19,7 +24,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.api import compile_plan, make_spec
-from repro.core import default_params, fit_ridge, nmse, predict, tasks
+from repro.core import default_params, fit_ridge, fit_rls, nmse, predict, tasks
 
 
 def main():
@@ -34,6 +39,10 @@ def main():
                     help="input amplitude [Oe]; the paper's 1 Oe is for the "
                          "u=0 benchmark — the RC application needs a strong "
                          "drive relative to H_appl=200 Oe (cf. [AKT+22])")
+    ap.add_argument("--online", action="store_true",
+                    help="also train the readout online (recursive least "
+                         "squares, one update per sample) and compare to "
+                         "batch ridge")
     args = ap.parse_args()
 
     total = args.train + args.test
@@ -63,6 +72,21 @@ def main():
     err_te = nmse(pred_te, jnp.asarray(y[te][:, None]))
     print(f"NARMA-{args.order}: train NMSE = {err_tr:.4f}   test NMSE = {err_te:.4f}")
     assert err_te < 1.0, "reservoir must beat the mean predictor"
+
+    if args.online:
+        # recursive least squares over the same features: one update per
+        # sample, converging to the batch ridge solution (lam = 1) — the
+        # offline form of what the serving engine fuses into tick_chunk
+        ro_rls = fit_rls(
+            feats[tr], jnp.asarray(y[tr, None]), washout=args.washout, reg=1e-2
+        )
+        err_rls = nmse(
+            predict(ro_rls._replace(washout=0), feats[te]),
+            jnp.asarray(y[te][:, None]),
+        )
+        print(f"online RLS:   test NMSE = {err_rls:.4f}  "
+              f"(batch ridge: {err_te:.4f})")
+        assert err_rls < err_te * 1.05, "RLS(lam=1) must match batch ridge"
     print("OK")
 
 

@@ -1,8 +1,15 @@
 """Quickstart: simulate a coupled-STO reservoir (the paper's system).
 
 Builds an N-coupled spin-torque oscillator reservoir with the paper's
-Table-1 parameters, integrates it with RK4 (dt=1e-11 as in §3.2) through
-the three implementation tiers, and verifies they agree + conserve |m|=1.
+Table-1 parameters and integrates it with RK4 (dt=1e-11 as in §3.2)
+through the unified execution API: the SAME SimSpec compiled against two
+ExecPlans — the core-layout scan path and the fused Pallas kernel
+(interpret mode on CPU; native on TPU) — then verifies they agree and
+conserve |m| = 1.
+
+This is the repo's API in one screen: physics in `make_spec`, execution
+in `ExecPlan`, `compile_plan` marrying the two exactly once
+(docs/ARCHITECTURE.md).
 
 Run:  PYTHONPATH=src python examples/quickstart.py [--n 64] [--steps 2000]
 """
@@ -13,17 +20,8 @@ import time
 import jax
 import jax.numpy as jnp
 
-from repro.core import (
-    DT,
-    default_params,
-    initial_magnetization,
-    integrate_scan,
-    llg_field,
-    make_coupling_matrix,
-    norm_error,
-)
-from repro.kernels import ops
-from repro.kernels.ref import pack_params
+from repro.api import ExecPlan, compile_plan, make_spec
+from repro.core import DT, norm_error
 
 
 def main():
@@ -32,34 +30,31 @@ def main():
     ap.add_argument("--steps", type=int, default=2000)
     args = ap.parse_args()
 
-    p = default_params(jnp.float32)
-    w = jnp.asarray(make_coupling_matrix(args.n, seed=0), jnp.float32)
-    m0 = initial_magnetization(args.n, jnp.float32)
+    spec = make_spec(n=args.n, n_in=1, dt=DT, dtype=jnp.float32)
     print(f"N={args.n} coupled STOs, {args.steps} RK4 steps, dt={DT:.0e}s")
 
-    # tier 1: jit + lax.scan (the paper's Numba analogue)
-    field = lambda m, _: llg_field(m, p, w)
+    # tier 1: jit + lax.scan in the core layout (the paper's Numba analogue)
+    scan_sim = compile_plan(spec, ExecPlan(impl="scan"))
     t0 = time.time()
-    m_scan, _ = jax.block_until_ready(integrate_scan(field, m0, DT, args.steps))
+    m_scan, _ = scan_sim.integrate(args.steps)
+    m_scan = jax.block_until_ready(m_scan)[0]
     t_scan = time.time() - t0
     print(f"scan    : {t_scan:.3f}s   |m|-1 err = {float(norm_error(m_scan)):.2e}")
 
     # tier 2: fused Pallas kernel (interpret mode on CPU; native on TPU)
-    pv = pack_params(p, 1, jnp.float32)
+    kern_sim = compile_plan(
+        spec, ExecPlan(impl="fused", n_inner=8, interpret=True)
+    )
     t0 = time.time()
-    m_kern = jax.block_until_ready(
-        ops.sto_rk4_integrate(
-            m0[None], w, pv, float(DT), args.steps, impl="fused",
-            n_inner=8, interpret=True,
-        )
-    )[0]
+    m_kern, _ = kern_sim.integrate(args.steps)
+    m_kern = jax.block_until_ready(m_kern)[0]
     t_kern = time.time() - t0
     err = float(jnp.max(jnp.abs(m_kern - m_scan)))
     print(f"kernel  : {t_kern:.3f}s   max diff vs scan = {err:.2e}")
 
     # sample trajectory: show the oscillation the readout taps
-    _, traj = integrate_scan(field, m0, DT, args.steps, save_every=args.steps // 10)
-    print("m_0^x samples:", [f"{float(v):+.3f}" for v in traj[:, 0, 0]])
+    _, traj = scan_sim.integrate(args.steps, save_every=args.steps // 10)
+    print("m_0^x samples:", [f"{float(v):+.3f}" for v in traj[:, 0, 0, 0]])
     assert err < 1e-4
     print("OK")
 

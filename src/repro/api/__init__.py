@@ -8,11 +8,14 @@ that separation as an API:
     sim = api.compile_plan(spec, ensemble=64)              # resolved exec
     mT, states = sim.drive_batch(U)                        # jit-cached run
 
-Every impl-dispatch / padding / ensemble / sharding decision in the repo is
-made inside `compile_plan`; `core/reservoir.drive`,
+Every impl-dispatch / padding / ensemble / sharding / learning decision in
+the repo is made inside `compile_plan`; `core/reservoir.drive`,
 `core/ensemble.integrate_ensemble{,_sharded}` are deprecation shims over
 it, and `serve/reservoir.ReservoirEngine` serves from a CompiledSim —
-sharded serving is just `ExecPlan(mesh=...)`.
+sharded serving is just `ExecPlan(mesh=...)`, chunked serving
+`ExecPlan(chunk_ticks=K)`, and online readout learning
+`ExecPlan(learn="rls")`. Capabilities are added as ExecPlan fields, not
+new entry points (docs/ARCHITECTURE.md).
 """
 
 from repro.api.spec import SimSpec, make_spec

@@ -18,7 +18,11 @@ The jit-cached entry points on the returned CompiledSim:
   drive_batch(U, m0=None)      E lanes over shared or per-lane series
   integrate(n_steps, ...)      free-run (u = 0) ensemble integration
   tick(m, u, lane_mask=None)   ONE hold window for a slot batch — the
-                               serving engine's hot path
+                               serving engine's per-tick path
+  tick_chunk(m, U, ...)        K hold windows in one dispatch — the chunked
+                               serving hot path; with ExecPlan(learn="rls")
+                               it also trains per-lane readouts online
+                               (targets/learn_state/learn_mask kwargs)
 
 All jit'd workers are module-level, so every CompiledSim for the same
 (static-shape, impl) signature shares one compilation.
@@ -43,6 +47,7 @@ from repro.core import integrators, sto
 from repro.core.constants import STOParams
 from repro.kernels import ops
 from repro.kernels import ref as kref
+from repro.kernels import rls as krls
 
 from repro.api.plan import ExecPlan
 from repro.api.spec import SimSpec
@@ -187,6 +192,50 @@ def _tick_chunk_scan(params_e, w_cp, w_in, m_planes, u_block, mask_block, dt,
     return jnp.transpose(mT, (2, 1, 0)), states  # (3, N, E), (K, N, E)
 
 
+def _learn_chunk_tail(states, y_block, lmask_block, p0, w0, lam):
+    """Shared learn tail: states block (K, N, E) -> chunked RLS update.
+
+    Builds the (K, E, S) feature block (node states + bias) and applies
+    `kernels.rls.rls_chunk` — the whole chunk's sequential gain/weight
+    recursion with O(1) full-P passes. Runs inside the workers' jit, so a
+    learning chunk is still ONE dispatch with zero extra host round-trips.
+    """
+    xb = jnp.concatenate(
+        [
+            jnp.transpose(states, (0, 2, 1)),  # (K, E, N)
+            jnp.ones((states.shape[0], states.shape[2], 1), states.dtype),
+        ],
+        axis=-1,
+    )
+    return krls.rls_chunk(p0, w0, xb, y_block, lmask_block, lam)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("lam", "hold_steps", "tableau_name")
+)
+def _tick_chunk_scan_rls(params_e, w_cp, w_in, m_planes, u_block, mask_block,
+                         y_block, lmask_block, p0, w0, lam, dt, hold_steps,
+                         tableau_name: str = "rk4"):
+    """`_tick_chunk_scan` + the chunked RLS readout update, one dispatch
+    (ExecPlan.learn="rls", core layout).
+
+    The integration scan is exactly `_tick_chunk_scan`'s — m and the states
+    block are bit-identical to the inference-only chunk — and the chunk's
+    states then feed `kernels.rls.rls_chunk`: the full K-tick sequential
+    RLS gain recursion applied with ~3 full-P traversals per CHUNK (not per
+    tick). lmask_block (K, E) gates which lanes learn which ticks (False =
+    P/W value-frozen: idle slots, washout ticks, inference-only tenants).
+    Returns (m' (3, N, E), states (K, N, E), P', W', preds (K, E, n_out))
+    with preds the a-priori (pre-update) per-tick predictions.
+    """
+    mT, states = _tick_chunk_scan(
+        params_e, w_cp, w_in, m_planes, u_block, mask_block, dt, hold_steps,
+        tableau_name,
+    )
+    pT, wT, preds = _learn_chunk_tail(states, y_block, lmask_block, p0, w0, lam)
+    return mT, states, pT, wT, preds
+
+
 # ---------------------------------------------------------------------------
 # jit'd workers — kernel (3, N, E) planes layout ("ref"/"fused"/"tiled")
 # ---------------------------------------------------------------------------
@@ -272,6 +321,27 @@ def _tick_chunk_planes(
 
 @functools.partial(
     jax.jit,
+    static_argnames=("lam", "dt", "hold_steps", "impl", "n_inner", "block_n", "block_e", "interpret"),
+)
+def _tick_chunk_planes_rls(
+    params_e, w_cp, w_in, m_planes, u_block, mask_block, y_block, lmask_block,
+    p0, w0, *, lam, dt, hold_steps, impl, n_inner, block_n, block_e, interpret,
+):
+    """`_tick_chunk_planes` + the chunked RLS readout update, one dispatch
+    (ExecPlan.learn="rls", kernel layout). The integrate may be a Pallas
+    kernel; the learn tail is the same jnp `kernels.rls.rls_chunk` either
+    way, applied to the chunk's (K, N, E) states block + bias."""
+    mT, states = _tick_chunk_planes(
+        params_e, w_cp, w_in, m_planes, u_block, mask_block,
+        dt=dt, hold_steps=hold_steps, impl=impl, n_inner=n_inner,
+        block_n=block_n, block_e=block_e, interpret=interpret,
+    )
+    pT, wT, preds = _learn_chunk_tail(states, y_block, lmask_block, p0, w0, lam)
+    return mT, states, pT, wT, preds  # (3,N,E), (K,N,E), P', W', (K,E,n_out)
+
+
+@functools.partial(
+    jax.jit,
     static_argnames=("dt", "n_steps", "save_every", "impl", "n_inner", "block_n", "block_e", "interpret"),
 )
 def _integrate_planes(
@@ -317,7 +387,21 @@ class CompiledSim:
         self._block_e = plan.block_e or ops.LANE
         self._n_inner = plan.n_inner or spec.hold_steps
         self._dt_scan = jnp.asarray(spec.dt, spec.dtype)
+        # static: the RLS workers specialize on lam (lam == 1 skips the
+        # per-tick P rescale; see kernels/rls.py)
+        self._lam = float(plan.learn_lam) if plan.learn else None
         self._params_cache: Optional[STOParams] = None
+
+    def init_learn_state(self) -> Tuple[jnp.ndarray, jnp.ndarray]:
+        """Fresh (P (E, S, S), W (E, S, n_out=1)) lanes for plan.learn="rls":
+        P = I / learn_reg, W = 0, with S = N + 1 (states + bias). Serving
+        keeps these per-slot (SlotStore); callers driving tick_chunk by hand
+        start here. For n_out != 1, call kernels.rls.rls_init directly."""
+        if self.plan.learn is None:
+            raise ValueError("init_learn_state() requires ExecPlan(learn=...)")
+        return krls.rls_init(
+            self.e, self.spec.n + 1, 1, self.plan.learn_reg, self.spec.dtype
+        )
 
     # -- parameter plumbing ------------------------------------------------
 
@@ -546,13 +630,30 @@ class CompiledSim:
             block_e=self._block_e, interpret=self.plan.interpret,
         )
 
+    def _coerce_tick_mask(self, lane_mask, k: int) -> jnp.ndarray:
+        """(E,) or (K, E) bool -> (K, E) mask block (None = all active)."""
+        if lane_mask is None:
+            return jnp.ones((k, self.e), dtype=bool)
+        lane_mask = jnp.asarray(lane_mask, dtype=bool)
+        if lane_mask.shape == (self.e,):
+            return jnp.broadcast_to(lane_mask[None, :], (k, self.e))
+        if lane_mask.shape == (k, self.e):
+            return lane_mask
+        raise ValueError(
+            f"lane_mask must have shape ({k}, {self.e}) or ({self.e},); "
+            f"got {tuple(lane_mask.shape)}"
+        )
+
     def tick_chunk(
         self,
         m_planes: jnp.ndarray,  # (3, N, E) slot-store layout
         u_block: jnp.ndarray,  # (K, E, N_in) input rows for K ticks
         lane_mask: Optional[jnp.ndarray] = None,  # (K, E) or (E,) bool
         params: Optional[STOParams] = None,  # per-lane STOParams, (E, 1) leaves
-    ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+        targets: Optional[jnp.ndarray] = None,  # (K, E, n_out) learn targets
+        learn_state: Optional[Tuple[jnp.ndarray, jnp.ndarray]] = None,  # (P, W)
+        learn_mask: Optional[jnp.ndarray] = None,  # (K, E) or (E,) bool
+    ):
         """K serving ticks (K hold windows) for a slot batch in ONE dispatch.
 
         The chunked serving hot path (`ExecPlan.chunk_ticks`): a lax.scan
@@ -567,6 +668,20 @@ class CompiledSim:
         scan impl a K-chunk is bit-identical to K sequential `tick` calls
         (pinned by tests/test_serve_chunked.py); the planes impls and
         sharded plans agree within the kernel suite's tolerance.
+
+        With `ExecPlan(learn="rls")` the chunk also LEARNS: pass
+        `learn_state=(P (E, S, S), W (E, S, n_out))` (see
+        `init_learn_state`) and `targets` (K, E, n_out), and every tick
+        applies one masked batched RLS update (kernels/rls.py) to the learn
+        lanes inside the same scan — no extra dispatches or host
+        round-trips. `learn_mask` (default: lane_mask) gates which lanes
+        learn which ticks; masked ticks leave P/W bit-identical, so
+        washout, idle slots, and inference-only tenants all ride the same
+        dispatch. Returns
+        (m', states, (P', W'), preds (K, E, n_out)) — preds are the
+        a-priori (pre-update) predictions. The integration itself is
+        unchanged: m' and states are bit-identical to the inference-only
+        chunk on every impl.
         """
         spec = self.spec
         params_e = self.ensemble_params(params)
@@ -577,19 +692,79 @@ class CompiledSim:
                 f"got {tuple(u_block.shape)}"
             )
         k = u_block.shape[0]
-        if lane_mask is None:
-            mask_block = jnp.ones((k, self.e), dtype=bool)
-        else:
-            lane_mask = jnp.asarray(lane_mask, dtype=bool)
-            if lane_mask.shape == (self.e,):
-                mask_block = jnp.broadcast_to(lane_mask[None, :], (k, self.e))
-            elif lane_mask.shape == (k, self.e):
-                mask_block = lane_mask
-            else:
+        mask_block = self._coerce_tick_mask(lane_mask, k)
+        if self.plan.learn is None:
+            if targets is not None or learn_state is not None or learn_mask is not None:
                 raise ValueError(
-                    f"lane_mask must have shape ({k}, {self.e}) or ({self.e},); "
-                    f"got {tuple(lane_mask.shape)}"
+                    "targets/learn_state/learn_mask require an "
+                    "ExecPlan(learn='rls') plan; this plan is inference-only"
                 )
+            return self._tick_chunk_infer(params_e, m_planes, u_block, mask_block)
+        if learn_state is None or targets is None:
+            raise ValueError(
+                "ExecPlan(learn='rls') tick_chunk needs learn_state=(P, W) "
+                "and targets (K, E, n_out); for an inference-only chunk "
+                "compile a plan with learn=None"
+            )
+        p0, w0 = learn_state
+        n_out = w0.shape[-1]
+        targets = jnp.asarray(targets, spec.dtype)
+        if targets.shape != (k, self.e, n_out):
+            raise ValueError(
+                f"targets must have shape ({k}, {self.e}, {n_out}) to match "
+                f"the u block and learn_state W lanes; got {tuple(targets.shape)}"
+            )
+        if p0.shape != (self.e, spec.n + 1, spec.n + 1) or w0.shape[:2] != (
+            self.e,
+            spec.n + 1,
+        ):
+            raise ValueError(
+                f"learn_state must be (P ({self.e}, {spec.n + 1}, "
+                f"{spec.n + 1}), W ({self.e}, {spec.n + 1}, n_out)); got "
+                f"{tuple(p0.shape)}, {tuple(w0.shape)}"
+            )
+        lmask_block = (
+            mask_block if learn_mask is None else self._coerce_tick_mask(learn_mask, k)
+        )
+        if self.plan.sharded:
+            m = jnp.transpose(m_planes, (2, 1, 0))  # (E, N, 3)
+            m_new, states, pT, wT, preds = _sharded.tick_chunk_sharded_rls(
+                self.plan.mesh, params_e, spec.w_cp, spec.w_in, m,
+                u_block, mask_block, targets, lmask_block, p0, w0,
+                self._lam, spec.dt, spec.hold_steps,
+                ensemble_axes=self.plan.ensemble_axes,
+                model_axis=self.plan.model_axis,
+                tableau_name=spec.tableau,
+                gather_dtype=self.plan.gather_dtype,
+            )
+            # states arrive (K, E, N): shuffle to the (K, N, E) block contract
+            return (
+                jnp.transpose(m_new, (2, 1, 0)),
+                jnp.transpose(states, (0, 2, 1)),
+                (pT, wT),
+                preds,
+            )
+        if self.impl == "scan":
+            mT, states, pT, wT, preds = _tick_chunk_scan_rls(
+                params_e, spec.w_cp, spec.w_in, m_planes, u_block, mask_block,
+                targets, lmask_block, p0, w0, self._lam,
+                self._dt_scan, spec.hold_steps, spec.tableau,
+            )
+            return mT, states, (pT, wT), preds
+        mT, states, pT, wT, preds = _tick_chunk_planes_rls(
+            params_e, spec.w_cp, spec.w_in, m_planes, u_block, mask_block,
+            targets, lmask_block, p0, w0, lam=self._lam,
+            dt=float(spec.dt), hold_steps=spec.hold_steps, impl=self.impl,
+            n_inner=self._n_inner, block_n=self._block_n,
+            block_e=self._block_e, interpret=self.plan.interpret,
+        )
+        return mT, states, (pT, wT), preds
+
+    def _tick_chunk_infer(
+        self, params_e, m_planes, u_block, mask_block
+    ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+        """Inference-only chunk body (plan.learn is None)."""
+        spec = self.spec
         if self.plan.sharded:
             m = jnp.transpose(m_planes, (2, 1, 0))  # (E, N, 3)
             m_new, states = _sharded.tick_chunk_sharded(

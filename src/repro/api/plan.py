@@ -27,6 +27,18 @@ Every execution decision that used to be scattered across
              serving path (`serve.reservoir.ReservoirEngine.run`) overlaps
              host u-block assembly with device execution of the previous
              chunk. K = 1 keeps per-tick serving semantics.
+  learn      online readout learning fused into `tick_chunk`'s per-tick
+             scan body: "rls" runs one masked batched recursive-least-
+             squares update (kernels/rls.py) per tick — per-lane
+             (S, S) = (N+1, N+1) inverse-Gram P and (S, n_out) weight
+             lanes ride the dispatch alongside the magnetization, zero
+             extra host round-trips. None (default) keeps tick_chunk
+             inference-only (signature and results unchanged).
+  learn_lam  RLS forgetting factor in (0, 1]. 1.0 (default) weights all
+             history equally and converges to batch ridge regression;
+             < 1 exponentially forgets, tracking non-stationary targets.
+  learn_reg  RLS regularization: P initializes to I / learn_reg, the
+             exact analogue of `fit_ridge`'s `reg`.
 """
 
 from __future__ import annotations
@@ -42,6 +54,7 @@ except Exception:  # pragma: no cover
     Mesh = object  # type: ignore
 
 PLAN_IMPLS = ("auto", "scan", "ref", "fused", "tiled")
+PLAN_LEARN = (None, "rls")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -56,6 +69,9 @@ class ExecPlan:
     model_axis: Optional[str] = "model"
     gather_dtype: Optional[object] = None
     chunk_ticks: int = 1
+    learn: Optional[str] = None  # None = inference-only; "rls" = online readout
+    learn_lam: float = 1.0  # RLS forgetting factor, (0, 1]
+    learn_reg: float = 1e-6  # RLS regularization: P0 = I / learn_reg
     interpret: bool = False
     measure: bool = False  # time impl candidates at compile, pin the winner
 
@@ -85,6 +101,24 @@ class ExecPlan:
                     f"gather_dtype must be a dtype (e.g. jnp.bfloat16) or None; "
                     f"got {self.gather_dtype!r}"
                 ) from None
+        if self.learn not in PLAN_LEARN:
+            raise ValueError(
+                f"learn must be one of {PLAN_LEARN}; got {self.learn!r}"
+            )
+        if not isinstance(self.learn_lam, (int, float)) or isinstance(
+            self.learn_lam, bool
+        ) or not (0.0 < float(self.learn_lam) <= 1.0):
+            raise ValueError(
+                f"learn_lam (RLS forgetting factor) must be a float in "
+                f"(0, 1]; got {self.learn_lam!r}"
+            )
+        if not isinstance(self.learn_reg, (int, float)) or isinstance(
+            self.learn_reg, bool
+        ) or not float(self.learn_reg) > 0.0:
+            raise ValueError(
+                f"learn_reg (RLS regularization; P0 = I / learn_reg) must be "
+                f"> 0; got {self.learn_reg!r}"
+            )
 
     @property
     def sharded(self) -> bool:

@@ -31,6 +31,7 @@ from repro.core.compat import shard_map
 from repro.core import integrators, sto
 from repro.core.constants import STOParams
 from repro.distributed.sharding import reservoir_specs
+from repro.kernels import rls as krls
 
 
 def _coupling_field(params_l, w_mm, m, model_axis, gather_dtype):
@@ -281,6 +282,133 @@ def _tick_chunk_sharded_fn(
             **_SHARD_MAP_CHECK_KW,
         )
     )
+
+
+@functools.lru_cache(maxsize=None)
+def _tick_chunk_sharded_rls_fn(
+    mesh: Mesh,
+    ensemble_axes: tuple,
+    model_axis: Optional[str],
+    tableau_name: str,
+    dt: float,
+    hold_steps: int,
+    gather_dtype,
+    lam: float,  # static: the RLS update specializes on it (kernels/rls.py)
+):
+    """Build (once per signature) the jit'd shard_map'd learning K-chunk.
+
+    `_tick_chunk_sharded_fn` + the chunked RLS readout update
+    (ExecPlan.learn="rls"). P and W ride LANE-sharded — the ensemble axes
+    split E, the (S, S) feature block is replicated — while the feature
+    block (the full N node states + bias) is all-gathered over the model
+    axis ONCE per chunk, like the coupling field's m^x but K ticks at a
+    time; `kernels.rls.rls_chunk` then runs shard-locally on the lane
+    shard.
+    """
+    tableau = integrators.TABLEAUX[tableau_name]
+    specs = reservoir_specs(ensemble_axes, model_axis)
+
+    def local_run(params_l: STOParams, w_l, win_l, m_l, u_l, mask_l,
+                  y_l, lmask_l, p_l, wl_l):
+        # u_l (K, E_l, N_in), mask_l/lmask_l (K, E_l), y_l (K, E_l, n_out),
+        # p_l (E_l, S, S), wl_l (E_l, S, n_out)
+        w_mm = w_l.astype(gather_dtype) if gather_dtype is not None else w_l
+
+        def field(mm, h_in_x):
+            h_x = _coupling_field(params_l, w_mm, mm, model_axis, gather_dtype)
+            h_x = h_x + h_in_x
+            b = sto.effective_field_b(mm, params_l, h_x)
+            return sto.llg_rhs_from_b(mm, b, params_l)
+
+        step = integrators.make_step(field, tableau)
+        dt_c = jnp.asarray(dt, m_l.dtype)
+
+        def per_tick(m_c, tick_in):
+            u_t, mask_t = tick_in
+            h_in = params_l.a_in * jnp.einsum("ni,ei->en", win_l, u_t)
+
+            def inner(mi, _):
+                return step(mi, dt_c, h_in), None
+
+            m_new, _ = jax.lax.scan(inner, m_c, None, length=hold_steps)
+            m_new = jnp.where(mask_t[:, None, None], m_new, m_c)
+            return m_new, m_new[..., 0]
+
+        mT, states = jax.lax.scan(per_tick, m_l, (u_l, mask_l))
+        # full-N feature block for the lane-sharded learn state: one gather
+        # per chunk over the model axis (K, E_l, N_l) -> (K, E_l, N)
+        sx = states
+        if model_axis is not None:
+            sx = jax.lax.all_gather(sx, model_axis, axis=-1, tiled=True)
+        xb = jnp.concatenate(
+            [sx, jnp.ones((*sx.shape[:2], 1), sx.dtype)], axis=-1
+        )
+        pT, wT, preds = krls.rls_chunk(p_l, wl_l, xb, y_l, lmask_l, lam)
+        return mT, states, pT, wT, preds
+
+    p_params = STOParams(*([specs["params"]] * len(STOParams._fields)))
+    return jax.jit(
+        shard_map(
+            local_run,
+            mesh=mesh,
+            in_specs=(
+                p_params,
+                specs["w"],
+                specs["w_in"],
+                specs["m"],
+                specs["u_e"],
+                specs["lane_block"],
+                specs["y_block"],
+                specs["lane_block"],
+                specs["learn_p"],
+                specs["learn_w"],
+            ),
+            out_specs=(
+                specs["m"],
+                specs["states"],
+                specs["learn_p"],
+                specs["learn_w"],
+                specs["y_block"],
+            ),
+            **_SHARD_MAP_CHECK_KW,
+        )
+    )
+
+
+def tick_chunk_sharded_rls(
+    mesh: Mesh,
+    params: STOParams,  # leaves (E, 1)
+    w_cp: jnp.ndarray,  # (N, N)
+    w_in: jnp.ndarray,  # (N, N_in)
+    m: jnp.ndarray,  # (E, N, 3)
+    u_block: jnp.ndarray,  # (K, E, N_in)
+    mask_block: jnp.ndarray,  # (K, E) bool — integration lane mask
+    y_block: jnp.ndarray,  # (K, E, n_out) per-tick learning targets
+    lmask_block: jnp.ndarray,  # (K, E) bool — which lanes LEARN which ticks
+    p0: jnp.ndarray,  # (E, S, S) per-lane RLS inverse-Gram
+    w0: jnp.ndarray,  # (E, S, n_out) per-lane readout weights
+    lam: float,  # forgetting factor (static)
+    dt: float,
+    hold_steps: int,
+    ensemble_axes: Sequence[str] = ("data",),
+    model_axis: Optional[str] = "model",
+    tableau_name: str = "rk4",
+    gather_dtype=None,
+):
+    """K learning serving ticks for a sharded slot batch in one dispatch.
+
+    The sharded analogue of the learn branch of `CompiledSim.tick_chunk`:
+    integration is `tick_chunk_sharded`'s exactly; the fused RLS update
+    keeps P/W lane-sharded and all-gathers the feature vector over the
+    model axis. Returns (m' (E, N, 3), states (K, E, N), P', W',
+    preds (K, E, n_out)).
+    """
+    fn = _tick_chunk_sharded_rls_fn(
+        mesh, tuple(ensemble_axes), model_axis, tableau_name,
+        float(dt), int(hold_steps), gather_dtype, float(lam),
+    )
+    return fn(params, w_cp, w_in, m, u_block, mask_block,
+              y_block, lmask_block, p0, w0)
 
 
 def tick_chunk_sharded(

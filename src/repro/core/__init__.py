@@ -33,6 +33,7 @@ from repro.core.reservoir import (
     coerce_input_series,
     drive,
     fit_ridge,
+    fit_rls,
     predict,
     nmse,
     Readout,

@@ -1,11 +1,15 @@
 """Reservoir-computing API on top of the coupled-STO integrator.
 
 Pipeline (the paper's application context, [AKT+22]):
-  input series u(t)  --drive-->  node states x_t = m^x(t_k)  --ridge-->  readout
+  input series u(t)  --drive-->  node states x_t = m^x(t_k)  --fit-->  readout
 
-Only the readout is trained (linear ridge regression), which is what makes
-reservoir computing cheap; the expensive part — and the paper's subject — is
-the simulation of the reservoir itself, `drive()`.
+Only the linear readout is trained, which is what makes reservoir
+computing cheap; the expensive part — and the paper's subject — is the
+simulation of the reservoir itself (`drive()`, now a shim over
+repro.api.compile_plan). Two trainers are provided: `fit_ridge` (batch
+ridge regression) and `fit_rls` (recursive least squares — the offline
+oracle for the serving engine's streaming online learning,
+`ExecPlan.learn="rls"`).
 """
 
 from __future__ import annotations
@@ -13,6 +17,7 @@ from __future__ import annotations
 import warnings
 from typing import NamedTuple, Optional, Tuple
 
+import jax
 import jax.numpy as jnp
 
 from repro.core import constants, coupling
@@ -147,6 +152,109 @@ def fit_ridge(
     rhs = xb.T @ y
     w = jnp.linalg.solve(gram + reg * jnp.eye(gram.shape[0], dtype=gram.dtype), rhs)
     return Readout(w_out=w, washout=washout)
+
+
+def fit_rls(
+    states: jnp.ndarray,  # (T, N)
+    targets: jnp.ndarray,  # (T, n_out) or (T,)
+    washout: int = 0,
+    reg: float = 1e-6,
+    lam: float = 1.0,
+    w0: Optional[jnp.ndarray] = None,  # (N + 1, n_out) warm start
+    block: int = 1,
+) -> Readout:
+    """Recursive-least-squares readout — the offline oracle for streaming
+    online learning (`ExecPlan.learn="rls"`).
+
+    Processes the state rows sequentially with the same update kernels the
+    serving engine fuses into `CompiledSim.tick_chunk` (kernels/rls.py), at
+    batch width 1: P starts at I / reg, weights at w0 (zeros by default),
+    and the first `washout` rows are masked — the update is skipped with
+    exactly-zero contributions, mirroring a streaming session's
+    `learn_washout` ticks.
+
+    block matches the serving engine's chunk size: `block=K` applies
+    `kernels.rls.rls_chunk` to K-row blocks [0, K), [K, 2K), ... — exactly
+    how a served session's ticks are blocked (sessions admit at chunk
+    boundaries, so their local blocking is origin-aligned regardless of
+    global chunk phase). Fed a session's HARVESTED states
+    (`SessionResult.states`) with block == the engine's chunk_ticks, this
+    reproduces the session's learned readout bit-for-bit on the scan
+    backend — the update kernels are reduction-order stable across batch
+    widths (see kernels/rls.py) — pinned by tests/test_rls_learning.py.
+    (The harvested states, not a solo re-drive: batched integration agrees
+    with solo runs only to float tolerance. And the same block size: the
+    chunked recursion is mathematically identical to block=1 but orders
+    float ops differently.)
+
+    With lam == 1.0 the recursion solves the same regularized normal
+    equations as `fit_ridge(states, targets, washout, reg)` — identical up
+    to float roundoff (RLS runs in the state dtype; fit_ridge accumulates
+    its Gram matrix separately). lam < 1 exponentially forgets old samples
+    (non-stationary targets), which batch ridge cannot express.
+
+    targets follows `fit_ridge`'s explicit shape contract: (T, n_out)
+    aligned with states, or (T,) for a single output.
+    """
+    from repro.kernels import rls as krls
+
+    states = jnp.asarray(states)
+    targets = jnp.asarray(targets)
+    t = states.shape[0]
+    if targets.ndim == 1:
+        targets = targets[:, None]
+    if targets.ndim != 2 or targets.shape[0] != t:
+        raise ValueError(
+            f"targets must have shape ({t}, n_out) — one row per state "
+            f"sample — or ({t},) for a single output; got "
+            f"{tuple(targets.shape)} against states {tuple(states.shape)}."
+        )
+    if not 0.0 < float(lam) <= 1.0:
+        raise ValueError(f"lam (forgetting factor) must be in (0, 1]; got {lam}")
+    if block < 1:
+        raise ValueError(f"block must be an int >= 1; got {block}")
+    dtype = states.dtype
+    n_state = states.shape[1] + 1
+    n_out = targets.shape[1]
+    xb = jnp.concatenate([states, jnp.ones((t, 1), dtype)], axis=1)  # (T, S)
+    y = targets.astype(dtype)
+    mask = jnp.arange(t) >= washout
+    p0, w_init = krls.rls_init(1, n_state, n_out, reg, dtype)
+    if w0 is not None:
+        w_init = jnp.asarray(w0, dtype).reshape(1, n_state, n_out)
+    lam_c = float(lam)  # static, like the streaming workers (kernels/rls.py)
+
+    # every block size — including 1 — goes through rls_chunk, because the
+    # serving engine does too (tick_chunk's learn tail is rls_chunk at any
+    # chunk_ticks): the oracle must run the IDENTICAL op sequence or the
+    # bit-match contract would silently fail at chunk_ticks == 1.
+    # Pad the tail to a whole block with masked rows (exactly-zero
+    # contributions, like a served session's trailing masked chunk rows).
+    pad = (-t) % block
+    if pad:
+        xb = jnp.concatenate([xb, jnp.zeros((pad, n_state), dtype)])
+        y = jnp.concatenate([y, jnp.zeros((pad, n_out), dtype)])
+        mask = jnp.concatenate([mask, jnp.zeros(pad, bool)])
+    nb = xb.shape[0] // block
+
+    def blk(carry, rows):
+        p, w = carry
+        x_r, y_r, m_r = rows  # (block, S), (block, n_out), (block,)
+        p, w, preds = krls.rls_chunk(
+            p, w, x_r[:, None, :], y_r[:, None, :], m_r[:, None], lam_c
+        )
+        return (p, w), preds[:, 0]
+
+    (_, w_fin), _ = jax.lax.scan(
+        blk,
+        (p0, w_init),
+        (
+            xb.reshape(nb, block, n_state),
+            y.reshape(nb, block, n_out),
+            mask.reshape(nb, block),
+        ),
+    )
+    return Readout(w_out=w_fin[0], washout=washout)
 
 
 def predict(readout: Readout, states: jnp.ndarray) -> jnp.ndarray:

@@ -15,17 +15,33 @@ def narma_series(
 
     y_{t+1} = 0.3 y_t + 0.05 y_t sum_{i<order} y_{t-i} + 1.5 u_{t-order+1} u_t + 0.1
     with u ~ U[0, 0.5]. Returns (u, y) of length `t` after warmup.
+
+    The recursion is only stable for moderate orders (NARMA-10 is the
+    standard benchmark; beyond ~20 the feedback term can blow up for many
+    input draws) — a diverging series raises instead of silently handing a
+    readout inf/overflowed targets.
     """
+    if not isinstance(order, (int, np.integer)) or isinstance(order, bool) or order < 1:
+        raise ValueError(f"order must be an int >= 1; got {order!r}")
+    if t < 1:
+        raise ValueError(f"t must be >= 1; got {t}")
     rng = np.random.default_rng(seed)
     total = t + warmup + order
     u = rng.uniform(0.0, 0.5, size=total)
     y = np.zeros(total)
-    for k in range(order, total - 1):
-        y[k + 1] = (
-            0.3 * y[k]
-            + 0.05 * y[k] * np.sum(y[k - order + 1 : k + 1])
-            + 1.5 * u[k - order + 1] * u[k]
-            + 0.1
+    with np.errstate(over="ignore", invalid="ignore"):
+        for k in range(order, total - 1):
+            y[k + 1] = (
+                0.3 * y[k]
+                + 0.05 * y[k] * np.sum(y[k - order + 1 : k + 1])
+                + 1.5 * u[k - order + 1] * u[k]
+                + 0.1
+            )
+    if not np.isfinite(y).all() or np.abs(y).max() > 1e3:
+        raise ValueError(
+            f"NARMA-{order} series diverged (|y| reached "
+            f"{np.abs(y).max():.2e}); the recursion is unstable at this "
+            f"order/seed — use order <= 10 or try another seed"
         )
     return u[warmup : warmup + t], y[warmup : warmup + t]
 
@@ -34,7 +50,15 @@ def delay_memory_targets(u: np.ndarray, max_delay: int) -> np.ndarray:
     """Targets y_d[t] = u[t - d] for d = 1..max_delay (memory-capacity task).
 
     Returns (T, max_delay); the first max_delay rows should be washed out.
+
+    >>> delay_memory_targets(np.array([1.0, 2.0, 3.0, 4.0]), 2)
+    array([[0., 0.],
+           [1., 0.],
+           [2., 1.],
+           [3., 2.]])
     """
+    if max_delay < 1:
+        raise ValueError(f"max_delay must be >= 1; got {max_delay}")
     t = len(u)
     out = np.zeros((t, max_delay), dtype=u.dtype)
     for d in range(1, max_delay + 1):
@@ -43,11 +67,21 @@ def delay_memory_targets(u: np.ndarray, max_delay: int) -> np.ndarray:
 
 
 def memory_capacity(pred: np.ndarray, target: np.ndarray) -> float:
-    """MC = sum_d corr^2(pred_d, target_d)  (Jaeger's memory capacity)."""
+    """MC = sum_d corr^2(pred_d, target_d)  (Jaeger's memory capacity).
+
+    A zero-variance column (constant prediction or constant target — e.g.
+    an untrained delay) has no defined correlation; it contributes 0 to the
+    capacity instead of propagating NaN.
+
+    >>> memory_capacity(np.array([[1.0, 5.0], [2.0, 5.0], [3.0, 5.0]]),
+    ...                 np.array([[1.0, 0.0], [2.0, 1.0], [3.0, 2.0]]))
+    1.0
+    """
     mc = 0.0
     for d in range(target.shape[1]):
         p, y = pred[:, d], target[:, d]
-        c = np.corrcoef(p, y)[0, 1]
+        with np.errstate(invalid="ignore", divide="ignore"):
+            c = np.corrcoef(p, y)[0, 1]
         if np.isfinite(c):
             mc += float(c) ** 2
     return mc

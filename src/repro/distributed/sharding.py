@@ -318,6 +318,11 @@ def reservoir_specs(
       lane_block  per-tick per-lane mask block (K, E) — chunked serving
       states  collected node states (T, E, N)
       states_tick  one tick's states plane (E, N)
+      learn_p  per-lane RLS inverse-Gram (E, S, S) — lane-sharded, the
+               (S, S) = (N+1, N+1) feature block replicated (the update
+               consumes the all-gathered feature vector)
+      learn_w  per-lane readout weights (E, S, n_out), sharded like learn_p
+      y_block  per-tick per-lane targets / predictions (K, E, n_out)
     """
     ens = tuple(ensemble_axes)
     return {
@@ -332,6 +337,9 @@ def reservoir_specs(
         "lane_block": P(None, ens),
         "states": P(None, ens, model_axis),
         "states_tick": P(ens, model_axis),
+        "learn_p": P(ens, None, None),
+        "learn_w": P(ens, None, None),
+        "y_block": P(None, ens, None),
     }
 
 

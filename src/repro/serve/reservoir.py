@@ -30,6 +30,18 @@ is a pluggable `serve.scheduler.AutoscalePolicy` fed by the scheduler's
 occupancy / queue-depth / queue-wait stats (default: `QueueDepthPolicy`,
 grow-on-demand + hysteretic shrink).
 
+With `ExecPlan(learn="rls")` the engine also LEARNS: a session that
+submits `targets` next to its inputs gets its readout trained on device
+while it streams — per-slot RLS inverse-Gram/weight lanes live in the
+SlotStore next to the magnetization, the chunked update rides the same
+`tick_chunk` dispatch as the integration (kernels/rls.py), and the
+finished session's `SessionResult` carries the trained Readout, the
+per-tick a-priori predictions, and the online NMSE. Learning state
+migrates through admit/retire and autoscale resizes with the other slot
+columns; `core.reservoir.fit_rls(states, targets, block=chunk_ticks)` is
+the offline oracle the streamed result bit-matches on the scan backend
+(tests/test_rls_learning.py).
+
 Construct from a Reservoir/SimSpec (the engine compiles an ExecPlan for
 you; backend="auto" consults the measured-latency dispatch table, persisted
 per-platform JSON included, then the VMEM heuristic) or hand the engine an
@@ -75,6 +87,17 @@ class StreamSession:
     for this tenant's lane; readout is the tenant's trained linear readout
     (None = state-collection only, e.g. to fit a readout afterwards); m0
     resumes from a previous session's final state.
+
+    On a learning engine (`ExecPlan.learn="rls"`), `targets` turns the
+    session into an ONLINE-LEARNING stream: one (T, n_out) target row per
+    input row ((T,) for n_out == 1), and the engine trains this tenant's
+    readout on device while it streams — every tick's RLS update rides the
+    same `tick_chunk` dispatch as the integration. `learn_washout` skips
+    the update for the first ticks (reservoir warm-up; predictions are
+    still recorded). If `readout` is also set, it WARM-STARTS the learned
+    weights (and still drives the static `outputs` column). The trained
+    readout, per-tick a-priori predictions, and online NMSE come back on
+    the SessionResult.
     """
 
     sid: int
@@ -83,12 +106,15 @@ class StreamSession:
     readout: Optional[Readout] = None
     m0: Optional[jnp.ndarray] = None
     collect_states: bool = True
+    targets: Optional[np.ndarray] = None  # (T, n_out) online-learning targets
+    learn_washout: int = 0  # ticks before the first RLS update
 
     # engine-internal bookkeeping (set on admit)
     _slot: int = dataclasses.field(default=-1, repr=False)
     _t: int = dataclasses.field(default=0, repr=False)
     _states: list = dataclasses.field(default_factory=list, repr=False)
     _outs: list = dataclasses.field(default_factory=list, repr=False)
+    _preds: list = dataclasses.field(default_factory=list, repr=False)
     _admitted_tick: int = dataclasses.field(default=-1, repr=False)
     _finished_tick: int = dataclasses.field(default=-1, repr=False)
 
@@ -105,6 +131,10 @@ class SessionResult:
     admitted_tick: int
     finished_tick: int
     slot: int
+    # online learning (sessions submitted with targets on a learning engine)
+    predictions: Optional[np.ndarray] = None  # (T, n_out) a-priori per tick
+    learned_readout: Optional[Readout] = None  # final trained W (washout=0)
+    learn_nmse: Optional[float] = None  # online NMSE after learn_washout
 
 
 @dataclasses.dataclass
@@ -119,6 +149,11 @@ class _ChunkPlan:
     any_readout: bool
     states_block: Optional[jnp.ndarray] = None  # (K, N, E) device
     outs_block: Optional[jnp.ndarray] = None  # (K, E, n_out) device
+    # learning engines only
+    targets: Optional[np.ndarray] = None  # (K, E, n_out) target rows
+    lmask: Optional[np.ndarray] = None  # (K, E) who LEARNS which tick
+    any_learn: bool = False
+    preds_block: Optional[jnp.ndarray] = None  # (K, E, n_out) device
 
 
 # ---------------------------------------------------------------------------
@@ -188,6 +223,12 @@ class ReservoirEngine:
                     grow/shrink the slot count between min_slots and
                     max_slots at chunk boundaries via the bucketed plan
                     cache (powers of two from min_slots).
+      learn         "rls" (template route; CompiledSim route: set on the
+                    ExecPlan) enables online readout learning for sessions
+                    that submit targets; learn_lam / learn_reg are the RLS
+                    forgetting factor and regularization (see
+                    repro.api.plan.ExecPlan). Learning engines serve
+                    through the chunked path (run()/step_chunk()) only.
     """
 
     def __init__(
@@ -203,6 +244,9 @@ class ReservoirEngine:
         autoscale: Union[AutoscalePolicy, bool, None] = None,
         min_slots: Optional[int] = None,
         max_slots: Optional[int] = None,
+        learn: Optional[str] = None,
+        learn_lam: Optional[float] = None,
+        learn_reg: Optional[float] = None,
     ):
         if isinstance(res, CompiledSim):
             sim = res
@@ -212,9 +256,17 @@ class ReservoirEngine:
                     f"ensemble width ({sim.plan.ensemble}); omit num_slots to "
                     f"use the plan's"
                 )
-            if backend != "auto" or measure or interpret or chunk_ticks is not None:
+            if (
+                backend != "auto"
+                or measure
+                or interpret
+                or chunk_ticks is not None
+                or learn is not None
+                or learn_lam is not None
+                or learn_reg is not None
+            ):
                 raise ValueError(
-                    "backend/measure/interpret/chunk_ticks are ExecPlan "
+                    "backend/measure/interpret/chunk_ticks/learn* are ExecPlan "
                     "decisions; when constructing from a CompiledSim, set "
                     "them on the plan passed to compile_plan instead"
                 )
@@ -239,12 +291,22 @@ class ReservoirEngine:
                     interpret=interpret,
                     measure=measure,
                     chunk_ticks=1 if chunk_ticks is None else chunk_ticks,
+                    learn=learn,
+                    learn_lam=1.0 if learn_lam is None else learn_lam,
+                    learn_reg=1e-6 if learn_reg is None else learn_reg,
                 ),
             )
         self.sim = sim
         self.res = sim.spec
         self.chunk_ticks = sim.plan.chunk_ticks
-        self.store = SlotStore(sim.spec, num_slots, n_out=n_out)
+        self.learn = sim.plan.learn
+        self.store = SlotStore(
+            sim.spec,
+            num_slots,
+            n_out=n_out,
+            learn=self.learn is not None,
+            learn_reg=sim.plan.learn_reg,
+        )
         self.scheduler = SlotScheduler(num_slots)
         self.tick_count = 0
         self.results: Dict[int, SessionResult] = {}
@@ -282,14 +344,22 @@ class ReservoirEngine:
         # chunk (slot still holds their state until the next boundary)
         self._finishing: List[Tuple[int, StreamSession]] = []
         # one boundary's retired sessions awaiting their last chunk's
-        # harvest: ([(slot, session), ...], (k, N, 3) final-m device block)
+        # harvest: ([(slot, session), ...], (k, N, 3) final-m device block,
+        # (k, S, n_out) learned-W device block or None)
         self._awaiting: Optional[
-            Tuple[List[Tuple[int, StreamSession]], jnp.ndarray]
+            Tuple[
+                List[Tuple[int, StreamSession]],
+                jnp.ndarray,
+                Optional[jnp.ndarray],
+            ]
         ] = None
         # device copy of the last chunk's lane-mask block; steady-state
-        # chunks repeat the same mask, so skip the re-upload
+        # chunks repeat the same mask, so skip the re-upload (same for the
+        # learn mask — constant once every learner is past washout)
         self._mask_np: Optional[np.ndarray] = None
         self._mask_dev: Optional[jnp.ndarray] = None
+        self._lmask_np: Optional[np.ndarray] = None
+        self._lmask_dev: Optional[jnp.ndarray] = None
         # the launched-but-unharvested chunk (the pipeline's second buffer)
         self._pending: Optional[_ChunkPlan] = None
 
@@ -316,6 +386,33 @@ class ReservoirEngine:
                     f"session {session.sid}: readout w_out shape {w.shape} "
                     f"!= ({self.store.n + 1}, {self.store.n_out})"
                 )
+        if session.targets is not None:
+            if self.learn is None:
+                raise ValueError(
+                    f"session {session.sid}: targets require a learning "
+                    f"engine — compile the plan with ExecPlan(learn='rls') "
+                    f"(or pass learn='rls' to ReservoirEngine)"
+                )
+            t = np.asarray(session.targets, dtype=self.store.dtype)
+            if t.ndim == 1:
+                t = t[:, None]
+            if t.shape != (u.shape[0], self.store.n_out):
+                raise ValueError(
+                    f"session {session.sid}: targets must have shape "
+                    f"({u.shape[0]}, {self.store.n_out}) — one row per input "
+                    f"row — or ({u.shape[0]},) for n_out == 1; got "
+                    f"{tuple(np.shape(session.targets))}"
+                )
+            session.targets = t
+            if (
+                isinstance(session.learn_washout, bool)
+                or not isinstance(session.learn_washout, int)
+                or session.learn_washout < 0
+            ):
+                raise ValueError(
+                    f"session {session.sid}: learn_washout must be an int "
+                    f">= 0; got {session.learn_washout!r}"
+                )
         self.scheduler.submit(session)
 
     def _admit_pending(self) -> None:
@@ -324,23 +421,32 @@ class ReservoirEngine:
             return
         items = []
         for slot, sess in placed:
+            w_out = None if sess.readout is None else sess.readout.w_out
             items.append(
                 (
                     slot,
                     sess.m0,
                     sess.params,
-                    None if sess.readout is None else sess.readout.w_out,
+                    w_out,
+                    # a learning session's provided readout warm-starts its
+                    # learned weight lane (zeros otherwise)
+                    w_out if sess.targets is not None else None,
                 )
             )
             sess._slot = slot
             sess._t = 0
             sess._states = []
             sess._outs = []
+            sess._preds = []
             sess._admitted_tick = self.tick_count
         self.store.admit_many(items)  # one scatter per array, not per session
 
     def _record_result(
-        self, sess: StreamSession, slot: int, final_m: jnp.ndarray
+        self,
+        sess: StreamSession,
+        slot: int,
+        final_m: jnp.ndarray,
+        learned_w: Optional[np.ndarray] = None,
     ) -> None:
         """Assemble a SessionResult from the session's harvested pieces.
 
@@ -362,6 +468,24 @@ class ReservoirEngine:
                 [np.atleast_2d(np.asarray(o)) for o in sess._outs]
             )
             outputs = outs[sess.readout.washout :]
+        predictions = None
+        learned_readout = None
+        learn_nmse = None
+        if sess.targets is not None:
+            predictions = np.concatenate(
+                [np.atleast_2d(np.asarray(p)) for p in sess._preds]
+            )
+            if learned_w is not None:
+                # washout=0: the trained readout applies to arbitrary states
+                learned_readout = Readout(
+                    w_out=jnp.asarray(learned_w), washout=0
+                )
+            wo = sess.learn_washout
+            if predictions.shape[0] > wo:
+                p, y = predictions[wo:], sess.targets[wo:]
+                learn_nmse = float(
+                    np.mean((p - y) ** 2) / (np.var(y) + 1e-30)
+                )
         self.results[sess.sid] = SessionResult(
             sid=sess.sid,
             states=states,
@@ -370,9 +494,13 @@ class ReservoirEngine:
             admitted_tick=sess._admitted_tick,
             finished_tick=sess._finished_tick,
             slot=slot,
+            predictions=predictions,
+            learned_readout=learned_readout,
+            learn_nmse=learn_nmse,
         )
         sess._states = []
         sess._outs = []
+        sess._preds = []
         if self.max_retained is not None:
             while len(self.results) > self.max_retained:
                 self.results.pop(next(iter(self.results)))
@@ -451,6 +579,12 @@ class ReservoirEngine:
         per-slot harvest per input tick. `run()` is the pipelined chunked
         path; both produce identical per-session results on the scan
         backend (bit-exact) and tolerance-equal elsewhere."""
+        if self.learn is not None:
+            raise RuntimeError(
+                "online learning (ExecPlan.learn) runs on the chunked "
+                "serving path only — drive the engine with run() or "
+                "step_chunk() (chunk_ticks=1 preserves per-tick semantics)"
+            )
         self._admit_pending()
         running = self.scheduler.running
         if not running:
@@ -497,9 +631,16 @@ class ReservoirEngine:
         if self._finishing:
             slots = [slot for slot, _ in self._finishing]
             finals = self.store.state_columns(slots)  # (k, N, 3) device, lazy
+            # finishers' trained readouts: snapshot the in-flight Wl columns
+            # the same lazy way before retire_many resets them
+            w_finals = (
+                self.store.learn_w_columns(slots)
+                if self.learn is not None
+                else None
+            )
             for slot, sess in self._finishing:
                 self.scheduler.retire(slot)
-            self._awaiting = (self._finishing, finals)
+            self._awaiting = (self._finishing, finals, w_finals)
             self.store.retire_many(slots)
             self._finishing = []
 
@@ -514,19 +655,31 @@ class ReservoirEngine:
             return None
 
         # 4) K-tick input block + per-tick lane masks (mid-chunk retires
-        # mask a lane's trailing rows off; the slot refills next boundary)
+        # mask a lane's trailing rows off; the slot refills next boundary),
+        # plus — on learning engines — the target block and learn mask
+        # (False rows: washout ticks, inference-only tenants, idle lanes)
         k = self.chunk_ticks
         e, n_in = self.store.num_slots, self.store.n_in
         u = np.zeros((k, e, n_in), self.store.dtype)
         mask = np.zeros((k, e), dtype=bool)
+        learning = self.learn is not None
+        y = np.zeros((k, e, self.store.n_out), self.store.dtype) if learning else None
+        lmask = np.zeros((k, e), dtype=bool) if learning else None
         entries = []
         any_readout = False
+        any_learn = False
         session_ticks = 0
         for slot, sess in running.items():
             t0 = sess._t
             n = min(k, sess.u_seq.shape[0] - t0)
             u[:n, slot] = sess.u_seq[t0 : t0 + n]
             mask[:n, slot] = True
+            if learning and sess.targets is not None:
+                y[:n, slot] = sess.targets[t0 : t0 + n]
+                # update only from the session's learn_washout tick onward
+                start = max(0, sess.learn_washout - t0)
+                lmask[start:n, slot] = True
+                any_learn = True
             sess._t = t0 + n
             entries.append((sess, slot, n))
             session_ticks += n
@@ -538,7 +691,8 @@ class ReservoirEngine:
         self.tick_count += k
 
         return _ChunkPlan(
-            entries=entries, u=u, mask=mask, any_readout=any_readout
+            entries=entries, u=u, mask=mask, any_readout=any_readout,
+            targets=y, lmask=lmask, any_learn=any_learn,
         )
 
     def _launch_chunk(self, plan: _ChunkPlan) -> None:
@@ -550,12 +704,34 @@ class ReservoirEngine:
         ):
             self._mask_np = plan.mask
             self._mask_dev = jnp.asarray(plan.mask)
-        store.m, states_block = self.sim.tick_chunk(
-            store.m,
-            jnp.asarray(plan.u),
-            lane_mask=self._mask_dev,
-            params=store.params_ensemble,
-        )
+        if self.learn is not None:
+            if self._lmask_np is None or not (
+                self._lmask_np.shape == plan.lmask.shape
+                and np.array_equal(self._lmask_np, plan.lmask)
+            ):
+                self._lmask_np = plan.lmask
+                self._lmask_dev = jnp.asarray(plan.lmask)
+            # one dispatch advances physics AND learning: P/Wl lanes ride
+            # the chunk, a-priori predictions come back in the same result
+            store.m, states_block, (store.P, store.Wl), preds = (
+                self.sim.tick_chunk(
+                    store.m,
+                    jnp.asarray(plan.u),
+                    lane_mask=self._mask_dev,
+                    params=store.params_ensemble,
+                    targets=jnp.asarray(plan.targets),
+                    learn_state=(store.P, store.Wl),
+                    learn_mask=self._lmask_dev,
+                )
+            )
+            plan.preds_block = preds
+        else:
+            store.m, states_block = self.sim.tick_chunk(
+                store.m,
+                jnp.asarray(plan.u),
+                lane_mask=self._mask_dev,
+                params=store.params_ensemble,
+            )
         plan.states_block = states_block
         if plan.any_readout:
             plan.outs_block = _apply_readouts_chunk(states_block, store.w_out)
@@ -575,6 +751,11 @@ class ReservoirEngine:
         outs_np = (
             np.asarray(plan.outs_block) if plan.outs_block is not None else None
         )
+        preds_np = (
+            np.asarray(plan.preds_block)  # (K, E, n_out)
+            if plan.any_learn and plan.preds_block is not None
+            else None
+        )
         # .copy(): a bare slice is a VIEW pinning the whole (K, N, E) block
         # for the session's lifetime — a long-running collector would retain
         # every chunk block it ever touched instead of its own lane
@@ -583,16 +764,28 @@ class ReservoirEngine:
                 sess._states.append(states_np[:n, :, slot].copy())  # (n, N)
             if sess.readout is not None:
                 sess._outs.append(outs_np[:n, slot].copy())  # (n, n_out)
+            if preds_np is not None and sess.targets is not None:
+                sess._preds.append(preds_np[:n, slot].copy())  # (n, n_out)
         # sessions retired at the last boundary: their final chunk is now
         # harvested, so their results are complete (final states arrive as
         # one bulk transfer, handed out as zero-copy row views)
         if self._awaiting is not None:
-            finishers, finals = self._awaiting
+            finishers, finals, w_finals = self._awaiting
             finals_np = np.asarray(finals)  # (k, N, 3)
+            w_np = np.asarray(w_finals) if w_finals is not None else None
             for i, (slot, sess) in enumerate(finishers):
                 # .copy() for the same reason as above: a row view would
                 # pin the whole boundary's finals block per retained result
-                self._record_result(sess, slot, finals_np[i].copy())
+                self._record_result(
+                    sess,
+                    slot,
+                    finals_np[i].copy(),
+                    learned_w=(
+                        w_np[i].copy()
+                        if w_np is not None and sess.targets is not None
+                        else None
+                    ),
+                )
             self._awaiting = None
 
     def step_chunk(self) -> bool:

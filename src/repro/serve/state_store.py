@@ -7,6 +7,16 @@ kernels want it (kernels/ref.py):
     pv     : (NP, E)        packed per-tenant STOParams, one column per slot
     w_out  : (E, N+1, n_out) per-session trained readouts (last row = bias)
 
+and, when the engine learns online (`ExecPlan.learn="rls"`):
+
+    P      : (E, S, S)      per-slot RLS inverse-Gram, S = N + 1
+    Wl     : (E, S, n_out)  per-slot LEARNED readout weights
+
+P/Wl lanes reset to the template (I / learn_reg, zeros — or a session's
+warm-start readout) on admit, ride every `tick_chunk` dispatch next to the
+magnetization, and migrate through `resized` exactly like the state
+columns, so autoscaling never perturbs a session's learning trajectory.
+
 Admitting a session SPLICES its state into the batched arrays at a free
 slot (column writes via .at); retiring resets the column to the engine's
 template so idle lanes keep integrating harmlessly (unit-norm state, zero
@@ -32,12 +42,20 @@ import numpy as np
 
 from repro.core.constants import STOParams
 from repro.kernels import ref as kref
+from repro.kernels import rls as krls
 
 _NF = len(STOParams._fields)
 
 
 class SlotStore:
-    def __init__(self, res, num_slots: int, n_out: int = 1):
+    def __init__(
+        self,
+        res,
+        num_slots: int,
+        n_out: int = 1,
+        learn: bool = False,
+        learn_reg: float = 1e-6,
+    ):
         # res: the engine's physics template — a repro.api.SimSpec (or the
         # legacy Reservoir tuple; both carry params/w_cp/w_in/m0/dt).
         self.res = res
@@ -46,6 +64,15 @@ class SlotStore:
         self.n_in = int(res.w_in.shape[1])
         self.n_out = n_out
         self.dtype = res.m0.dtype
+        self.learn = learn
+        self.learn_reg = float(learn_reg)
+        self.n_state = self.n + 1
+        self.P: Optional[jnp.ndarray] = None
+        self.Wl: Optional[jnp.ndarray] = None
+        if learn:
+            self.P, self.Wl = krls.rls_init(
+                num_slots, self.n_state, n_out, self.learn_reg, self.dtype
+            )
 
         self._m0_col = jnp.transpose(res.m0)  # (3, N) template column
         self._m0_col_np = np.asarray(self._m0_col)
@@ -83,28 +110,35 @@ class SlotStore:
         m0: Optional[jnp.ndarray] = None,  # (N, 3); None = reservoir default
         params: Optional[STOParams] = None,  # per-tenant physics
         w_out: Optional[jnp.ndarray] = None,  # (N+1, n_out) trained readout
+        learn_w0: Optional[jnp.ndarray] = None,  # (N+1, n_out) RLS warm start
     ) -> None:
-        self.admit_many([(slot, m0, params, w_out)])
+        self.admit_many([(slot, m0, params, w_out, learn_w0)])
 
     def admit_many(
         self,
-        items: Sequence[
-            Tuple[int, Optional[jnp.ndarray], Optional[STOParams], Optional[jnp.ndarray]]
-        ],
+        items: Sequence[Tuple],
     ) -> None:
         """Splice several sessions in ONE scatter per batched array.
 
-        items: (slot, m0, params, w_out) per admission — the whole chunk
-        boundary's admissions become one column write into m, one row write
-        into w_out, and host-side numpy column writes for the params."""
+        items: (slot, m0, params, w_out[, learn_w0]) per admission — the
+        whole chunk boundary's admissions become one column write into m,
+        one row write into w_out (and, on learning stores, one each into
+        P / Wl), and host-side numpy column writes for the params.
+        learn_w0 warm-starts the slot's LEARNED weights (defaults to zeros;
+        P always restarts at I / learn_reg)."""
         if not items:
             return
         idx = np.empty(len(items), dtype=np.int32)
         cols = np.empty((3, self.n, len(items)), self.dtype)
         w_idx: List[int] = []
         w_rows: List[np.ndarray] = []
-        for i, (slot, m0, params, w_out) in enumerate(items):
+        lw_cols: List[np.ndarray] = []
+        for i, item in enumerate(items):
+            slot, m0, params, w_out = item[:4]
+            learn_w0 = item[4] if len(item) > 4 else None
             assert not self._active[slot], f"slot {slot} already occupied"
+            self._active[slot] = True  # in-loop: a duplicate slot in ONE
+            # batch must trip the assert, not silently double-admit
             idx[i] = slot
             cols[:, :, i] = (
                 self._m0_col_np
@@ -123,13 +157,37 @@ class SlotStore:
                 w_rows.append(
                     np.asarray(w_out, self.dtype).reshape(self.n + 1, self.n_out)
                 )
-            self._active[slot] = True
+            if self.learn:
+                lw_cols.append(
+                    np.zeros((self.n_state, self.n_out), self.dtype)
+                    if learn_w0 is None
+                    else np.asarray(learn_w0, self.dtype).reshape(
+                        self.n_state, self.n_out
+                    )
+                )
         self.m = self.m.at[:, :, idx].set(jnp.asarray(cols))
         if w_idx:
             self.w_out = self.w_out.at[np.asarray(w_idx)].set(
                 jnp.asarray(np.stack(w_rows))
             )
+        if self.learn:
+            self._reset_learn_columns(idx, lw_cols)
         self._invalidate()
+
+    def _reset_learn_columns(
+        self, idx: np.ndarray, w_cols: Optional[List[np.ndarray]] = None
+    ) -> None:
+        """Restart the learning state of several slots in one scatter each:
+        P <- I / learn_reg, Wl <- w_cols (zeros when None/omitted)."""
+        eye = jnp.broadcast_to(
+            (jnp.eye(self.n_state, dtype=self.dtype) / self.learn_reg)[None],
+            (len(idx), self.n_state, self.n_state),
+        )
+        self.P = self.P.at[idx].set(eye)
+        if w_cols:
+            self.Wl = self.Wl.at[idx].set(jnp.asarray(np.stack(w_cols)))
+        else:
+            self.Wl = self.Wl.at[idx].set(0.0)
 
     def retire(self, slot: int) -> None:
         self.retire_many([slot])
@@ -147,6 +205,8 @@ class SlotStore:
             jnp.broadcast_to(self._m0_col[:, :, None], (3, self.n, len(idx)))
         )
         self.w_out = self.w_out.at[idx].set(0.0)
+        if self.learn:
+            self._reset_learn_columns(idx)
         self._invalidate()
 
     def _invalidate(self):
@@ -165,7 +225,13 @@ class SlotStore:
         bit-identical to never having moved (pinned by
         tests/test_serve_chunked.py).
         """
-        new = SlotStore(self.res, new_num_slots, n_out=self.n_out)
+        new = SlotStore(
+            self.res,
+            new_num_slots,
+            n_out=self.n_out,
+            learn=self.learn,
+            learn_reg=self.learn_reg,
+        )
         if slot_map:
             old_idx = np.asarray(list(slot_map.keys()))
             new_idx = np.asarray(list(slot_map.values()))
@@ -177,6 +243,11 @@ class SlotStore:
             new.m = new.m.at[:, :, new_idx].set(self.m[:, :, old_idx])
             new.w_out = new.w_out.at[new_idx].set(self.w_out[old_idx])
             new._params_np[:, new_idx] = self._params_np[:, old_idx]
+            if self.learn:
+                # learning state moves with the session: mid-stream RLS
+                # trajectories survive the autoscale bit-identically
+                new.P = new.P.at[new_idx].set(self.P[old_idx])
+                new.Wl = new.Wl.at[new_idx].set(self.Wl[old_idx])
             for old, tgt in slot_map.items():
                 new._active[tgt] = self._active[old]
         return new
@@ -226,3 +297,9 @@ class SlotStore:
         """(k, N, 3) magnetization of several slots in one gather — the
         chunked engine snapshots a whole boundary's finishers at once."""
         return jnp.transpose(self.m[:, :, np.asarray(slots, dtype=np.int32)], (2, 1, 0))
+
+    def learn_w_columns(self, slots: Sequence[int]) -> jnp.ndarray:
+        """(k, S, n_out) LEARNED readout weights of several slots in one
+        gather — the finishers' trained readouts, snapshotted lazily like
+        `state_columns` (the slice pins the in-flight chunk's result)."""
+        return self.Wl[np.asarray(slots, dtype=np.int32)]

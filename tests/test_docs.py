@@ -1,0 +1,18 @@
+"""Docs stay healthy: internal markdown links resolve and docstring
+examples execute (the same checks CI's docs leg runs via
+tools/check_docs.py)."""
+
+import pathlib
+import sys
+
+sys.path.insert(0, str(pathlib.Path(__file__).resolve().parent.parent / "tools"))
+
+import check_docs  # noqa: E402
+
+
+def test_markdown_links_resolve():
+    assert check_docs.check_links() == []
+
+
+def test_doctests_pass():
+    assert check_docs.check_doctests() == []

@@ -1,0 +1,489 @@
+"""Streaming online readout learning (ExecPlan.learn="rls").
+
+The contracts this file pins:
+
+  - `fit_rls(lam=1)` solves the same regularized normal equations as
+    `fit_ridge` (close to float roundoff), and lam < 1 forgets.
+  - The RLS update is reduction-order stable across batch widths, which is
+    what makes the next contract possible at all.
+  - Streaming RLS fused into `CompiledSim.tick_chunk` BIT-MATCHES the
+    offline `fit_rls` oracle run over the session's harvested states on the
+    scan backend — for sessions served solo, slot-batched next to other
+    tenants, admitted/retired mid-chunk, and migrated by autoscale resizes.
+  - Online learning on NARMA-10 reaches NMSE within 5% of batch
+    `fit_ridge` on the same states.
+  - The planes backends and sharded plans learn tolerance-equal to scan.
+  - ExecPlan validates the learn knobs; the engine validates target
+    submission and refuses learning on the per-tick step() path.
+"""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.api import ExecPlan, compile_plan, make_spec
+from repro.core import default_params, fit_ridge, fit_rls, nmse, predict, tasks
+from repro.kernels import ops
+from repro.kernels import rls as krls
+from repro.serve.reservoir import ReservoirEngine, StreamSession
+from repro.serve.scheduler import QueueDepthPolicy
+
+ATOL = 5e-5  # tests/test_kernels_sto.py's f32 tolerance
+
+
+class TestFitRLS:
+    def test_lam_one_matches_ridge(self):
+        rng = np.random.default_rng(0)
+        states = rng.normal(size=(400, 12)).astype(np.float32)
+        targets = rng.normal(size=(400, 2)).astype(np.float32)
+        ridge = fit_ridge(states, targets, washout=20, reg=1e-2)
+        rls = fit_rls(states, targets, washout=20, reg=1e-2, lam=1.0)
+        np.testing.assert_allclose(
+            np.asarray(rls.w_out), np.asarray(ridge.w_out), atol=2e-3
+        )
+        assert rls.washout == 20
+
+    def test_forgetting_tracks_a_switch(self):
+        """lam < 1 adapts to a mid-stream target flip; lam = 1 averages.
+
+        (Horizon/lam chosen inside f32's comfort zone: aggressive
+        forgetting over very long f32 streams loses P's conditioning —
+        see the numerical note in kernels/rls.py.)"""
+        rng = np.random.default_rng(1)
+        x = rng.normal(size=(400, 4)).astype(np.float32)
+        w_a = rng.normal(size=(4,)).astype(np.float32)
+        w_b = rng.normal(size=(4,)).astype(np.float32)
+        y = np.concatenate([x[:200] @ w_a, x[200:] @ w_b]).astype(np.float32)
+        forgetful = fit_rls(x, y, reg=1e-2, lam=0.98)
+        stubborn = fit_rls(x, y, reg=1e-2, lam=1.0)
+        pred_f = predict(forgetful._replace(washout=0), jnp.asarray(x[350:]))
+        pred_s = predict(stubborn._replace(washout=0), jnp.asarray(x[350:]))
+        err_f = nmse(pred_f[:, 0], jnp.asarray(y[350:]))
+        err_s = nmse(pred_s[:, 0], jnp.asarray(y[350:]))
+        assert err_f < 0.1 * err_s
+
+    def test_warm_start_is_exact_for_zero_history(self):
+        """w0 with no (unmasked) samples comes back unchanged."""
+        states = np.ones((3, 4), np.float32)
+        targets = np.ones((3, 1), np.float32)
+        w0 = np.arange(5, dtype=np.float32)[:, None]
+        ro = fit_rls(states, targets, washout=3, reg=1e-2, w0=w0)
+        np.testing.assert_array_equal(np.asarray(ro.w_out), w0)
+
+    def test_rejects_bad_shapes_and_lam(self):
+        s = np.zeros((5, 3), np.float32)
+        with pytest.raises(ValueError, match="targets"):
+            fit_rls(s, np.zeros((1, 5), np.float32))
+        with pytest.raises(ValueError, match="lam"):
+            fit_rls(s, np.zeros(5, np.float32), lam=0.0)
+        with pytest.raises(ValueError, match="lam"):
+            fit_rls(s, np.zeros(5, np.float32), lam=1.5)
+
+    def test_update_batch_width_bit_stability(self):
+        """The lane-0 result of an E-lane update equals the E=1 update bit
+        for bit — the property the streaming-vs-oracle bit-match rests on."""
+        rng = np.random.default_rng(2)
+        s, o, e = 9, 2, 7
+        p = rng.normal(size=(1, s, s)).astype(np.float32)
+        w = rng.normal(size=(1, s, o)).astype(np.float32)
+        x = rng.normal(size=(1, s)).astype(np.float32)
+        y = rng.normal(size=(1, o)).astype(np.float32)
+        upd = jax.jit(krls.rls_update, static_argnames=("lam",))
+        a = upd(*map(jnp.asarray, (p, w, x, y, np.ones(1, bool))), lam=0.99)
+        b = upd(
+            *map(lambda z: jnp.asarray(np.repeat(z, e, 0)), (p, w, x, y)),
+            jnp.ones(e, bool),
+            lam=0.99,
+        )
+        for one, many in zip(a, b):
+            np.testing.assert_array_equal(
+                np.asarray(one)[0], np.asarray(many)[0]
+            )
+
+    @pytest.mark.parametrize("lam", [1.0, 0.99])
+    def test_chunked_blocks_match_sequential_solution(self, lam):
+        """fit_rls(block=K) — the serving chunk formulation — solves the
+        same problem as the sequential block=1 recursion (float-tolerance
+        equal; op order differs by construction)."""
+        rng = np.random.default_rng(4)
+        states = rng.normal(size=(203, 10)).astype(np.float32)
+        targets = rng.normal(size=(203, 1)).astype(np.float32)
+        seq = fit_rls(states, targets, washout=7, reg=1e-2, lam=lam)
+        blk = fit_rls(states, targets, washout=7, reg=1e-2, lam=lam, block=8)
+        np.testing.assert_allclose(
+            np.asarray(blk.w_out), np.asarray(seq.w_out), atol=2e-3
+        )
+
+    def test_chunk_batch_width_bit_stability(self):
+        """rls_chunk lane 0 at E lanes == the E=1 run, bit for bit — the
+        property the streaming-vs-oracle bit-match rests on."""
+        rng = np.random.default_rng(5)
+        k, s, o, e = 6, 9, 2, 5
+        p = rng.normal(size=(1, s, s)).astype(np.float32)
+        w = rng.normal(size=(1, s, o)).astype(np.float32)
+        x = rng.normal(size=(k, 1, s)).astype(np.float32)
+        y = rng.normal(size=(k, 1, o)).astype(np.float32)
+        mask = np.ones((k, 1), bool)
+        mask[4] = False
+        chunk = jax.jit(krls.rls_chunk, static_argnames=("lam",))
+        a = chunk(*map(jnp.asarray, (p, w, x, y, mask)), lam=0.99)
+        b = chunk(
+            jnp.asarray(np.repeat(p, e, 0)),
+            jnp.asarray(np.repeat(w, e, 0)),
+            jnp.asarray(np.repeat(x, e, 1)),
+            jnp.asarray(np.repeat(y, e, 1)),
+            jnp.asarray(np.repeat(mask, e, 1)),
+            lam=0.99,
+        )
+        for one, many in zip(a[:2], b[:2]):
+            np.testing.assert_array_equal(
+                np.asarray(one)[0], np.asarray(many)[0]
+            )
+        np.testing.assert_array_equal(
+            np.asarray(a[2])[:, 0], np.asarray(b[2])[:, 0]
+        )
+
+    def test_masked_update_is_bit_frozen(self):
+        rng = np.random.default_rng(3)
+        p = rng.normal(size=(2, 4, 4)).astype(np.float32)
+        w = rng.normal(size=(2, 4, 1)).astype(np.float32)
+        x = rng.normal(size=(2, 4)).astype(np.float32)
+        y = rng.normal(size=(2, 1)).astype(np.float32)
+        mask = jnp.asarray([True, False])
+        p2, w2, pred = krls.rls_update(
+            jnp.asarray(p), jnp.asarray(w), jnp.asarray(x), jnp.asarray(y),
+            mask, 1.0,
+        )
+        np.testing.assert_array_equal(np.asarray(p2)[1], p[1])
+        np.testing.assert_array_equal(np.asarray(w2)[1], w[1])
+        assert not np.array_equal(np.asarray(p2)[0], p[0])
+        # masked lanes still answer (frozen weights applied to x)
+        np.testing.assert_allclose(
+            np.asarray(pred)[1], (w[1].T @ x[1]), rtol=1e-6
+        )
+
+
+def _learn_sessions(rng, count, lengths, n_out=1, washout=2):
+    sessions = []
+    for sid in range(count):
+        t = lengths[sid % len(lengths)]
+        sessions.append(
+            StreamSession(
+                sid=sid,
+                u_seq=rng.uniform(0, 0.5, (t, 1)).astype(np.float32),
+                targets=rng.normal(size=(t, n_out)).astype(np.float32),
+                learn_washout=washout,
+            )
+        )
+    return sessions
+
+
+class TestStreamingBitMatchesOracle:
+    def test_engine_learned_readout_matches_fit_rls(self):
+        """Every served session's learned readout == fit_rls over its
+        harvested states, bit for bit (scan backend), across slot turnover
+        and mid-chunk finishes."""
+        spec = make_spec(n=10, n_in=1, hold_steps=6, dtype=jnp.float32)
+        rng = np.random.default_rng(0)
+        sessions = _learn_sessions(rng, 8, (5, 9, 14))
+        eng = ReservoirEngine(
+            spec, num_slots=3, backend="scan", chunk_ticks=4,
+            learn="rls", learn_reg=1e-2,
+        )
+        results = eng.run([dataclasses.replace(s) for s in sessions])
+        assert len(results) == 8
+        for sid, r in results.items():
+            oracle = fit_rls(
+                r.states, sessions[sid].targets, washout=2, reg=1e-2, block=4
+            )
+            np.testing.assert_array_equal(
+                np.asarray(r.learned_readout.w_out), np.asarray(oracle.w_out)
+            )
+
+    def test_chunk_ticks_one_matches_block_one_oracle(self):
+        """The template route's default chunk_ticks=1 learning engine still
+        bit-matches fit_rls(block=1): the oracle routes every block size
+        through rls_chunk, exactly like the engine."""
+        spec = make_spec(n=8, n_in=1, hold_steps=5, dtype=jnp.float32)
+        rng = np.random.default_rng(7)
+        sessions = _learn_sessions(rng, 3, (6, 9))
+        eng = ReservoirEngine(
+            spec, num_slots=2, backend="scan", chunk_ticks=1,
+            learn="rls", learn_reg=1e-2,
+        )
+        results = eng.run([dataclasses.replace(s) for s in sessions])
+        for s in sessions:
+            oracle = fit_rls(
+                results[s.sid].states, s.targets, washout=2, reg=1e-2, block=1
+            )
+            np.testing.assert_array_equal(
+                np.asarray(results[s.sid].learned_readout.w_out),
+                np.asarray(oracle.w_out),
+            )
+
+    def test_survives_autoscale_resize(self):
+        """Learning state migrates with the session through grow AND shrink
+        resizes; the learned weights still bit-match the oracle."""
+        spec = make_spec(n=8, n_in=1, hold_steps=5, dtype=jnp.float32)
+        rng = np.random.default_rng(1)
+        sessions = _learn_sessions(rng, 16, (6, 10, 18))
+        eng = ReservoirEngine(
+            spec, num_slots=2, backend="scan", chunk_ticks=4,
+            learn="rls", learn_reg=1e-2,
+            autoscale=QueueDepthPolicy(), min_slots=2, max_slots=16,
+        )
+        results = dict(eng.run([dataclasses.replace(s) for s in sessions]))
+        assert eng.scheduler.stats.grows >= 1
+        # a low-demand second wave forces the hysteretic shrink while two
+        # learning sessions are mid-stream
+        tail = [
+            StreamSession(
+                sid=100 + i,
+                u_seq=rng.uniform(0, 0.5, (26, 1)).astype(np.float32),
+                targets=rng.normal(size=(26, 1)).astype(np.float32),
+                learn_washout=2,
+            )
+            for i in range(2)
+        ]
+        results.update(eng.run([dataclasses.replace(s) for s in tail]))
+        assert eng.scheduler.stats.shrinks >= 1
+        assert len(results) == 18
+        for s in sessions + tail:
+            r = results[s.sid]
+            oracle = fit_rls(r.states, s.targets, washout=2, reg=1e-2, block=4)
+            np.testing.assert_array_equal(
+                np.asarray(r.learned_readout.w_out), np.asarray(oracle.w_out)
+            )
+
+    def test_mixed_learning_and_inference_tenants(self):
+        """Inference-only sessions ride a learning engine untouched; their
+        chunked results still bit-match a non-learning engine's."""
+        spec = make_spec(n=8, n_in=1, hold_steps=5, dtype=jnp.float32)
+        rng = np.random.default_rng(2)
+        u_inf = rng.uniform(0, 0.5, (9, 1)).astype(np.float32)
+        learners = _learn_sessions(rng, 3, (7, 12))
+        mixed = [StreamSession(sid=100, u_seq=u_inf.copy())] + [
+            dataclasses.replace(s) for s in learners
+        ]
+        eng = ReservoirEngine(
+            spec, num_slots=2, backend="scan", chunk_ticks=3,
+            learn="rls", learn_reg=1e-2,
+        )
+        res = eng.run(mixed)
+        assert res[100].learned_readout is None
+        assert res[100].predictions is None
+        plain = ReservoirEngine(spec, num_slots=2, backend="scan", chunk_ticks=3)
+        ref = plain.run([StreamSession(sid=100, u_seq=u_inf.copy())])
+        np.testing.assert_array_equal(
+            np.asarray(res[100].states[: ref[100].states.shape[0]]),
+            np.asarray(ref[100].states),
+        )
+        for s in learners:
+            oracle = fit_rls(
+                res[s.sid].states, s.targets, washout=2, reg=1e-2, block=3
+            )
+            np.testing.assert_array_equal(
+                np.asarray(res[s.sid].learned_readout.w_out),
+                np.asarray(oracle.w_out),
+            )
+
+    def test_warm_start_from_readout(self):
+        """A learning session's provided readout seeds the learned lane:
+        oracle parity with fit_rls(w0=...)."""
+        spec = make_spec(n=6, n_in=1, hold_steps=4, dtype=jnp.float32)
+        rng = np.random.default_rng(3)
+        u = rng.uniform(0, 0.5, (8, 1)).astype(np.float32)
+        y = rng.normal(size=(8, 1)).astype(np.float32)
+        from repro.core.reservoir import Readout
+
+        w0 = rng.normal(size=(7, 1)).astype(np.float32)
+        sess = StreamSession(
+            sid=0, u_seq=u, targets=y,
+            readout=Readout(w_out=jnp.asarray(w0), washout=0),
+        )
+        eng = ReservoirEngine(
+            spec, num_slots=1, backend="scan", chunk_ticks=4,
+            learn="rls", learn_reg=1e-2,
+        )
+        r = eng.run([sess])[0]
+        oracle = fit_rls(r.states, y, reg=1e-2, w0=w0, block=4)
+        np.testing.assert_array_equal(
+            np.asarray(r.learned_readout.w_out), np.asarray(oracle.w_out)
+        )
+        assert r.outputs is not None  # static readout still applied
+
+
+class TestNarmaOnlineLearning:
+    def test_nmse_within_5pct_of_batch_ridge(self):
+        """Online RLS learned while streaming NARMA-10 predicts within 5%
+        of the batch ridge readout fit on the same states."""
+        params = default_params(jnp.float32)._replace(a_in=jnp.float32(300.0))
+        spec = make_spec(
+            n=24, n_in=1, hold_steps=20, dtype=jnp.float32, params=params
+        )
+        train, test, washout = 260, 80, 40
+        u, y = tasks.narma_series(train + test, order=10, seed=0)
+        u = u.astype(np.float32)[:, None]
+        y = y.astype(np.float32)[:, None]
+        eng = ReservoirEngine(
+            spec, num_slots=1, backend="scan", chunk_ticks=8,
+            learn="rls", learn_reg=1e-2,
+        )
+        r = eng.run(
+            [
+                StreamSession(
+                    sid=0, u_seq=u[:train], targets=y[:train],
+                    learn_washout=washout,
+                )
+            ]
+        )[0]
+        # held-out evaluation: resume the reservoir, apply both readouts
+        sim = compile_plan(spec, impl="scan")
+        _, test_states = sim.drive(jnp.asarray(u[train:]), m0=r.final_m)
+        ridge = fit_ridge(r.states, y[:train], washout=washout, reg=1e-2)
+        pred_rls = predict(r.learned_readout, test_states)
+        pred_ridge = predict(ridge._replace(washout=0), test_states)
+        err_rls = nmse(pred_rls, jnp.asarray(y[train:]))
+        err_ridge = nmse(pred_ridge, jnp.asarray(y[train:]))
+        assert err_ridge < 1.0  # readout beats the mean predictor
+        assert err_rls <= err_ridge * 1.05
+        # the engine's own online NMSE is finite and recorded
+        assert r.learn_nmse is not None and np.isfinite(r.learn_nmse)
+
+
+class TestOtherBackends:
+    @pytest.mark.parametrize(
+        "impl,interpret", [("ref", False), ("fused", True), ("tiled", True)]
+    )
+    def test_planes_backends_learn_close_to_scan(self, impl, interpret):
+        spec = make_spec(n=8, n_in=1, hold_steps=3, dtype=jnp.float32)
+        rng = np.random.default_rng(0)
+        k, e = 4, 3
+        u = rng.uniform(0, 0.5, (k, e, 1)).astype(np.float32)
+        y = rng.normal(size=(k, e, 1)).astype(np.float32)
+        m0 = ops.to_planes(jnp.broadcast_to(spec.m0, (e, 8, 3)))
+        outs = {}
+        for which, plan in {
+            "scan": ExecPlan(impl="scan", ensemble=e, chunk_ticks=k,
+                             learn="rls", learn_reg=1e-2),
+            impl: ExecPlan(impl=impl, ensemble=e, chunk_ticks=k,
+                           learn="rls", learn_reg=1e-2, interpret=interpret),
+        }.items():
+            sim = compile_plan(spec, plan)
+            p0, w0 = sim.init_learn_state()
+            outs[which] = sim.tick_chunk(
+                m0, u, targets=y, learn_state=(p0, w0)
+            )
+        for a, b in zip(outs["scan"][2], outs[impl][2]):
+            np.testing.assert_allclose(
+                np.asarray(a), np.asarray(b), atol=1e-2
+            )
+        np.testing.assert_allclose(
+            np.asarray(outs["scan"][3]), np.asarray(outs[impl][3]), atol=1e-3
+        )
+
+    def test_sharded_learn_bitexact_on_one_device_mesh(self):
+        from jax.sharding import Mesh
+
+        spec = make_spec(n=8, n_in=1, hold_steps=4, dtype=jnp.float32)
+        e, k = 4, 3
+        mesh = Mesh(np.array(jax.devices()[:1]).reshape(1, 1), ("data", "model"))
+        rng = np.random.default_rng(0)
+        u = rng.uniform(0, 0.5, (k, e, 1)).astype(np.float32)
+        y = rng.normal(size=(k, e, 1)).astype(np.float32)
+        mask = np.ones((k, e), bool)
+        mask[2, 1] = False
+        unsh = compile_plan(
+            spec,
+            ExecPlan(impl="scan", ensemble=e, chunk_ticks=k,
+                     learn="rls", learn_reg=1e-2),
+        )
+        sh = compile_plan(
+            spec,
+            ExecPlan(ensemble=e, chunk_ticks=k, learn="rls",
+                     learn_reg=1e-2, mesh=mesh),
+        )
+        m0 = ops.to_planes(jnp.broadcast_to(spec.m0, (e, 8, 3)))
+        p0, w0 = unsh.init_learn_state()
+        a = unsh.tick_chunk(m0, u, jnp.asarray(mask), targets=y,
+                            learn_state=(p0, w0))
+        b = sh.tick_chunk(m0, u, jnp.asarray(mask), targets=y,
+                          learn_state=(p0, w0))
+        for x, z in [(a[0], b[0]), (a[1], b[1]), (a[2][0], b[2][0]),
+                     (a[2][1], b[2][1]), (a[3], b[3])]:
+            np.testing.assert_array_equal(np.asarray(x), np.asarray(z))
+
+
+class TestValidation:
+    def test_plan_learn_knobs(self):
+        with pytest.raises(ValueError, match="learn must be"):
+            ExecPlan(learn="sgd")
+        with pytest.raises(ValueError, match="learn_lam"):
+            ExecPlan(learn="rls", learn_lam=0.0)
+        with pytest.raises(ValueError, match="learn_lam"):
+            ExecPlan(learn="rls", learn_lam=1.5)
+        with pytest.raises(ValueError, match="learn_reg"):
+            ExecPlan(learn="rls", learn_reg=0.0)
+        with pytest.raises(ValueError, match="learn_reg"):
+            ExecPlan(learn="rls", learn_reg=-1e-3)
+        plan = ExecPlan(learn="rls", learn_lam=0.99, learn_reg=1e-2)
+        assert dataclasses.replace(plan, ensemble=8).learn == "rls"
+
+    def test_tick_chunk_rejects_mismatched_learn_args(self):
+        spec = make_spec(n=6, n_in=1, hold_steps=3, dtype=jnp.float32)
+        m0 = ops.to_planes(jnp.broadcast_to(spec.m0, (2, 6, 3)))
+        u = jnp.zeros((3, 2, 1), jnp.float32)
+        infer = compile_plan(spec, ExecPlan(impl="scan", ensemble=2, chunk_ticks=3))
+        with pytest.raises(ValueError, match="inference-only"):
+            infer.tick_chunk(m0, u, targets=jnp.zeros((3, 2, 1)))
+        learner = compile_plan(
+            spec, ExecPlan(impl="scan", ensemble=2, chunk_ticks=3, learn="rls")
+        )
+        with pytest.raises(ValueError, match="learn_state"):
+            learner.tick_chunk(m0, u)
+        p0, w0 = learner.init_learn_state()
+        with pytest.raises(ValueError, match="targets"):
+            learner.tick_chunk(
+                m0, u, targets=jnp.zeros((3, 2, 4)), learn_state=(p0, w0)
+            )
+        with pytest.raises(ValueError, match="init_learn_state"):
+            infer.init_learn_state()
+
+    def test_engine_validates_target_submission(self):
+        spec = make_spec(n=6, n_in=1, hold_steps=3, dtype=jnp.float32)
+        u = np.zeros((4, 1), np.float32)
+        plain = ReservoirEngine(spec, num_slots=1, backend="scan")
+        with pytest.raises(ValueError, match="learning"):
+            plain.submit(
+                StreamSession(sid=0, u_seq=u, targets=np.zeros((4, 1)))
+            )
+        eng = ReservoirEngine(
+            spec, num_slots=1, backend="scan", chunk_ticks=2, learn="rls"
+        )
+        with pytest.raises(ValueError, match="targets"):
+            eng.submit(
+                StreamSession(sid=1, u_seq=u, targets=np.zeros((3, 1)))
+            )
+        with pytest.raises(ValueError, match="learn_washout"):
+            eng.submit(
+                StreamSession(
+                    sid=2, u_seq=u, targets=np.zeros((4, 1)), learn_washout=-1
+                )
+            )
+
+    def test_step_refuses_learning_engine(self):
+        spec = make_spec(n=6, n_in=1, hold_steps=3, dtype=jnp.float32)
+        eng = ReservoirEngine(
+            spec, num_slots=1, backend="scan", chunk_ticks=2, learn="rls"
+        )
+        with pytest.raises(RuntimeError, match="chunked"):
+            eng.step()
+
+    def test_engine_rejects_learn_kwargs_with_compiled_sim(self):
+        spec = make_spec(n=6, n_in=1, hold_steps=3, dtype=jnp.float32)
+        sim = compile_plan(spec, ExecPlan(impl="scan", ensemble=2))
+        with pytest.raises(ValueError, match="ExecPlan"):
+            ReservoirEngine(sim, learn="rls")

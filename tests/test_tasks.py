@@ -1,0 +1,109 @@
+"""Edge coverage for core/tasks.py and the readout helpers predict / nmse
+(which previously rode along untested).
+
+Pins: NARMA order/length validation and the divergence guard (unstable
+orders raise instead of handing a readout inf targets), delay-memory target
+alignment, memory_capacity's zero-variance column handling, and the
+predict/nmse shape/washout semantics.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import fit_ridge, nmse, predict, tasks
+from repro.core.reservoir import Readout
+
+
+class TestNarma:
+    def test_narma10_is_stable_and_deterministic(self):
+        u, y = tasks.narma_series(300, order=10, seed=0)
+        assert u.shape == y.shape == (300,)
+        assert np.isfinite(y).all() and np.abs(y).max() < 1e3
+        u2, y2 = tasks.narma_series(300, order=10, seed=0)
+        np.testing.assert_array_equal(y, y2)
+
+    def test_divergent_order_raises(self):
+        # the NARMA feedback term is unstable well before order ~30; the
+        # guard turns the inf/NaN series into an actionable error
+        with pytest.raises(ValueError, match="diverged"):
+            tasks.narma_series(500, order=30, seed=0)
+
+    def test_order_and_length_validation(self):
+        with pytest.raises(ValueError, match="order"):
+            tasks.narma_series(100, order=0)
+        with pytest.raises(ValueError, match="order"):
+            tasks.narma_series(100, order=-2)
+        with pytest.raises(ValueError, match="order"):
+            tasks.narma_series(100, order=2.5)
+        with pytest.raises(ValueError, match="t must be"):
+            tasks.narma_series(0, order=2)
+
+
+class TestDelayMemory:
+    def test_targets_align(self):
+        u = np.arange(1.0, 6.0)  # [1..5]
+        out = tasks.delay_memory_targets(u, 3)
+        assert out.shape == (5, 3)
+        # y_d[t] = u[t - d]
+        np.testing.assert_array_equal(out[3], [3.0, 2.0, 1.0])
+        np.testing.assert_array_equal(out[:1, 0], [0.0])  # pre-history zero
+
+    def test_rejects_bad_delay(self):
+        with pytest.raises(ValueError, match="max_delay"):
+            tasks.delay_memory_targets(np.arange(4.0), 0)
+
+    def test_memory_capacity_perfect_and_zero_variance(self):
+        rng = np.random.default_rng(0)
+        u = rng.normal(size=200)
+        tgt = tasks.delay_memory_targets(u, 2)[2:]
+        # perfect predictions: each delay contributes corr^2 = 1
+        assert tasks.memory_capacity(tgt, tgt) == pytest.approx(2.0)
+        # a zero-variance (constant) prediction column contributes 0, no NaN
+        pred = tgt.copy()
+        pred[:, 1] = 7.0
+        mc = tasks.memory_capacity(pred, tgt)
+        assert mc == pytest.approx(1.0)
+        # constant TARGET column likewise
+        tgt2 = tgt.copy()
+        tgt2[:, 0] = 0.0
+        assert np.isfinite(tasks.memory_capacity(tgt, tgt2))
+
+    def test_sine_task_shapes(self):
+        u, y = tasks.sine_task(128, seed=3)
+        assert u.shape == y.shape == (128,)
+        assert np.abs(y).max() <= 1.0
+
+
+class TestPredictNmse:
+    def test_predict_applies_washout_and_bias(self):
+        states = jnp.asarray(np.arange(12.0, dtype=np.float32).reshape(6, 2))
+        w = jnp.asarray(np.array([[1.0], [2.0], [10.0]], np.float32))
+        ro = Readout(w_out=w, washout=2)
+        out = np.asarray(predict(ro, states))
+        assert out.shape == (4, 1)
+        # row t: s0 + 2 s1 + 10 (bias row is appended ones)
+        np.testing.assert_allclose(
+            out[:, 0], states[2:, 0] * 1 + states[2:, 1] * 2 + 10.0
+        )
+
+    def test_fit_ridge_predict_roundtrip_is_exact_on_linear_data(self):
+        rng = np.random.default_rng(1)
+        x = rng.normal(size=(100, 5)).astype(np.float32)
+        w = rng.normal(size=(5, 2)).astype(np.float32)
+        y = x @ w + 0.5
+        ro = fit_ridge(x, y, washout=0, reg=1e-8)
+        err = nmse(predict(ro, jnp.asarray(x)), jnp.asarray(y))
+        assert err < 1e-6
+
+    def test_nmse_scale(self):
+        y = jnp.asarray(np.random.default_rng(2).normal(size=(50, 1)))
+        assert nmse(y, y) == 0.0
+        # predicting the mean scores ~1
+        mean_pred = jnp.full_like(y, float(jnp.mean(y)))
+        assert nmse(mean_pred, y) == pytest.approx(1.0, rel=1e-3)
+
+    def test_nmse_reshapes_1d_targets(self):
+        p = jnp.asarray(np.ones((4, 1), np.float32))
+        t = jnp.asarray(np.ones(4, np.float32))
+        assert nmse(p, t) == 0.0

@@ -1,0 +1,92 @@
+"""Docs health check, run by CI (and tests/test_docs.py).
+
+Two checks:
+
+  1. Internal links in the repo's markdown docs (README.md, docs/*.md,
+     ROADMAP.md) resolve: every relative `[text](path)` target must exist
+     on disk (anchors are stripped; external http(s)/mailto links are
+     skipped). Docs that point at moved/renamed files rot silently —
+     this turns the rot into a red CI leg.
+  2. Docstring examples execute: `doctest` over the modules listed in
+     DOCTEST_MODULES (kept explicit so a slow import can't sneak into the
+     docs leg unnoticed).
+
+Exit code 0 = healthy. Run from the repo root:
+
+    PYTHONPATH=src python tools/check_docs.py
+"""
+
+from __future__ import annotations
+
+import doctest
+import importlib
+import pathlib
+import re
+import sys
+
+REPO = pathlib.Path(__file__).resolve().parent.parent
+
+MARKDOWN = [
+    "README.md",
+    "ROADMAP.md",
+    *sorted(str(p.relative_to(REPO)) for p in (REPO / "docs").glob("*.md")),
+]
+
+DOCTEST_MODULES = [
+    "repro.core.tasks",
+]
+
+_LINK = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+
+
+def check_links() -> list:
+    """Every relative markdown link target must exist. Returns failures."""
+    failures = []
+    for md in MARKDOWN:
+        path = REPO / md
+        if not path.exists():
+            failures.append(f"{md}: file listed for checking does not exist")
+            continue
+        text = path.read_text()
+        for target in _LINK.findall(text):
+            if target.startswith(("http://", "https://", "mailto:", "#")):
+                continue
+            rel = target.split("#", 1)[0]
+            if not rel:
+                continue
+            resolved = (path.parent / rel).resolve()
+            if not resolved.exists():
+                failures.append(f"{md}: broken link -> {target}")
+    return failures
+
+
+def check_doctests() -> list:
+    """Run doctest over the allow-listed modules. Returns failures."""
+    failures = []
+    for name in DOCTEST_MODULES:
+        try:
+            mod = importlib.import_module(name)
+        except Exception as e:  # pragma: no cover - import rot is a failure
+            failures.append(f"{name}: import failed ({e})")
+            continue
+        result = doctest.testmod(mod, verbose=False)
+        if result.failed:
+            failures.append(
+                f"{name}: {result.failed}/{result.attempted} doctest(s) failed"
+            )
+    return failures
+
+
+def main() -> int:
+    failures = check_links() + check_doctests()
+    for f in failures:
+        print(f"DOCS FAIL: {f}")
+    if not failures:
+        n_md = len(MARKDOWN)
+        print(f"docs check OK: {n_md} markdown file(s), "
+              f"{len(DOCTEST_MODULES)} doctest module(s)")
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
