@@ -6,9 +6,12 @@ modules run standalone too:  python -m benchmarks.table2_timing
 ``--smoke`` runs a minutes-not-hours subset for CI: a quick serving-
 throughput grid (written to a scratch file, NOT BENCH_serve.json) plus a
 compile-and-drive pass through every unified-API entry point — including
-the chunked `tick_chunk` serving path and an autoscaling engine — so the
-CI leg exercises plan compilation, dispatch-table loading, and the serving
-engine end-to-end without paying for the full grids.
+the chunked `tick_chunk` serving path, an autoscaling engine, an online-
+learning engine bit-checked against the fit_rls oracle, and a "mixed"-
+precision serve asserted against the f32 accuracy guardrail — so the CI
+leg exercises plan compilation, dispatch-table loading, precision
+policies, and the serving engine end-to-end without paying for the full
+grids.
 
 ``--save-dispatch-table`` persists measured dispatch choices after the
 run: the fresh serving grid is seeded into the in-process table
@@ -102,6 +105,42 @@ def smoke(save_dispatch_table: bool = False) -> None:
             np.asarray(r.learned_readout.w_out), np.asarray(oracle.w_out)
         ), f"smoke: session {sid} learned readout != fit_rls oracle"
     print(f"smoke_serve_learn,0.0,trained_{len(learned)}_bitmatch_oracle")
+
+    # mixed-precision serving end-to-end + the accuracy guardrail: the same
+    # sessions served by a bit-exact chunk-impl engine and a "mixed" one
+    # (reduced-precision coupling/input GEMMs, f32 state carry) must agree
+    # to reduced-precision scale — a broken precision path shows up as a
+    # blown tolerance here before it ever reaches a readout benchmark
+    precision_sessions = lambda: [
+        StreamSession(
+            sid=i,
+            u_seq=np.random.default_rng(100 + i)
+            .uniform(0, 0.5, (8, 1))
+            .astype(np.float32),
+        )
+        for i in range(4)
+    ]
+    exact_eng = ReservoirEngine(
+        compile_plan(spec, ExecPlan(impl="chunk", ensemble=4, chunk_ticks=4))
+    )
+    mixed_eng = ReservoirEngine(
+        compile_plan(
+            spec,
+            ExecPlan(impl="chunk", ensemble=4, chunk_ticks=4, precision="mixed"),
+        )
+    )
+    exact_r = exact_eng.run(precision_sessions())
+    mixed_r = mixed_eng.run(precision_sessions())
+    max_dev = max(
+        float(np.max(np.abs(exact_r[sid].states - mixed_r[sid].states)))
+        for sid in exact_r
+    )
+    assert max_dev < 5e-3, (
+        f"smoke: mixed-precision serve deviates {max_dev:.2e} from f32 — "
+        f"the precision guardrail is blown"
+    )
+    assert all(np.isfinite(r.states).all() for r in mixed_r.values())
+    print(f"smoke_serve_mixed,0.0,served_{len(mixed_r)}_maxdev_{max_dev:.1e}")
 
     loaded = dispatch_table.ensure_loaded()  # 0 if already loaded: fine
     print(f"smoke_dispatch_table,0.0,loaded_{loaded}_entries")

@@ -13,6 +13,18 @@ through three serving modes:
                device->host transfer per K ticks, host assembly overlapped
                with device execution
 
+plus, on every row, the PR-5 per-precision / chunk-impl twins: the same
+steady workload re-served through the OTHER member of the
+{default, chunk-resident} impl pair (reported as
+`sessions_per_sec_chunk_impl` + the within-run `chunk_impl_speedup`
+ratio; symmetric, so a previously seeded "chunk" winner keeps getting
+challenged by "ref" and vice versa) and through `"mixed"` reduced
+precision on the chunk impl (`sessions_per_sec_mixed` +
+`precision_speedup`). Their steady reps interleave with the default
+engine's so the container's ±40% noise bills every column equally —
+`kernels.dispatch_table.seed_from_bench` registers a twin's entry for a
+shape only when its within-run ratio beat the default;
+
 plus, on the smaller grid rows, autoscale-vs-fixed: the same burst served
 by a fixed E-slot engine and by an autoscaling engine that starts at E/4
 and grows through the bucketed plan cache, and — at N <= LEARN_MAX_N —
@@ -167,6 +179,41 @@ def bench_cell(n: int, e: int, print_fn=print):
     )
     backend = pipe_eng.backend
     _drain_time(pipe_eng, _mk_sessions(e, CHUNK_TICKS, 1, rng), pipelined=True)  # warm
+    # per-precision / chunk-impl twin engines: same workload re-served
+    # through (a) the other member of the {default, chunk-resident} impl
+    # pair and (b) "mixed" precision on the chunk-resident impl. Their
+    # steady reps INTERLEAVE with the default engine's below, so the ±40%
+    # container noise bills all columns equally and the speedup ratios are
+    # honest within-run comparisons. The twin is symmetric — when the
+    # dispatch table already resolves the default to "chunk", the twin is
+    # "ref" — so a once-seeded winner keeps being challenged by later
+    # bench runs instead of ratcheting in place (seed_from_bench replaces
+    # the default entry whenever the twin's within-run ratio beat it).
+    twin_impl = "ref" if backend == "chunk" else "chunk"
+    chunk_eng = ReservoirEngine(
+        compile_plan(
+            spec, ExecPlan(impl=twin_impl, ensemble=e, chunk_ticks=CHUNK_TICKS)
+        ),
+        max_retained=e,
+    )
+    _drain_time(
+        chunk_eng, _mk_sessions(e, CHUNK_TICKS, 1, rng, base_sid=90_000),
+        pipelined=True,
+    )  # warm
+    mixed_eng = ReservoirEngine(
+        compile_plan(
+            spec,
+            ExecPlan(
+                impl="chunk", ensemble=e, chunk_ticks=CHUNK_TICKS,
+                precision="mixed",
+            ),
+        ),
+        max_retained=e,
+    )
+    _drain_time(
+        mixed_eng, _mk_sessions(e, CHUNK_TICKS, 1, rng, base_sid=95_000),
+        pipelined=True,
+    )  # warm
     # learn-on twin engine (N <= LEARN_MAX_N): same plan + learn="rls";
     # its steady reps INTERLEAVE with the learn-off reps below so a slow
     # container episode bills both sides of the overhead ratio equally
@@ -188,12 +235,24 @@ def bench_cell(n: int, e: int, print_fn=print):
             pipelined=True,
         )  # warm
     # steady chunk median: one wave of E long streams — the trajectory metric
-    chunk_reps, learn_reps = [], []
+    chunk_reps, learn_reps, chunkimpl_reps, mixed_reps = [], [], [], []
     for r in range(STEADY_REPS):
         chunk_reps.append(
             _steady_chunk_time(
                 pipe_eng,
                 _mk_sessions(e, STEADY_TICKS, 1, rng, base_sid=60_000 + 1000 * r),
+            )
+        )
+        chunkimpl_reps.append(
+            _steady_chunk_time(
+                chunk_eng,
+                _mk_sessions(e, STEADY_TICKS, 1, rng, base_sid=91_000 + 1000 * r),
+            )
+        )
+        mixed_reps.append(
+            _steady_chunk_time(
+                mixed_eng,
+                _mk_sessions(e, STEADY_TICKS, 1, rng, base_sid=96_000 + 1000 * r),
             )
         )
         if learn_eng is not None:
@@ -229,10 +288,12 @@ def bench_cell(n: int, e: int, print_fn=print):
     ticks_per_sec_burst = ticks_pipe / t_pipe
     ticks_per_sec_sync = ticks_sync / t_sync
     agg_solo = 1.0 / t_solo
+    med = lambda xs: sorted(xs)[len(xs) // 2]
     cell = {
         "n": n,
         "e": e,
         "backend": backend,
+        "precision": pipe_eng.precision,
         "chunk_ticks": CHUNK_TICKS,
         "stream_ticks": TICKS,
         "steady_ticks": STEADY_TICKS,
@@ -252,13 +313,32 @@ def bench_cell(n: int, e: int, print_fn=print):
         "hold_steps": HOLD_STEPS,
     }
 
+    # -- per-precision / chunk-impl columns (reps interleaved above) -------
+    # ratios use MEDIANS of the rep samples, not mins: a single outlier-
+    # fast rep on either side would otherwise swing the ratio by the
+    # container's full ±40% noise band. Judge perf PRs by THESE within-run
+    # ratio columns, never across-run absolutes (ROADMAP caveat).
+    t_ci = min(chunkimpl_reps)
+    cell.update(
+        backend_chunk_impl=chunk_eng.backend,
+        steady_chunk_chunkimpl_s=t_ci,
+        ticks_per_sec_chunk_impl=e * CHUNK_TICKS / t_ci,
+        sessions_per_sec_chunk_impl=(e * CHUNK_TICKS / t_ci) / REF_STREAM_TICKS,
+        chunk_impl_speedup=med(chunk_reps) / med(chunkimpl_reps),
+    )
+    t_mixed = min(mixed_reps)
+    cell.update(
+        backend_mixed=mixed_eng.backend,
+        precision_mixed=mixed_eng.precision,
+        steady_chunk_mixed_s=t_mixed,
+        ticks_per_sec_mixed=e * CHUNK_TICKS / t_mixed,
+        sessions_per_sec_mixed=(e * CHUNK_TICKS / t_mixed) / REF_STREAM_TICKS,
+        precision_speedup=med(chunk_reps) / med(mixed_reps),
+    )
+
     # -- learn-on vs learn-off columns (reps measured interleaved above) ---
     if learn_eng is not None:
         t_chunk_learn = min(learn_reps)
-        # the overhead ratio uses MEDIANS of the rep samples, not mins: a
-        # single outlier-fast base rep would otherwise inflate the ratio by
-        # the container's full ±40% noise band
-        med = lambda xs: sorted(xs)[len(xs) // 2]
         cell.update(
             steady_chunk_learn_s=t_chunk_learn,
             ticks_per_sec_learn=e * CHUNK_TICKS / t_chunk_learn,

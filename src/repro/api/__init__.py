@@ -13,13 +13,14 @@ the repo is made inside `compile_plan`; `core/reservoir.drive`,
 `core/ensemble.integrate_ensemble{,_sharded}` are deprecation shims over
 it, and `serve/reservoir.ReservoirEngine` serves from a CompiledSim —
 sharded serving is just `ExecPlan(mesh=...)`, chunked serving
-`ExecPlan(chunk_ticks=K)`, and online readout learning
-`ExecPlan(learn="rls")`. Capabilities are added as ExecPlan fields, not
-new entry points (docs/ARCHITECTURE.md).
+`ExecPlan(chunk_ticks=K)`, online readout learning `ExecPlan(learn="rls")`,
+and reduced-precision execution `ExecPlan(precision="mixed")`.
+Capabilities are added as ExecPlan fields, not new entry points
+(docs/ARCHITECTURE.md).
 """
 
 from repro.api.spec import SimSpec, make_spec
-from repro.api.plan import ExecPlan, PLAN_IMPLS
+from repro.api.plan import ExecPlan, PLAN_IMPLS, PLAN_PRECISIONS
 from repro.api.compiled import CompiledSim, compile_plan
 
 __all__ = [
@@ -27,6 +28,7 @@ __all__ = [
     "make_spec",
     "ExecPlan",
     "PLAN_IMPLS",
+    "PLAN_PRECISIONS",
     "CompiledSim",
     "compile_plan",
 ]

@@ -27,11 +27,16 @@ The jit-cached entry points on the returned CompiledSim:
 All jit'd workers are module-level, so every CompiledSim for the same
 (static-shape, impl) signature shares one compilation.
 
-Numerical contract (pinned by tests/test_api_plan.py): impl="scan" runs the
-exact op sequence of the legacy `reservoir.drive` / `ensemble
-.integrate_ensemble` paths (bit-identical results); the planes impls
-("ref"/"fused"/"tiled") and sharded plans agree within the kernel test
-suite's tolerance.
+Numerical contract (pinned by tests/test_api_plan.py and
+tests/test_precision_chunk.py): impl="scan" runs the exact op sequence of
+the legacy `reservoir.drive` / `ensemble.integrate_ensemble` paths
+(bit-identical results); the planes impls ("ref"/"fused"/"tiled"/"chunk")
+and sharded plans agree within the kernel test suite's tolerance (on CPU,
+"chunk" is bit-identical to "ref"). `ExecPlan.precision` None/"highest"
+plans trace the identical graph they did before the field existed;
+"bf16_coupling"/"mixed" reduce only the coupling/input GEMMs (f32 state
+carry, f32 RK4 accumulation) and are guarded by the NARMA-10 NMSE
+tolerance test.
 """
 
 from __future__ import annotations
@@ -53,7 +58,7 @@ from repro.api.plan import ExecPlan
 from repro.api.spec import SimSpec
 from repro.api import sharded as _sharded
 
-PLANES_IMPLS = ("ref", "fused", "tiled")
+PLANES_IMPLS = ("ref", "fused", "tiled", "chunk")
 
 
 # ---------------------------------------------------------------------------
@@ -237,17 +242,31 @@ def _tick_chunk_scan_rls(params_e, w_cp, w_in, m_planes, u_block, mask_block,
 
 
 # ---------------------------------------------------------------------------
-# jit'd workers — kernel (3, N, E) planes layout ("ref"/"fused"/"tiled")
+# jit'd workers — kernel (3, N, E) planes layout ("ref"/"fused"/"tiled"/"chunk")
 # ---------------------------------------------------------------------------
+
+
+def _input_field(w_in, u, a_in, precision):
+    """h_in = A_in * (W^in u) per lane, honoring the precision policy.
+
+    "mixed" runs this GEMM — the 'field GEMM' of ExecPlan.precision — on
+    bf16 operands with accumulation in the state dtype; every other policy
+    keeps the exact op sequence the workers have always traced. u may be a
+    single tick (E, N_in) or a chunk block (K, E, N_in).
+    """
+    eq = "ni,ei->ne" if u.ndim == 2 else "ni,kei->kne"
+    scale = a_in[None, :] if u.ndim == 2 else a_in[None, None, :]
+    return ops.input_field_einsum(eq, w_in, u, precision) * scale
 
 
 @functools.partial(
     jax.jit,
-    static_argnames=("dt", "hold_steps", "impl", "n_inner", "block_n", "block_e", "interpret"),
+    static_argnames=("dt", "hold_steps", "impl", "n_inner", "block_n", "block_e", "interpret", "precision"),
 )
 def _drive_planes(
     params_e, w_cp, w_in, m0_planes, u_seq_e,
     *, dt, hold_steps, impl, n_inner, block_n, block_e, interpret,
+    precision="highest",
 ):
     """Ensemble drive through the kernel layout: per input sample, one
     hold-window integrate with the resolved impl."""
@@ -256,11 +275,12 @@ def _drive_planes(
     a_in = jnp.reshape(params_e.a_in, (-1,)) * jnp.ones((e,), m0_planes.dtype)
 
     def per_sample(m, u_t):  # u_t: (E, N_in)
-        h = jnp.einsum("ni,ei->ne", w_in, u_t) * a_in[None, :]
+        h = _input_field(w_in, u_t, a_in, precision)
         m = ops._integrate_planes_jit(
             m, w_cp, pv, h, None,
             dt=dt, n_steps=hold_steps, impl=impl, n_inner=n_inner,
             block_n=block_n, block_e=block_e, interpret=interpret,
+            precision=precision,
         )
         return m, m[0]
 
@@ -270,48 +290,67 @@ def _drive_planes(
 
 @functools.partial(
     jax.jit,
-    static_argnames=("dt", "hold_steps", "impl", "n_inner", "block_n", "block_e", "interpret"),
+    static_argnames=("dt", "hold_steps", "impl", "n_inner", "block_n", "block_e", "interpret", "precision"),
 )
 def _tick_planes(
     params_e, w_cp, w_in, m_planes, u, mask,
     *, dt, hold_steps, impl, n_inner, block_n, block_e, interpret,
+    precision="highest",
 ):
     """One hold window for a slot batch in the kernel layout; masked lanes
     come back bit-identical (partial-batch masking in kernels/ops.py)."""
     e = m_planes.shape[-1]
     pv = kref.pack_params(params_e, e, m_planes.dtype)
     a_in = jnp.reshape(params_e.a_in, (-1,)) * jnp.ones((e,), m_planes.dtype)
-    h = jnp.einsum("ni,ei->ne", w_in, u) * a_in[None, :]
+    h = _input_field(w_in, u, a_in, precision)
     m_new = ops._integrate_planes_jit(
         m_planes, w_cp, pv, h, mask,
         dt=dt, n_steps=hold_steps, impl=impl, n_inner=n_inner,
         block_n=block_n, block_e=block_e, interpret=interpret,
+        precision=precision,
     )
     return m_new, m_new[0]
 
 
 @functools.partial(
     jax.jit,
-    static_argnames=("dt", "hold_steps", "impl", "n_inner", "block_n", "block_e", "interpret"),
+    static_argnames=("dt", "hold_steps", "impl", "n_inner", "block_n", "block_e", "interpret", "precision"),
 )
 def _tick_chunk_planes(
     params_e, w_cp, w_in, m_planes, u_block, mask_block,
     *, dt, hold_steps, impl, n_inner, block_n, block_e, interpret,
+    precision="highest",
 ):
-    """K serving ticks in one dispatch, kernel layout. Per-tick body is
-    `_tick_planes`' exactly, with pack_params hoisted out of the K-loop
-    (it is value-identical each tick). Returns ((3, N, E), (K, N, E))."""
+    """K serving ticks in one dispatch, kernel layout.
+
+    For the per-window impls (ref/fused/tiled) the per-tick body is
+    `_tick_planes`' exactly, with pack_params hoisted out of the K-loop (it
+    is value-identical each tick). impl="chunk" is the chunk-resident path:
+    the whole (K, N, E) input-field block is computed with ONE GEMM per
+    chunk and handed to `ops.sto_rk4_tick_chunk_planes`' worker, which runs
+    the K x hold_steps x 4-stage loop as one resident region (the Pallas
+    rk4_chunk kernel on TPU). Returns ((3, N, E), (K, N, E))."""
     e = m_planes.shape[-1]
     pv = kref.pack_params(params_e, e, m_planes.dtype)
     a_in = jnp.reshape(params_e.a_in, (-1,)) * jnp.ones((e,), m_planes.dtype)
 
+    if impl == "chunk":
+        h_block = _input_field(w_in, u_block, a_in, precision)  # (K, N, E)
+        return ops._tick_chunk_planes_jit(
+            m_planes, w_cp, pv, h_block, mask_block,
+            dt=dt, hold_steps=hold_steps, impl=impl, n_inner=n_inner,
+            block_n=block_n, block_e=block_e, interpret=interpret,
+            precision=precision,
+        )
+
     def per_tick(m_c, tick_in):
         u_t, mask_t = tick_in
-        h = jnp.einsum("ni,ei->ne", w_in, u_t) * a_in[None, :]
+        h = _input_field(w_in, u_t, a_in, precision)
         m_new = ops._integrate_planes_jit(
             m_c, w_cp, pv, h, mask_t,
             dt=dt, n_steps=hold_steps, impl=impl, n_inner=n_inner,
             block_n=block_n, block_e=block_e, interpret=interpret,
+            precision=precision,
         )
         return m_new, m_new[0]
 
@@ -321,20 +360,24 @@ def _tick_chunk_planes(
 
 @functools.partial(
     jax.jit,
-    static_argnames=("lam", "dt", "hold_steps", "impl", "n_inner", "block_n", "block_e", "interpret"),
+    static_argnames=("lam", "dt", "hold_steps", "impl", "n_inner", "block_n", "block_e", "interpret", "precision"),
 )
 def _tick_chunk_planes_rls(
     params_e, w_cp, w_in, m_planes, u_block, mask_block, y_block, lmask_block,
     p0, w0, *, lam, dt, hold_steps, impl, n_inner, block_n, block_e, interpret,
+    precision="highest",
 ):
     """`_tick_chunk_planes` + the chunked RLS readout update, one dispatch
     (ExecPlan.learn="rls", kernel layout). The integrate may be a Pallas
     kernel; the learn tail is the same jnp `kernels.rls.rls_chunk` either
-    way, applied to the chunk's (K, N, E) states block + bias."""
+    way, applied to the chunk's (K, N, E) states block + bias. The learn
+    recursion always runs in the state dtype — reduced precision stops at
+    the readout-learning boundary (P's conditioning; see kernels/rls.py)."""
     mT, states = _tick_chunk_planes(
         params_e, w_cp, w_in, m_planes, u_block, mask_block,
         dt=dt, hold_steps=hold_steps, impl=impl, n_inner=n_inner,
         block_n=block_n, block_e=block_e, interpret=interpret,
+        precision=precision,
     )
     pT, wT, preds = _learn_chunk_tail(states, y_block, lmask_block, p0, w0, lam)
     return mT, states, pT, wT, preds  # (3,N,E), (K,N,E), P', W', (K,E,n_out)
@@ -342,11 +385,12 @@ def _tick_chunk_planes_rls(
 
 @functools.partial(
     jax.jit,
-    static_argnames=("dt", "n_steps", "save_every", "impl", "n_inner", "block_n", "block_e", "interpret"),
+    static_argnames=("dt", "n_steps", "save_every", "impl", "n_inner", "block_n", "block_e", "interpret", "precision"),
 )
 def _integrate_planes(
     params_e, w_cp, m0_planes,
     *, dt, n_steps, save_every, impl, n_inner, block_n, block_e, interpret,
+    precision="highest",
 ):
     """Free-run (u = 0) integration in the kernel layout."""
     e = m0_planes.shape[-1]
@@ -357,6 +401,7 @@ def _integrate_planes(
             m, w_cp, pv, None, None,
             dt=dt, n_steps=length, impl=impl, n_inner=n_inner,
             block_n=block_n, block_e=block_e, interpret=interpret,
+            precision=precision,
         )
 
     if not save_every:
@@ -381,12 +426,17 @@ class CompiledSim:
     def __init__(self, spec: SimSpec, plan: ExecPlan, impl: str):
         self.spec = spec
         self.plan = plan
-        self.impl = impl  # resolved: scan | ref | fused | tiled (never auto)
+        self.impl = impl  # resolved: scan | ref | fused | tiled | chunk
         self.e = plan.ensemble
         self._block_n = plan.block_n or ops.LANE
         self._block_e = plan.block_e or ops.LANE
         self._n_inner = plan.n_inner or spec.hold_steps
         self._dt_scan = jnp.asarray(spec.dt, spec.dtype)
+        # static per-plan: the normalized precision tag the planes workers
+        # specialize on ("highest" = bit-exact default) and the resolved
+        # sharded gather dtype (precision subsumes the ad-hoc gather_dtype)
+        self.precision = ops.normalize_precision(plan.precision)
+        self._gather_dtype = plan.effective_gather_dtype
         # static: the RLS workers specialize on lam (lam == 1 skips the
         # per-tick P rescale; see kernels/rls.py)
         self._lam = float(plan.learn_lam) if plan.learn else None
@@ -497,6 +547,7 @@ class CompiledSim:
             dt=float(spec.dt), hold_steps=spec.hold_steps, impl=self.impl,
             n_inner=self._n_inner, block_n=self._block_n,
             block_e=self._block_e, interpret=self.plan.interpret,
+            precision=self.precision,
         )
         return ops.from_planes(mT, ()), states[:, 0, :]
 
@@ -521,7 +572,8 @@ class CompiledSim:
                 ensemble_axes=self.plan.ensemble_axes,
                 model_axis=self.plan.model_axis,
                 tableau_name=spec.tableau,
-                gather_dtype=self.plan.gather_dtype,
+                gather_dtype=self._gather_dtype,
+                precision=self.precision,
             )
         u_e = self._coerce_batch_u(u_seq)
         if self.impl == "scan":
@@ -534,6 +586,7 @@ class CompiledSim:
             dt=float(spec.dt), hold_steps=spec.hold_steps, impl=self.impl,
             n_inner=self._n_inner, block_n=self._block_n,
             block_e=self._block_e, interpret=self.plan.interpret,
+            precision=self.precision,
         )
         return ops.from_planes(mT, (self.e,)), states
 
@@ -562,7 +615,8 @@ class CompiledSim:
                     ensemble_axes=self.plan.ensemble_axes,
                     model_axis=self.plan.model_axis,
                     tableau_name=spec.tableau,
-                    gather_dtype=self.plan.gather_dtype,
+                    gather_dtype=self._gather_dtype,
+                    precision=self.precision,
                 ),
                 None,
             )
@@ -584,6 +638,7 @@ class CompiledSim:
             dt=float(spec.dt), n_steps=n_steps, save_every=save_every,
             impl=self.impl, n_inner=self._n_inner, block_n=self._block_n,
             block_e=self._block_e, interpret=self.plan.interpret,
+            precision=self.precision,
         )
         mT = ops.from_planes(mT, (self.e,))
         if traj is not None:
@@ -615,7 +670,8 @@ class CompiledSim:
                 ensemble_axes=self.plan.ensemble_axes,
                 model_axis=self.plan.model_axis,
                 tableau_name=spec.tableau,
-                gather_dtype=self.plan.gather_dtype,
+                gather_dtype=self._gather_dtype,
+                precision=self.precision,
             )
             return jnp.transpose(m_new, (2, 1, 0)), jnp.transpose(states)
         if self.impl == "scan":
@@ -628,6 +684,7 @@ class CompiledSim:
             dt=float(spec.dt), hold_steps=spec.hold_steps, impl=self.impl,
             n_inner=self._n_inner, block_n=self._block_n,
             block_e=self._block_e, interpret=self.plan.interpret,
+            precision=self.precision,
         )
 
     def _coerce_tick_mask(self, lane_mask, k: int) -> jnp.ndarray:
@@ -735,7 +792,8 @@ class CompiledSim:
                 ensemble_axes=self.plan.ensemble_axes,
                 model_axis=self.plan.model_axis,
                 tableau_name=spec.tableau,
-                gather_dtype=self.plan.gather_dtype,
+                gather_dtype=self._gather_dtype,
+                precision=self.precision,
             )
             # states arrive (K, E, N): shuffle to the (K, N, E) block contract
             return (
@@ -757,6 +815,7 @@ class CompiledSim:
             dt=float(spec.dt), hold_steps=spec.hold_steps, impl=self.impl,
             n_inner=self._n_inner, block_n=self._block_n,
             block_e=self._block_e, interpret=self.plan.interpret,
+            precision=self.precision,
         )
         return mT, states, (pT, wT), preds
 
@@ -773,7 +832,8 @@ class CompiledSim:
                 ensemble_axes=self.plan.ensemble_axes,
                 model_axis=self.plan.model_axis,
                 tableau_name=spec.tableau,
-                gather_dtype=self.plan.gather_dtype,
+                gather_dtype=self._gather_dtype,
+                precision=self.precision,
             )
             # states arrive (K, E, N): shuffle to the (K, N, E) block contract
             return jnp.transpose(m_new, (2, 1, 0)), jnp.transpose(states, (0, 2, 1))
@@ -787,6 +847,7 @@ class CompiledSim:
             dt=float(spec.dt), hold_steps=spec.hold_steps, impl=self.impl,
             n_inner=self._n_inner, block_n=self._block_n,
             block_e=self._block_e, interpret=self.plan.interpret,
+            precision=self.precision,
         )
 
 
@@ -836,15 +897,27 @@ def compile_plan(spec: SimSpec, plan: Optional[ExecPlan] = None, **overrides) ->
     else:
         impl = plan.impl
         if impl == "auto":
-            # choose_impl lazily loads the persisted per-platform table
+            # choose_impl lazily loads the persisted per-platform table;
+            # both the measurement and the lookup are precision-keyed (the
+            # impl ranking shifts when the coupling GEMM goes bf16)
             if plan.measure:
                 ops.measure_impl_latency(
-                    spec.n, plan.ensemble, dt=float(spec.dt)
+                    spec.n, plan.ensemble, dt=float(spec.dt),
+                    dtype=spec.dtype, precision=plan.effective_precision,
+                    chunk_ticks=max(plan.chunk_ticks, 1),
                 )
-            impl = ops.choose_impl(spec.n, plan.ensemble, spec.dtype.itemsize)
-    if impl in ("fused", "tiled") and spec.tableau != "rk4":
+            impl = ops.choose_impl(
+                spec.n, plan.ensemble, spec.dtype.itemsize,
+                precision=plan.effective_precision,
+            )
+            if impl in ("fused", "tiled", "chunk") and spec.tableau != "rk4":
+                # the table's winner was measured on RK4 workloads; an
+                # auto plan with another tableau falls back to the oracle
+                # instead of erroring on a choice the user never made
+                impl = "ref"
+    if impl in ("fused", "tiled", "chunk") and spec.tableau != "rk4":
         raise ValueError(
-            f"the Pallas kernels integrate classical RK4 only; impl={impl!r} "
+            f"the fused kernels integrate classical RK4 only; impl={impl!r} "
             f"cannot run tableau {spec.tableau!r} (use impl='scan' or 'ref')"
         )
     return CompiledSim(spec, plan, impl)

@@ -11,15 +11,41 @@ Every execution decision that used to be scattered across
              heuristic — `kernels.ops.choose_impl`. Explicit values:
              "scan" (core (E, N, 3) layout, bit-identical to the legacy
              `drive` math), "ref" (planes-layout jnp oracle), "fused" /
-             "tiled" (Pallas TPU kernels).
+             "tiled" (Pallas TPU kernels), "chunk" (chunk-resident fused
+             RK4: the K-tick x hold_steps x 4-stage loop runs as one
+             device-side region — a Pallas kernel on TPU that keeps the
+             state planes VMEM-resident and streams W once per chunk, a
+             single fused XLA region elsewhere).
   ensemble   E: how many reservoir lanes run per dispatch (1 = solo).
   block_n/e  MXU padding granules for the Pallas kernels.
   n_inner    fused-kernel inner steps (None = one hold window per launch).
   mesh       a jax Mesh makes the plan SHARDED: E spans `ensemble_axes`,
              N spans `model_axis`, with PartitionSpecs from
              `distributed.sharding.reservoir_specs`.
+  precision  numerical policy for the compute-bound GEMMs (the paper's
+             large-N regime is dominated by the dense N x N coupling GEMM
+             re-evaluated 4 x hold_steps times per tick):
+               None / "highest"  bit-exact default: every op runs in the
+                     spec dtype, results identical to plans that predate
+                     the field.
+               "bf16_coupling"   the coupling GEMM (W^cp @ m^x) consumes
+                     bf16 operands and accumulates in f32 (MXU-native on
+                     TPU; on sharded plans this also halves the all-gather
+                     wire bytes, subsuming gather_dtype=bf16).
+               "mixed"           "bf16_coupling" plus the input-field GEMM
+                     (W^in u) in bf16. State carry, all elementwise LLG
+                     math, and the RK4 stage accumulation stay f32 — only
+                     the GEMMs are reduced, so the NARMA-10 NMSE guardrail
+                     (within 10% of f32, pinned by tests) holds.
+             Reduced precision applies to the planes impls
+             (ref/fused/tiled/chunk) and sharded plans; impl="scan" is the
+             repo's bit-exact oracle and refuses it. The readout-learning
+             recursion (kernels/rls.py) deliberately stays f32 — P's
+             conditioning is the one place bf16 noise compounds.
   gather_dtype  reduced-precision coupling path for sharded plans (bf16
-             wire + matmul; see core/ensemble.py §Perf C notes).
+             wire + matmul; see core/ensemble.py §Perf C notes). Subsumed
+             by `precision` — an explicit gather_dtype still wins, but new
+             code should say precision="bf16_coupling" instead.
   chunk_ticks  K: how many input ticks one serving dispatch covers.
              K > 1 turns `CompiledSim.tick_chunk` into a lax.scan over K
              ticks whose per-tick states stay in a device-side buffer and
@@ -53,8 +79,9 @@ try:  # jax is a hard dependency of the repo; guard only for doc tooling
 except Exception:  # pragma: no cover
     Mesh = object  # type: ignore
 
-PLAN_IMPLS = ("auto", "scan", "ref", "fused", "tiled")
+PLAN_IMPLS = ("auto", "scan", "ref", "fused", "tiled", "chunk")
 PLAN_LEARN = (None, "rls")
+PLAN_PRECISIONS = (None, "highest", "bf16_coupling", "mixed")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -68,6 +95,7 @@ class ExecPlan:
     ensemble_axes: Sequence[str] = ("data",)
     model_axis: Optional[str] = "model"
     gather_dtype: Optional[object] = None
+    precision: Optional[str] = None  # None/"highest" = bit-exact
     chunk_ticks: int = 1
     learn: Optional[str] = None  # None = inference-only; "rls" = online readout
     learn_lam: float = 1.0  # RLS forgetting factor, (0, 1]
@@ -101,6 +129,18 @@ class ExecPlan:
                     f"gather_dtype must be a dtype (e.g. jnp.bfloat16) or None; "
                     f"got {self.gather_dtype!r}"
                 ) from None
+        if self.precision not in PLAN_PRECISIONS:
+            raise ValueError(
+                f"precision must be one of {PLAN_PRECISIONS}; got "
+                f"{self.precision!r}"
+            )
+        if self.reduced_precision and self.impl == "scan" and self.mesh is None:
+            raise ValueError(
+                "impl='scan' is the bit-exact oracle; reduced precision "
+                f"({self.precision!r}) applies to the planes impls "
+                "(ref/fused/tiled/chunk) and sharded plans — use "
+                "impl='auto' or an explicit planes impl"
+            )
         if self.learn not in PLAN_LEARN:
             raise ValueError(
                 f"learn must be one of {PLAN_LEARN}; got {self.learn!r}"
@@ -123,3 +163,26 @@ class ExecPlan:
     @property
     def sharded(self) -> bool:
         return self.mesh is not None
+
+    @property
+    def effective_precision(self) -> Optional[str]:
+        """The precision policy with the bit-exact aliases collapsed:
+        returns None for both None and "highest"."""
+        return None if self.precision == "highest" else self.precision
+
+    @property
+    def reduced_precision(self) -> bool:
+        return self.effective_precision is not None
+
+    @property
+    def effective_gather_dtype(self):
+        """The sharded coupling-path wire/matmul dtype after precision
+        resolution: an explicit gather_dtype wins (backward compat);
+        otherwise reduced-precision plans gather in bf16."""
+        if self.gather_dtype is not None:
+            return self.gather_dtype
+        if self.reduced_precision:
+            import jax.numpy as jnp
+
+            return jnp.bfloat16
+        return None

@@ -15,6 +15,13 @@ bf16 directly in the dot is what keeps XLA from cancelling the converts
 around the collective and silently restoring an f32 gather (observed;
 §Perf C). Physically benign: |H_cp| <= A_cp ~ 1 Oe against ~600 Oe local
 fields, and |m|=1 conservation is structural.
+
+`ExecPlan.precision` subsumes that ad-hoc knob: "bf16_coupling"/"mixed"
+plans resolve to gather_dtype=bf16 (an explicit gather_dtype still wins —
+see ExecPlan.effective_gather_dtype), and "mixed" additionally runs the
+input-field GEMM (W^in u) on bf16 operands (`_input_field_local`). The
+`precision` argument on every body here is part of the lru_cache key, so
+plans of different precision never share a trace.
 """
 
 from __future__ import annotations
@@ -32,6 +39,19 @@ from repro.core import integrators, sto
 from repro.core.constants import STOParams
 from repro.distributed.sharding import reservoir_specs
 from repro.kernels import rls as krls
+
+
+def _input_field_local(params_l, win_l, u_t, precision, per_lane=True):
+    """h_in = A_in * (W^in_local u_t), honoring the precision policy.
+
+    The reduction policy itself lives in `kernels.ops.input_field_einsum`
+    (shared with the planes workers); this wrapper owns the sharded
+    layouts and the legacy a_in op order.
+    """
+    from repro.kernels import ops as kops
+
+    eq = "ni,ei->en" if per_lane else "ni,i->n"
+    return params_l.a_in * kops.input_field_einsum(eq, win_l, u_t, precision)
 
 
 def _coupling_field(params_l, w_mm, m, model_axis, gather_dtype):
@@ -59,6 +79,7 @@ def integrate_sharded(
     model_axis: Optional[str] = "model",
     tableau_name: str = "rk4",
     gather_dtype=None,
+    precision=None,  # free-run has no input GEMM; coupling rides gather_dtype
 ):
     """Free-running (u = 0) sharded ensemble integration -> final (E, N, 3)."""
     tableau = integrators.TABLEAUX[tableau_name]
@@ -102,6 +123,7 @@ def drive_sharded(
     model_axis: Optional[str] = "model",
     tableau_name: str = "rk4",
     gather_dtype=None,
+    precision=None,
 ):
     """Reservoir DRIVE (input on) for a sharded ensemble.
 
@@ -128,10 +150,7 @@ def drive_sharded(
         dt_c = jnp.asarray(dt, m0_l.dtype)
 
         def per_sample(m, u_t):
-            if per_lane_u:
-                h_in = params_l.a_in * jnp.einsum("ni,ei->en", win_l, u_t)
-            else:
-                h_in = params_l.a_in * jnp.einsum("ni,i->n", win_l, u_t)
+            h_in = _input_field_local(params_l, win_l, u_t, precision, per_lane_u)
             h_in = jnp.broadcast_to(h_in, m[..., 0].shape)
 
             def inner(mi, _):
@@ -168,6 +187,7 @@ def _tick_sharded_fn(
     dt: float,
     hold_steps: int,
     gather_dtype,
+    precision=None,
 ):
     """Build (once per signature) the jit'd shard_map'd tick.
 
@@ -190,7 +210,7 @@ def _tick_sharded_fn(
 
         step = integrators.make_step(field, tableau)
         dt_c = jnp.asarray(dt, m_l.dtype)
-        h_in = params_l.a_in * jnp.einsum("ni,ei->en", win_l, u_l)  # (E_l, N_l)
+        h_in = _input_field_local(params_l, win_l, u_l, precision)  # (E_l, N_l)
 
         def inner(mi, _):
             return step(mi, dt_c, h_in), None
@@ -227,6 +247,7 @@ def _tick_chunk_sharded_fn(
     dt: float,
     hold_steps: int,
     gather_dtype,
+    precision=None,
 ):
     """Build (once per signature) the jit'd shard_map'd K-tick chunk.
 
@@ -253,7 +274,7 @@ def _tick_chunk_sharded_fn(
 
         def per_tick(m_c, tick_in):
             u_t, mask_t = tick_in
-            h_in = params_l.a_in * jnp.einsum("ni,ei->en", win_l, u_t)
+            h_in = _input_field_local(params_l, win_l, u_t, precision)
 
             def inner(mi, _):
                 return step(mi, dt_c, h_in), None
@@ -294,6 +315,7 @@ def _tick_chunk_sharded_rls_fn(
     hold_steps: int,
     gather_dtype,
     lam: float,  # static: the RLS update specializes on it (kernels/rls.py)
+    precision=None,
 ):
     """Build (once per signature) the jit'd shard_map'd learning K-chunk.
 
@@ -325,7 +347,7 @@ def _tick_chunk_sharded_rls_fn(
 
         def per_tick(m_c, tick_in):
             u_t, mask_t = tick_in
-            h_in = params_l.a_in * jnp.einsum("ni,ei->en", win_l, u_t)
+            h_in = _input_field_local(params_l, win_l, u_t, precision)
 
             def inner(mi, _):
                 return step(mi, dt_c, h_in), None
@@ -394,6 +416,7 @@ def tick_chunk_sharded_rls(
     model_axis: Optional[str] = "model",
     tableau_name: str = "rk4",
     gather_dtype=None,
+    precision=None,
 ):
     """K learning serving ticks for a sharded slot batch in one dispatch.
 
@@ -405,7 +428,7 @@ def tick_chunk_sharded_rls(
     """
     fn = _tick_chunk_sharded_rls_fn(
         mesh, tuple(ensemble_axes), model_axis, tableau_name,
-        float(dt), int(hold_steps), gather_dtype, float(lam),
+        float(dt), int(hold_steps), gather_dtype, float(lam), precision,
     )
     return fn(params, w_cp, w_in, m, u_block, mask_block,
               y_block, lmask_block, p0, w0)
@@ -425,6 +448,7 @@ def tick_chunk_sharded(
     model_axis: Optional[str] = "model",
     tableau_name: str = "rk4",
     gather_dtype=None,
+    precision=None,
 ):
     """K serving ticks for a sharded slot batch in one dispatch.
 
@@ -435,7 +459,7 @@ def tick_chunk_sharded(
     """
     fn = _tick_chunk_sharded_fn(
         mesh, tuple(ensemble_axes), model_axis, tableau_name,
-        float(dt), int(hold_steps), gather_dtype,
+        float(dt), int(hold_steps), gather_dtype, precision,
     )
     return fn(params, w_cp, w_in, m, u_block, mask_block)
 
@@ -454,6 +478,7 @@ def tick_sharded(
     model_axis: Optional[str] = "model",
     tableau_name: str = "rk4",
     gather_dtype=None,
+    precision=None,
 ):
     """One serving tick (a full hold window) for a sharded slot batch.
 
@@ -464,6 +489,6 @@ def tick_sharded(
     """
     fn = _tick_sharded_fn(
         mesh, tuple(ensemble_axes), model_axis, tableau_name,
-        float(dt), int(hold_steps), gather_dtype,
+        float(dt), int(hold_steps), gather_dtype, precision,
     )
     return fn(params, w_cp, w_in, m, u, lane_mask)

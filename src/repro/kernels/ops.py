@@ -6,9 +6,21 @@ layout), MXU-alignment padding, and implementation dispatch:
     impl="fused"  VMEM-resident whole-RK4(-multi-step) kernel (small/med N)
     impl="tiled"  per-stage row-tiled kernel (large N)
     impl="ref"    pure-jnp oracle (also the non-TPU production path)
+    impl="chunk"  chunk-resident serving kernel: the K-tick x hold_steps x
+                  4-stage loop as ONE device-side region (Pallas rk4_chunk
+                  on TPU — W and state planes VMEM-resident per chunk; the
+                  jnp chunk oracle elsewhere). Per-hold-window entry points
+                  fall back to the ref math (a chunk of one window).
     impl="auto"   measured-latency table if populated; else fused while
                   W + state + stages fit the VMEM budget, else tiled
                   (on non-TPU backends: always ref — Pallas is unavailable)
+
+Precision policies (ExecPlan.precision) resolve HERE into a single W-cast
+hoisted outside the integration loops: "bf16_coupling"/"mixed" pass a bf16
+W into the kernels/oracle, whose coupling dots consume the reduced
+operands and accumulate in the state dtype. The dispatch table is keyed by
+precision as well as shape — a winner measured at f32 says nothing about
+the bf16-coupling ranking.
 
 Serving extensions (repro/serve/reservoir.py rides on these):
   - `h_in`: an (N, E) input-drive x-field added to the coupling field inside
@@ -57,25 +69,50 @@ def fused_fits_vmem(n: int, block_e: int, itemsize: int = 4) -> bool:
 # Measured-latency dispatch table
 # ---------------------------------------------------------------------------
 
-# (platform, N_padded, E_padded, itemsize) -> impl name. Populated by
-# measure_impl_latency(), register_impl_choice(), or the persisted
-# per-platform JSON tables (kernels/dispatch_table.py, loaded lazily by
-# choose_impl); consulted before falling back to the VMEM heuristic.
-# itemsize is part of the key because a choice measured at f32 says nothing
-# about the f64 VMEM footprint / bandwidth at the same padded shape.
-_LATENCY_TABLE: Dict[Tuple[str, int, int, int], str] = {}
+# (platform, N_padded, E_padded, itemsize, precision) -> impl name.
+# Populated by measure_impl_latency(), register_impl_choice(), or the
+# persisted per-platform JSON tables (kernels/dispatch_table.py, loaded
+# lazily by choose_impl); consulted before falling back to the VMEM
+# heuristic. itemsize is part of the key because a choice measured at f32
+# says nothing about the f64 VMEM footprint / bandwidth at the same padded
+# shape; precision is part of the key because the impl ranking shifts when
+# the coupling GEMM goes bf16 (e.g. MXU-native on TPU, software-emulated
+# on most CPUs).
+_LATENCY_TABLE: Dict[Tuple[str, int, int, int, str], str] = {}
+
+# The bit-exact default's tag in dispatch keys (ExecPlan.precision None
+# and "highest" collapse to this).
+PRECISION_DEFAULT = "highest"
+
+
+def normalize_precision(precision: Optional[str]) -> str:
+    """Collapse the ExecPlan.precision aliases to a dispatch-key tag."""
+    return PRECISION_DEFAULT if precision in (None, PRECISION_DEFAULT) else precision
 
 
 def register_impl_choice(
-    n: int, e: int, impl: str, platform: Optional[str] = None, itemsize: int = 4
+    n: int,
+    e: int,
+    impl: str,
+    platform: Optional[str] = None,
+    itemsize: int = 4,
+    precision: Optional[str] = None,
 ):
-    """Pin the dispatch choice for a padded (N, E, itemsize) shape on a
-    platform."""
+    """Pin the dispatch choice for a padded (N, E, itemsize, precision)
+    shape on a platform."""
     platform = platform or jax.default_backend()
-    _LATENCY_TABLE[(platform, _round_up(n, LANE), _round_up(e, LANE), itemsize)] = impl
+    _LATENCY_TABLE[
+        (
+            platform,
+            _round_up(n, LANE),
+            _round_up(e, LANE),
+            itemsize,
+            normalize_precision(precision),
+        )
+    ] = impl
 
 
-def latency_table() -> Dict[Tuple[str, int, int, int], str]:
+def latency_table() -> Dict[Tuple[str, int, int, int, str], str]:
     return dict(_LATENCY_TABLE)
 
 
@@ -84,22 +121,28 @@ def choose_impl(
     e: int,
     itemsize: int = 4,
     platform: Optional[str] = None,
+    precision: Optional[str] = None,
 ) -> str:
-    """Resolve impl="auto" for a given (N, E) problem shape.
+    """Resolve impl="auto" for a given (N, E, precision) problem shape.
 
     Priority: measured-latency table (in-process measurements, then the
-    committed per-platform JSON from kernels/dispatch_table.py) > platform
-    gate (Pallas kernels only compile on TPU; everything else integrates
-    through the jnp oracle, which XLA fuses well on CPU/GPU) > VMEM-fit
-    heuristic.
+    committed per-platform JSON from kernels/dispatch_table.py) — first at
+    the exact precision key, then at the bit-exact default key for the
+    same shape (the best f32 impl is the best prior for a reduced-precision
+    run that was never measured) > platform gate (Pallas kernels only
+    compile on TPU; everything else integrates through the jnp oracle,
+    which XLA fuses well on CPU/GPU) > VMEM-fit heuristic.
     """
     from repro.kernels import dispatch_table
 
     platform = platform or jax.default_backend()
     dispatch_table.ensure_loaded(platform)
-    key = (platform, _round_up(n, LANE), _round_up(e, LANE), itemsize)
-    if key in _LATENCY_TABLE:
-        return _LATENCY_TABLE[key]
+    prec = normalize_precision(precision)
+    shape_key = (platform, _round_up(n, LANE), _round_up(e, LANE), itemsize)
+    if shape_key + (prec,) in _LATENCY_TABLE:
+        return _LATENCY_TABLE[shape_key + (prec,)]
+    if prec != PRECISION_DEFAULT and shape_key + (PRECISION_DEFAULT,) in _LATENCY_TABLE:
+        return _LATENCY_TABLE[shape_key + (PRECISION_DEFAULT,)]
     if platform != "tpu":
         return "ref"
     return "fused" if fused_fits_vmem(_round_up(n, LANE), LANE, itemsize) else "tiled"
@@ -114,28 +157,52 @@ def measure_impl_latency(
     dtype=jnp.float32,
     reps: int = 3,
     register: bool = True,
-) -> Dict[str, float]:
-    """Time each candidate impl at (N, E) and record the winner.
+    precision: Optional[str] = None,
+    chunk_ticks: int = 4,
+) -> Dict[str, object]:
+    """Time each candidate impl at (N, E, precision) and record the winner.
 
-    Returns {impl: seconds per call}. With register=True the fastest impl is
-    written into the dispatch table so subsequent impl="auto" calls at this
-    padded shape use the measured choice — the engine measures once per
-    instance instead of trusting the static VMEM heuristic.
+    Each candidate runs the CHUNKED serving shape of the problem —
+    chunk_ticks hold windows of n_steps each (the serving hot path the
+    dispatch table mostly arbitrates) — so the measurement captures what
+    chunk residency is worth on TPU, where impl="chunk" is the Pallas
+    rk4_chunk kernel (W read once per chunk) while fused/tiled re-enter
+    per tick. Off-TPU, "chunk" lowers to the SAME fused XLA region as
+    "ref" (see _tick_chunk_planes_jit), so it is excluded from the default
+    candidates there — timing two names for one computation would register
+    a coin-flip winner; pass it via `candidates` explicitly if you must.
+
+    Returns {impl: seconds per chunk} for the candidates that ran, plus —
+    when any candidate failed — a "failed" entry mapping impl name to the
+    error string. Failures are also surfaced as a RuntimeWarning: a broken
+    backend must show up in the measurement report, not silently skew the
+    dispatch table toward whatever happened to survive. With register=True
+    the fastest surviving impl is written into the dispatch table so
+    subsequent impl="auto" calls at this padded (shape, precision) use the
+    measured choice.
     """
     if candidates is None:
         candidates = (
-            ("fused", "tiled", "ref")
+            ("fused", "tiled", "chunk", "ref")
             if jax.default_backend() == "tpu"
             else ("ref",)
         )
     from repro.core import constants, coupling
 
     w = jnp.asarray(coupling.make_coupling_matrix(n, seed=0), dtype)
-    m0 = jnp.broadcast_to(constants.initial_magnetization(n, dtype), (e, n, 3))
+    m0 = to_planes(
+        jnp.broadcast_to(constants.initial_magnetization(n, dtype), (e, n, 3))
+    )
     pv = kref.pack_params(constants.default_params(dtype), e, dtype)
-    timings: Dict[str, float] = {}
+    h_block = jnp.zeros((chunk_ticks, n, e), dtype)
+    mask_block = jnp.ones((chunk_ticks, e), dtype=bool)
+    timings: Dict[str, object] = {}
+    failed: Dict[str, str] = {}
     for impl in candidates:
-        fn = lambda: sto_rk4_integrate(m0, w, pv, float(dt), n_steps, impl=impl)
+        fn = lambda: sto_rk4_tick_chunk_planes(
+            m0, w, pv, float(dt), n_steps, h_block, mask_block,
+            impl=impl, precision=precision,
+        )[0]
         try:
             jax.block_until_ready(fn())  # compile + warm
             times = []
@@ -144,12 +211,25 @@ def measure_impl_latency(
                 jax.block_until_ready(fn())
                 times.append(time.perf_counter() - t0)
             timings[impl] = sorted(times)[len(times) // 2]
-        except Exception:  # impl unavailable on this backend/shape
-            continue
-    if register and timings:
+        except Exception as exc:  # impl unavailable on this backend/shape
+            failed[impl] = f"{type(exc).__name__}: {exc}"
+    if failed:
+        import warnings
+
+        timings["failed"] = failed
+        warnings.warn(
+            f"measure_impl_latency({n}, {e}): candidate impl(s) failed and "
+            f"were excluded from dispatch: "
+            + ", ".join(f"{k} ({v})" for k, v in failed.items()),
+            RuntimeWarning,
+            stacklevel=2,
+        )
+    successes = {k: v for k, v in timings.items() if isinstance(v, float)}
+    if register and successes:
         register_impl_choice(
-            n, e, min(timings, key=timings.get),
+            n, e, min(successes, key=successes.get),
             itemsize=jnp.dtype(dtype).itemsize,
+            precision=precision,
         )
     return timings
 
@@ -210,6 +290,7 @@ def sto_rk4_integrate_planes(
     block_n: int = LANE,
     block_e: int = LANE,
     interpret: bool = False,
+    precision: Optional[str] = None,
 ) -> jnp.ndarray:
     """Integrate n_steps of (optionally driven) coupled-STO RK4 in kernel
     layout. Returns the final (3, N, E) state.
@@ -224,30 +305,87 @@ def sto_rk4_integrate_planes(
     """
     _, n, e = m0.shape
     if impl == "auto":
-        impl = choose_impl(n, e, m0.dtype.itemsize)
+        impl = choose_impl(n, e, m0.dtype.itemsize, precision=precision)
     return _integrate_planes_jit(
         m0, w_cp, params_vec, h_in, lane_mask,
         dt=dt, n_steps=n_steps, impl=impl, n_inner=n_inner,
         block_n=block_n, block_e=block_e, interpret=interpret,
+        precision=normalize_precision(precision),
     )
+
+
+def input_field_einsum(eq: str, w_in, u, precision) -> jnp.ndarray:
+    """The input-field GEMM under the precision policy — ONE home for it.
+
+    "mixed" (ExecPlan.precision) runs W^in u on bf16 operands accumulating
+    in the input dtype; every other policy traces the exact einsum the
+    callers have always used. Callers (api/compiled._input_field,
+    api/sharded._input_field_local) own their layout/equation strings and
+    their a_in scaling op order — only the reduction policy lives here, so
+    a future policy (e.g. fp8) lands in one place for planes AND sharded
+    plans.
+    """
+    if precision == "mixed":
+        return jnp.einsum(
+            eq, w_in.astype(jnp.bfloat16), u.astype(jnp.bfloat16),
+            preferred_element_type=u.dtype,
+        )
+    return jnp.einsum(eq, w_in, u)
+
+
+def _coupling_operand(w: jnp.ndarray, precision: str) -> jnp.ndarray:
+    """Resolve the precision policy into the W operand the kernels consume.
+
+    The cast happens ONCE, outside the integration loops; the kernels and
+    the jnp oracle detect the reduced dtype and accumulate the coupling dot
+    in the state dtype. "mixed" adds the input-field GEMM on top of
+    "bf16_coupling" — that GEMM lives at the API layer (repro/api), so here
+    both map to a bf16 W.
+    """
+    if precision in ("bf16_coupling", "mixed"):
+        return w.astype(jnp.bfloat16)
+    return w
 
 
 @functools.partial(
     jax.jit,
-    static_argnames=("dt", "n_steps", "impl", "n_inner", "block_n", "block_e", "interpret"),
+    static_argnames=("dt", "n_steps", "impl", "n_inner", "block_n", "block_e", "interpret", "precision"),
 )
 def _integrate_planes_jit(
     m0, w_cp, params_vec, h_in, lane_mask,
     *, dt, n_steps, impl, n_inner, block_n, block_e, interpret,
+    precision=PRECISION_DEFAULT,
 ):
     # the oracle is pure XLA — no MXU tile constraint, so padding would only
-    # burn FLOPs on dead lanes; the Pallas kernels need lane alignment
-    pb_n, pb_e = (1, 1) if impl == "ref" else (block_n, block_e)
+    # burn FLOPs on dead lanes; the Pallas kernels need lane alignment.
+    # "chunk" at the per-hold-window level is a one-tick chunk: the Pallas
+    # rk4_chunk kernel on TPU (W VMEM-resident for the whole window — so a
+    # dispatch winner measured on the chunked shape stays a sane choice for
+    # tick()/drive()/integrate() too), the same math as the jnp oracle
+    # elsewhere.
+    use_pallas_chunk = impl == "chunk" and (
+        jax.default_backend() == "tpu" or interpret
+    )
+    pb_n, pb_e = (
+        (1, 1)
+        if impl in ("ref", "chunk") and not use_pallas_chunk
+        else (block_n, block_e)
+    )
     m, w, pv, h, n_orig, e_orig = _pad_planes(
         m0, w_cp, params_vec, h_in, pb_n, pb_e
     )
+    w = _coupling_operand(w, precision)
 
-    if impl == "ref":
+    if use_pallas_chunk:
+        _, n_p, e_p = m.shape
+        h_block = (
+            jnp.zeros((1, n_p, e_p), m.dtype) if h is None else h[None]
+        )
+        m, _ = sto_step.rk4_chunk(
+            m, w, pv, dt, n_steps, h_block,
+            jnp.ones((1, e_p), m.dtype), block_e=block_e, interpret=interpret,
+        )
+    elif impl in ("ref", "chunk"):
         dt_c = jnp.asarray(dt, m.dtype)
 
         def body(mm, _):
@@ -290,6 +428,123 @@ def _integrate_planes_jit(
     return m
 
 
+def sto_rk4_tick_chunk_planes(
+    m0: jnp.ndarray,  # (3, N, E) kernel layout
+    w_cp: jnp.ndarray,  # (N, N)
+    params_vec: jnp.ndarray,  # (NP, E) packed (kernels/ref.pack_params)
+    dt: float,
+    hold_steps: int,
+    h_block: jnp.ndarray,  # (K, N, E) per-tick input-drive x-fields
+    mask_block: jnp.ndarray,  # (K, E) bool; False = lane frozen that tick
+    impl: str = "auto",
+    precision: Optional[str] = None,
+    n_inner: int = 8,
+    block_n: int = LANE,
+    block_e: int = LANE,
+    interpret: bool = False,
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """K serving ticks (K hold windows) in kernel layout, one dispatch.
+
+    The chunk-level integration entry: per-tick input fields arrive as a
+    precomputed (K, N, E) block and the per-tick states block stays device-
+    side. impl="chunk" runs the whole K x hold_steps x 4-stage loop as one
+    chunk-resident region (Pallas rk4_chunk on TPU — W read from HBM once
+    per chunk; the jnp chunk oracle elsewhere); the per-window impls
+    (ref/fused/tiled) scan over ticks re-entering their kernels. Returns
+    (m' (3, N, E), states (K, N, E) per-tick x-planes). Frozen (masked
+    False) lanes come back bit-identical for every impl.
+    """
+    _, n, e = m0.shape
+    if impl == "auto":
+        impl = choose_impl(n, e, m0.dtype.itemsize, precision=precision)
+    return _tick_chunk_planes_jit(
+        m0, w_cp, params_vec, h_block, mask_block,
+        dt=dt, hold_steps=hold_steps, impl=impl, n_inner=n_inner,
+        block_n=block_n, block_e=block_e, interpret=interpret,
+        precision=normalize_precision(precision),
+    )
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("dt", "hold_steps", "impl", "n_inner", "block_n", "block_e", "interpret", "precision"),
+)
+def _tick_chunk_planes_jit(
+    m0, w_cp, params_vec, h_block, mask_block,
+    *, dt, hold_steps, impl, n_inner, block_n, block_e, interpret,
+    precision=PRECISION_DEFAULT,
+):
+    k_ticks = h_block.shape[0]
+    pb_n, pb_e = (1, 1) if impl in ("ref", "chunk") else (block_n, block_e)
+    use_pallas_chunk = impl == "chunk" and (
+        jax.default_backend() == "tpu" or interpret
+    )
+    if use_pallas_chunk:
+        pb_n, pb_e = block_n, block_e
+    m, w, pv, _, n_orig, e_orig = _pad_planes(
+        m0, w_cp, params_vec, None, pb_n, pb_e
+    )
+    _, n_p, e_p = m.shape
+    if (n_p, e_p) != h_block.shape[1:]:
+        h_block = jnp.pad(
+            h_block,
+            ((0, 0), (0, n_p - h_block.shape[1]), (0, e_p - h_block.shape[2])),
+        )
+        # padded lanes stay frozen: their params are edge-broadcast so the
+        # math is safe either way, but frozen is cheaper to reason about
+        mask_block = jnp.pad(mask_block, ((0, 0), (0, e_p - mask_block.shape[1])))
+    w = _coupling_operand(w, precision)
+
+    if use_pallas_chunk:
+        mT, states = sto_step.rk4_chunk(
+            m, w, pv, dt, hold_steps, h_block,
+            mask_block.astype(m.dtype), block_e=block_e, interpret=interpret,
+        )
+    elif impl in ("ref", "chunk"):
+        # one fused region either way off-TPU; "chunk" additionally means
+        # the caller precomputed h_block with ONE input GEMM per chunk
+        mT, states = kref.rk4_chunk_planes(
+            m, w, pv, dt, hold_steps, h_block, mask_block
+        )
+    elif impl in ("fused", "tiled"):
+        if impl == "fused":
+            while hold_steps % n_inner != 0:
+                n_inner -= 1
+
+        def per_tick(mm, tick_in):
+            h_t, mask_t = tick_in
+            if impl == "fused":
+                def win(mw, _):
+                    return (
+                        sto_step.rk4_fused(
+                            mw, w, pv, dt, n_inner=n_inner, block_e=block_e,
+                            h_in=h_t, interpret=interpret,
+                        ),
+                        None,
+                    )
+
+                m_new, _ = jax.lax.scan(win, mm, None, length=hold_steps // n_inner)
+            else:
+                def win(mw, _):
+                    return (
+                        sto_step.rk4_tiled_step(
+                            mw, w, pv, dt, block_n=block_n, block_e=block_e,
+                            h_in=h_t, interpret=interpret,
+                        ),
+                        None,
+                    )
+
+                m_new, _ = jax.lax.scan(win, mm, None, length=hold_steps)
+            m_new = jnp.where(mask_t[None, None, :], m_new, mm)
+            return m_new, m_new[0]
+
+        mT, states = jax.lax.scan(per_tick, m, (h_block, mask_block))
+    else:
+        raise ValueError(f"unknown impl: {impl}")
+
+    return mT[:, :n_orig, :e_orig], states[:, :n_orig, :e_orig]
+
+
 def sto_rk4_integrate(
     m0: jnp.ndarray,  # (..., N, 3) user layout
     w_cp: jnp.ndarray,  # (N, N)
@@ -301,6 +556,7 @@ def sto_rk4_integrate(
     block_n: int = LANE,
     block_e: int = LANE,
     interpret: bool = False,
+    precision: Optional[str] = None,
 ) -> jnp.ndarray:
     """Integrate n_steps of coupled-STO RK4 with the chosen implementation.
 
@@ -313,11 +569,12 @@ def sto_rk4_integrate(
     for s in batch_shape:
         e *= int(s)
     if impl == "auto":
-        impl = choose_impl(m0.shape[-2], e, m0.dtype.itemsize)
+        impl = choose_impl(m0.shape[-2], e, m0.dtype.itemsize, precision=precision)
     m = _integrate_planes_jit(
         to_planes(m0), w_cp, params_vec, None, None,
         dt=dt, n_steps=n_steps, impl=impl, n_inner=n_inner,
         block_n=block_n, block_e=block_e, interpret=interpret,
+        precision=normalize_precision(precision),
     )
     return from_planes(m, batch_shape)
 

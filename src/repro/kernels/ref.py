@@ -74,11 +74,21 @@ def llg_field_planes(m, w_cp, pvec, h_in=None):
     it enters the field as a constant plane).
     This is algebraically identical to core.sto.llg_field — the equivalence
     is itself asserted by tests/test_kernels_sto.py.
+
+    Precision policy (ExecPlan.precision): callers opt into the reduced-
+    precision coupling GEMM by passing w_cp ALREADY cast (e.g. bf16, cast
+    once outside the integration loop, not per stage). A w_cp dtype that
+    differs from the state dtype makes the coupling dot consume reduced
+    operands while accumulating in the state dtype; everything else — the
+    elementwise LLG math, the state carry, the RK4 combine — stays in the
+    state dtype. When dtypes match (the default), this path is untouched
+    and bit-exact.
     """
     p = _unpack(pvec)
     mx, my, mz = m[0], m[1], m[2]  # (N, E)
     # coupling: rows of W against the x-plane -> (N, E) matmul on the MXU
-    hx = p["a_cp"] * jnp.dot(w_cp, mx, preferred_element_type=m.dtype)
+    mx_cp = mx if w_cp.dtype == m.dtype else mx.astype(w_cp.dtype)
+    hx = p["a_cp"] * jnp.dot(w_cp, mx_cp, preferred_element_type=m.dtype)
     if h_in is not None:
         hx = hx + h_in
     hz = p["happl"] + p["demag"] * mz
@@ -120,6 +130,48 @@ def rk4_multi_step_planes(m, w_cp, pvec, dt, n_inner: int, h_in=None):
         return rk4_step_planes(mm, w_cp, pvec, dt, h_in)
 
     return jax.lax.fori_loop(0, n_inner, body, m)
+
+
+def rk4_chunk_planes(
+    m,  # (3, N, E) state
+    w_cp,  # (N, N) — pre-cast by the caller for reduced-precision coupling
+    pvec,  # (NP, E)
+    dt,
+    hold_steps: int,
+    h_block,  # (K, N, E) per-tick input-drive x-fields
+    mask_block,  # (K, E) bool; False = lane frozen that tick
+):
+    """Chunk-resident K-tick integration: the oracle behind impl="chunk".
+
+    The whole K-tick x hold_steps x 4-stage RK4 loop runs as ONE traced
+    region: the per-tick input fields arrive as a precomputed (K, N, E)
+    block (one input GEMM per chunk instead of one per tick), W is read by
+    every stage from the same (optionally reduced-precision) operand cast
+    exactly once by the caller, and the per-tick states block (K, N, E)
+    stays device-side for the serving engine's bulk harvest. Per-element
+    float op order matches the per-tick ref path (`rk4_step_planes` +
+    masked where), so precision=None chunks agree with the ref impl to the
+    bit on CPU. Returns (m' (3, N, E), states (K, N, E)).
+
+    On TPU the same loop structure is a Pallas kernel
+    (`kernels.sto_step.rk4_chunk`) that keeps the state planes VMEM-
+    resident and reads W from HBM once per chunk per ensemble tile instead
+    of once per tick.
+    """
+    dt_c = jnp.asarray(dt, m.dtype)
+
+    def per_tick(mm, tick_in):
+        h_t, mask_t = tick_in
+
+        def inner(mi, _):
+            return rk4_step_planes(mi, w_cp, pvec, dt_c, h_t), None
+
+        m_new, _ = jax.lax.scan(inner, mm, None, length=hold_steps)
+        m_new = jnp.where(mask_t[None, None, :], m_new, mm)
+        return m_new, m_new[0]
+
+    mT, states = jax.lax.scan(per_tick, m, (h_block, mask_block))
+    return mT, states  # (3, N, E), (K, N, E)
 
 
 # ---------------------------------------------------------------------------

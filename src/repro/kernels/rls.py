@@ -34,6 +34,14 @@ stream length. With aggressive forgetting (lam well below 1) over very
 long streams, P's conditioning degrades in f32 — the classic RLS
 round-off divergence — so keep lam close to 1 for long-lived f32 sessions
 (e.g. 0.99+) or run the spec in float64.
+
+Precision policies (ExecPlan.precision) stop HERE: reduced-precision plans
+cast the coupling/input GEMMs of the *integration*, but the learn
+recursion always runs in P's dtype — P's conditioning is the one place
+bf16 noise compounds tick over tick instead of averaging out, and the
+bit-match contract with the offline `fit_rls` oracle only holds if the
+update math is unpolluted. Both update entry points upcast reduced-dtype
+feature vectors to P's dtype defensively.
 """
 
 from __future__ import annotations
@@ -87,6 +95,9 @@ def rls_update(
     jnp.where select over the (E, S, S) P block — two fewer full-P
     traversals per tick, value-identical results.
     """
+    # learn math never runs reduced: see the module precision note
+    x = x.astype(p.dtype)
+    y = y.astype(p.dtype)
     # broadcast-multiply + sum, NOT einsum/dot_general: XLA lowers batched
     # dots with a batch-width-dependent reduction order, while a trailing-
     # axis reduce is bit-identical per lane at any E — that is what lets a
@@ -141,6 +152,9 @@ def rls_chunk(
     into the reduces, so no (E, S, S, K) temporary is materialized.
     """
     k_ticks = xb.shape[0]
+    # learn math never runs reduced: see the module precision note
+    xb = xb.astype(p.dtype)
+    y = y.astype(p.dtype)
     dt_one = p.dtype.type(1.0)
     # B[e, i, t] = sum_j P[e, i, j] x_t[e, j] — one pass over P, as a
     # batched GEMM. Unlike a batched mat-VEC (whose reduction order shifts

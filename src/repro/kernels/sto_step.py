@@ -1,6 +1,6 @@
 """Pallas TPU kernels for the coupled-STO RK4 step.
 
-Two kernels, specialized by N-regime — mirroring the paper's finding that
+Three kernels, specialized by regime — mirroring the paper's finding that
 each implementation wins in a different range (Table 2):
 
 1. `rk4_fused`  (small/medium N): the ENTIRE RK4 step — all four field
@@ -18,6 +18,21 @@ each implementation wins in a different range (Table 2):
    stage algebra y = m + c*k is fused into the kernel (classic RK4 has a
    single-predecessor tableau), so HBM traffic per stage is W-row-tile +
    3 state planes instead of ~13 op-by-op round trips.
+
+3. `rk4_chunk` (chunked serving): the ENTIRE K-tick serving chunk — K
+   input ticks x hold_steps x 4 RK4 stages — in one kernel invocation.
+   Where `rk4_fused` is re-launched per tick (re-reading W from HBM each
+   launch), `rk4_chunk` keeps W and the state planes VMEM-resident across
+   the whole chunk: HBM sees one W read + one state read/write + the
+   (K, N, be) input and states blocks per chunk per ensemble tile. Per-tick
+   lane masks ride in as an f32 0/1 plane so mid-chunk admit/retire works
+   inside the kernel.
+
+Reduced-precision coupling (ExecPlan.precision): every kernel accepts a W
+operand whose dtype differs from the state's (cast ONCE by ops.py, not per
+stage); the coupling dot then consumes reduced operands (bf16 x bf16 ->
+f32 is MXU-native) while all elementwise math and the state carry stay in
+the state dtype.
 
 Layouts (see kernels/ref.py): m (3, N, E); W (N, N); params (NP, E).
 MXU alignment: E and N tiles are multiples of 128 (f32); callers pad via
@@ -84,7 +99,11 @@ def _rk4_fused_kernel(params_ref, w_ref, h_ref, m_ref, out_ref, *, dt, n_inner):
     acc_t = jnp.float32 if m_ref.dtype == jnp.bfloat16 else m_ref.dtype
 
     def field(mx, my, mz):
-        hx = p["a_cp"] * jnp.dot(w, mx, preferred_element_type=acc_t) + h_in
+        # reduced-precision coupling (ExecPlan.precision): callers pass W
+        # pre-cast (e.g. bf16); the dot consumes the reduced operands and
+        # accumulates in the state dtype (MXU-native bf16 x bf16 -> f32)
+        mx_cp = mx if w.dtype == m_ref.dtype else mx.astype(w.dtype)
+        hx = p["a_cp"] * jnp.dot(w, mx_cp, preferred_element_type=acc_t) + h_in
         return _field_planes(mx, my, mz, hx, p)
 
     def one_step(state):
@@ -158,9 +177,14 @@ def _field_tiled_kernel(
     """
     p = _unpack_rows(params_ref)
     acc_t = jnp.float32 if m_ref.dtype == jnp.bfloat16 else m_ref.dtype
-    # MXU: this row-block of W against the full y-x-plane.
+    # MXU: this row-block of W against the full y-x-plane. For reduced-
+    # precision coupling the caller passes W pre-cast; the stage plane is
+    # cast to match and the dot accumulates in the state dtype.
+    yx = yx_ref[...]
+    if w_ref.dtype != m_ref.dtype:
+        yx = yx.astype(w_ref.dtype)
     hx = (
-        p["a_cp"] * jnp.dot(w_ref[...], yx_ref[...], preferred_element_type=acc_t)
+        p["a_cp"] * jnp.dot(w_ref[...], yx, preferred_element_type=acc_t)
         + h_ref[...]
     )
     if stage_coef == 0.0:
@@ -208,6 +232,102 @@ def field_tiled(
         out_shape=jax.ShapeDtypeStruct(m.shape, m.dtype),
         interpret=interpret,
     )(params, w_cp, h_in, yx_full, m, k_prev)
+
+
+def _rk4_chunk_kernel(
+    params_ref, w_ref, h_ref, mask_ref, m_ref, out_ref, states_ref,
+    *, dt, hold_steps, k_ticks,
+):
+    """K serving ticks (K hold windows) for one ensemble tile, W resident.
+
+    h_ref: (K, N, be) per-tick input-drive x-fields; mask_ref: (K, 1, be)
+    f32 0/1 lane masks (False/0 = lane frozen that tick — comes back
+    bit-identical, so mid-chunk admit/retire works without leaving the
+    kernel); states_ref: (K, N, be) per-tick x-plane outputs (the serving
+    engine's states block).
+    """
+    p = _unpack_rows(params_ref)
+    w = w_ref[...]  # (N, N): ONE HBM->VMEM read for the whole chunk
+    acc_t = jnp.float32 if m_ref.dtype == jnp.bfloat16 else m_ref.dtype
+
+    def field(mx, my, mz, h_in):
+        mx_cp = mx if w.dtype == m_ref.dtype else mx.astype(w.dtype)
+        hx = p["a_cp"] * jnp.dot(w, mx_cp, preferred_element_type=acc_t) + h_in
+        return _field_planes(mx, my, mz, hx, p)
+
+    def one_step(state, h_in):
+        mx, my, mz = state
+        h = dt / 2.0
+        k1x, k1y, k1z = field(mx, my, mz, h_in)
+        k2x, k2y, k2z = field(mx + h * k1x, my + h * k1y, mz + h * k1z, h_in)
+        k3x, k3y, k3z = field(mx + h * k2x, my + h * k2y, mz + h * k2z, h_in)
+        k4x, k4y, k4z = field(mx + dt * k3x, my + dt * k3y, mz + dt * k3z, h_in)
+        s = dt / 6.0
+        return (
+            mx + s * (k1x + 2 * k2x + 2 * k3x + k4x),
+            my + s * (k1y + 2 * k2y + 2 * k3y + k4y),
+            mz + s * (k1z + 2 * k2z + 2 * k3z + k4z),
+        )
+
+    state = (m_ref[0], m_ref[1], m_ref[2])
+    for t in range(k_ticks):  # K is small and static: unrolled over ticks
+        h_in = h_ref[t]
+        new = jax.lax.fori_loop(
+            0, hold_steps, lambda _, s: one_step(s, h_in), state
+        )
+        keep = mask_ref[t] > 0.5  # (1, be) broadcasts over (N, be)
+        state = tuple(jnp.where(keep, n_, o_) for n_, o_ in zip(new, state))
+        states_ref[t] = state[0]
+    out_ref[0] = state[0]
+    out_ref[1] = state[1]
+    out_ref[2] = state[2]
+
+
+def rk4_chunk(
+    m: jnp.ndarray,  # (3, N, E), N and E already padded/aligned
+    w_cp: jnp.ndarray,  # (N, N); may be pre-cast (reduced-precision coupling)
+    params: jnp.ndarray,  # (NP, E)
+    dt: float,
+    hold_steps: int,
+    h_block: jnp.ndarray,  # (K, N, E) per-tick input-drive x-fields
+    mask_block: jnp.ndarray,  # (K, E) f32 0/1 per-tick lane masks
+    block_e: int = LANE,
+    interpret: bool = False,
+):
+    """The chunk-resident serving kernel: K ticks x hold_steps x 4 stages
+    in one launch, W and state planes VMEM-resident for the whole chunk.
+
+    Returns (m' (3, N, E), states (K, N, E) per-tick x-planes).
+    """
+    _, n, e = m.shape
+    k_ticks = h_block.shape[0]
+    assert e % block_e == 0, (e, block_e)
+    assert h_block.shape == (k_ticks, n, e), (h_block.shape, (k_ticks, n, e))
+    grid = (e // block_e,)
+    kernel = functools.partial(
+        _rk4_chunk_kernel,
+        dt=float(dt), hold_steps=hold_steps, k_ticks=k_ticks,
+    )
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((NP, block_e), lambda i: (0, i)),  # params
+            pl.BlockSpec((n, n), lambda i: (0, 0)),  # W resident per chunk
+            pl.BlockSpec((k_ticks, n, block_e), lambda i: (0, 0, i)),  # inputs
+            pl.BlockSpec((k_ticks, 1, block_e), lambda i: (0, 0, i)),  # masks
+            pl.BlockSpec((3, n, block_e), lambda i: (0, 0, i)),  # m
+        ],
+        out_specs=[
+            pl.BlockSpec((3, n, block_e), lambda i: (0, 0, i)),
+            pl.BlockSpec((k_ticks, n, block_e), lambda i: (0, 0, i)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct(m.shape, m.dtype),
+            jax.ShapeDtypeStruct((k_ticks, n, e), m.dtype),
+        ],
+        interpret=interpret,
+    )(params, w_cp, h_block, mask_block.reshape(k_ticks, 1, e), m)
 
 
 def rk4_tiled_step(

@@ -112,6 +112,7 @@ def main_reservoir(args):
                 ensemble=args.slots,
                 measure=args.measure,
                 chunk_ticks=args.chunk_ticks,
+                precision=args.precision,
             ),
         ),
         **autoscale_kw,
@@ -120,7 +121,8 @@ def main_reservoir(args):
     results = eng.run(sessions)
     dt = time.time() - t0
     st = eng.scheduler.stats
-    print(f"backend={eng.backend} slots={eng.num_slots} N={args.n} "
+    print(f"backend={eng.backend} precision={eng.precision} "
+          f"slots={eng.num_slots} N={args.n} "
           f"hold_steps={args.hold_steps} chunk_ticks={eng.chunk_ticks}")
     print(f"served {len(results)} sessions / {st.session_ticks} session-ticks "
           f"in {dt:.2f}s ({st.session_ticks / dt:.1f} ticks/s incl. compile; "
@@ -146,6 +148,10 @@ def main(argv=None):
     ap.add_argument("--ticks", type=int, default=50)
     ap.add_argument("--hold-steps", type=int, default=20)
     ap.add_argument("--backend", default="auto")
+    ap.add_argument("--precision", default=None,
+                    choices=["highest", "bf16_coupling", "mixed"],
+                    help="numerical policy for the compute-bound GEMMs "
+                    "(default: bit-exact; see ExecPlan.precision)")
     ap.add_argument("--measure", action="store_true",
                     help="time backend candidates for this (N, E) first")
     ap.add_argument("--chunk-ticks", type=int, default=8,

@@ -75,7 +75,7 @@ from repro.core.reservoir import Readout, Reservoir, coerce_input_series
 from repro.serve.scheduler import AutoscalePolicy, QueueDepthPolicy, SlotScheduler
 from repro.serve.state_store import SlotStore
 
-BACKENDS = ("auto", "scan", "ref", "fused", "tiled")
+BACKENDS = ("auto", "scan", "ref", "fused", "tiled", "chunk")
 
 
 @dataclasses.dataclass
@@ -229,6 +229,10 @@ class ReservoirEngine:
                     forgetting factor and regularization (see
                     repro.api.plan.ExecPlan). Learning engines serve
                     through the chunked path (run()/step_chunk()) only.
+      precision     numerical policy for the compute-bound GEMMs (template
+                    route; CompiledSim route: set on the ExecPlan):
+                    None/"highest" bit-exact, "bf16_coupling"/"mixed"
+                    reduced — see repro.api.plan.ExecPlan.precision.
     """
 
     def __init__(
@@ -247,6 +251,7 @@ class ReservoirEngine:
         learn: Optional[str] = None,
         learn_lam: Optional[float] = None,
         learn_reg: Optional[float] = None,
+        precision: Optional[str] = None,
     ):
         if isinstance(res, CompiledSim):
             sim = res
@@ -264,11 +269,13 @@ class ReservoirEngine:
                 or learn is not None
                 or learn_lam is not None
                 or learn_reg is not None
+                or precision is not None
             ):
                 raise ValueError(
-                    "backend/measure/interpret/chunk_ticks/learn* are ExecPlan "
-                    "decisions; when constructing from a CompiledSim, set "
-                    "them on the plan passed to compile_plan instead"
+                    "backend/measure/interpret/chunk_ticks/learn*/precision "
+                    "are ExecPlan decisions; when constructing from a "
+                    "CompiledSim, set them on the plan passed to compile_plan "
+                    "instead"
                 )
             num_slots = sim.plan.ensemble
         else:
@@ -294,6 +301,7 @@ class ReservoirEngine:
                     learn=learn,
                     learn_lam=1.0 if learn_lam is None else learn_lam,
                     learn_reg=1e-6 if learn_reg is None else learn_reg,
+                    precision=precision,
                 ),
             )
         self.sim = sim
@@ -312,6 +320,9 @@ class ReservoirEngine:
         self.results: Dict[int, SessionResult] = {}
         self.max_retained = max_retained
         self.backend = sim.impl
+        # the plan's numerical policy ("highest" = bit-exact default) — the
+        # serve bench reports it per cell alongside the backend
+        self.precision = sim.precision
 
         # -- autoscaling: bucketed plan cache over ensemble widths ---------
         if autoscale is True:
@@ -558,6 +569,7 @@ class ReservoirEngine:
             sess._slot = slot
         self.sim = sim
         self.backend = sim.impl
+        self.precision = sim.precision
 
     # -- the synchronous per-tick path --------------------------------------
 

@@ -147,7 +147,7 @@ class TestKernelBackends:
     def test_auto_backend_resolves(self):
         res = make_reservoir(n=8, n_in=1, hold_steps=4, dtype=jnp.float32)
         eng = ReservoirEngine(res, num_slots=2, backend="auto")
-        assert eng.backend in ("scan", "ref", "fused", "tiled")
+        assert eng.backend in ("scan", "ref", "fused", "tiled", "chunk")
 
     def test_measured_latency_table_drives_dispatch(self):
         """A measured entry overrides the heuristic for its padded shape."""
