@@ -386,7 +386,250 @@ def bench_cell(n: int, e: int, print_fn=print):
     return cell
 
 
-def run(out_path: str = "BENCH_serve.json", quick: bool = False, print_fn=print):
+# ---------------------------------------------------------------------------
+# fleet tier: multi-replica bursty mixed-N workload
+# ---------------------------------------------------------------------------
+
+FLEET_POOLS = ((16, 8), (128, 8))  # (N, slots per replica) per pool
+FLEET_BURSTS = 2
+FLEET_SESSIONS_PER_POOL_BURST = 16  # 2x replica slot width -> queueing
+
+
+def _run_fleet_config(replicas: int, transport: str, pools, sessions_pp,
+                      bursts: int, rng) -> tuple:
+    """Serve the bursty mixed-N workload on `replicas` replicas per pool;
+    returns (drain seconds, sessions served, session-ticks served).
+
+    Bursts land mid-serve (a full wave of every pool's sessions at once,
+    injected every few pump rounds) so the measurement includes the
+    queueing/refill behavior the fleet exists for — not just a pre-loaded
+    batch. Compile time is warmed out per pool first."""
+    from repro.serve.fleet import FleetRouter, start_fleet
+
+    router = FleetRouter()
+    for n, e in pools:
+        for r in start_fleet(
+            replicas, transport, n=n, num_slots=e,
+            hold_steps=HOLD_STEPS, chunk_ticks=CHUNK_TICKS,
+        ):
+            router.add_replica(r)
+    # warm the full shape repertoire out of the timed region: the chunk
+    # plan AND the admit/retire scatter shapes that wave turnover hits
+    # (each distinct admission/retirement count is its own jit trace) —
+    # same burst pattern, one-chunk streams
+    sid = 900_000
+    for _ in range(bursts):
+        for n, _ in pools:
+            for s in _mk_sessions(sessions_pp, CHUNK_TICKS, 1, rng, base_sid=sid):
+                router.submit(n, s)
+            sid += sessions_pp
+        router.drain()
+
+    burst_list = []
+    for b in range(bursts):
+        burst = []
+        for n, _ in pools:
+            for s in _mk_sessions(sessions_pp, TICKS, 1, rng, base_sid=sid):
+                burst.append((n, s))
+            sid += sessions_pp
+        burst_list.append(burst)
+
+    served = 0
+    ticks0 = sum(
+        st.session_ticks for pool in router.stats().values() for st in pool
+    )
+    t0 = time.perf_counter()
+    bi = 0
+    rounds = 0
+    while True:
+        if bi < len(burst_list) and rounds % 3 == 0:
+            for n, s in burst_list[bi]:
+                router.submit(n, s)
+            bi += 1
+        worked = router.run_for(1)
+        served += len(router.results())
+        rounds += 1
+        if not worked and bi >= len(burst_list):
+            break
+    dt = time.perf_counter() - t0
+    ticks = (
+        sum(st.session_ticks for pool in router.stats().values() for st in pool)
+        - ticks0
+    )
+    router.close()
+    return dt, served, ticks
+
+
+def bench_fleet(
+    bench_payload: dict,
+    replicas: int = 2,
+    transport: str = None,
+    print_fn=print,
+) -> dict:
+    """Fleet scaling column: R replicas per pool vs 1, same bursty mixed-N
+    workload, plus the capacity planner's predicted-vs-measured error.
+
+    The honest metric is the WITHIN-RUN ratio (fleet vs single replica on
+    this host, minutes apart) — absolute sessions/sec moves with
+    container noise. Replicas time-share cores, so the planner predicts
+    the ratio as min(R, cores): near-linear on multi-core hosts, ~1.0 on
+    a single-core host (where the fleet buys capacity and isolation, not
+    FLOPs). Both prediction and measurement are recorded."""
+    from repro.serve.fleet import CapacityModel, usable_cores
+
+    cores = usable_cores()
+    if transport is None:
+        # pipes only pay off when children get their own core
+        transport = "process" if cores > 1 else "local"
+    rng = np.random.default_rng(7)
+    t1, m1, ticks1 = _run_fleet_config(
+        1, transport, FLEET_POOLS, FLEET_SESSIONS_PER_POOL_BURST,
+        FLEET_BURSTS, rng,
+    )
+    tr, mr, ticksr = _run_fleet_config(
+        replicas, transport, FLEET_POOLS, FLEET_SESSIONS_PER_POOL_BURST,
+        FLEET_BURSTS, rng,
+    )
+    assert m1 == mr, f"configs served different workloads: {m1} vs {mr}"
+    speedup = (ticksr / tr) / (ticks1 / t1)
+    predicted_speedup = float(min(replicas, cores))
+
+    # planner absolute check: predicted drain time of the single-replica
+    # config from the grid-calibrated SUSTAINED model (per pool: churn-
+    # billed drain seconds; pools time-share the host, so times add). The
+    # grid's absolute scale is only valid on the host state it was
+    # recorded under (±40% container noise, ROADMAP caveat), so the
+    # planner first recalibrates from a same-run probe: each pool cell
+    # re-measured ONCE with the grid's own burst methodology on a bare
+    # engine. Non-circular — the probe never touches the fleet stack the
+    # measurement goes through, so the error still bills router/replica
+    # overhead and the bursty-injection queueing.
+    planner = CapacityModel.from_bench(bench_payload)
+    probe = {}
+    for n, e in FLEET_POOLS:
+        spec = make_spec(n=n, n_in=1, hold_steps=HOLD_STEPS, dtype=jnp.float32)
+        eng = ReservoirEngine(
+            compile_plan(spec, ExecPlan(ensemble=e, chunk_ticks=CHUNK_TICKS)),
+            max_retained=e,
+        )
+        _drain_time(
+            eng, _mk_sessions(WAVES * e, CHUNK_TICKS, 1, rng), pipelined=True
+        )  # warm the full admit/retire shape repertoire
+        t_probe, ticks_probe = _drain_time(
+            eng, _mk_sessions(WAVES * e, TICKS, 1, rng, base_sid=600_000),
+            pipelined=True,
+        )
+        probe.setdefault(n, {})[e] = ticks_probe / t_probe
+    host_scale = planner.recalibrate(probe)
+    sessions_total = FLEET_BURSTS * FLEET_SESSIONS_PER_POOL_BURST
+    pred_t1 = sum(
+        planner.drain_seconds(n, e, sessions_total, TICKS, replicas=1)
+        for n, e in FLEET_POOLS
+    )
+    planner_err = abs(pred_t1 - t1) / t1
+    fleet = {
+        "replicas": replicas,
+        "transport": transport,
+        "cores": cores,
+        "pools": [{"n": n, "slots": e} for n, e in FLEET_POOLS],
+        "bursts": FLEET_BURSTS,
+        "sessions": m1,
+        "stream_ticks": TICKS,
+        "single_drain_s": t1,
+        "fleet_drain_s": tr,
+        "sessions_per_sec_single": (ticks1 / t1) / REF_STREAM_TICKS,
+        "sessions_per_sec_fleet": (ticksr / tr) / REF_STREAM_TICKS,
+        "fleet_speedup": speedup,
+        "predicted_speedup": predicted_speedup,
+        "planner_host_scale": host_scale,
+        "planner_predicted_single_drain_s": pred_t1,
+        "planner_vs_measured_err": planner_err,
+        "planner_fit_err": planner.prediction_error()["max"],
+    }
+    print_fn(
+        csv_row(
+            f"serve_fleet_x{replicas}",
+            tr * 1e6,
+            f"speedup_{speedup:.2f}x_predicted_{predicted_speedup:.1f}x"
+            f"_planner_err_{planner_err:.0%}",
+        )
+    )
+    return fleet
+
+
+def fleet_smoke(replicas: int = 2, min_ratio: float = 1.5, print_fn=print) -> bool:
+    """CI fleet smoke: bursty mixed-N workload through the ASYNC front-end
+    (admission control in the loop), 2 replicas vs 1. Asserts the fleet
+    drains cleanly everywhere; asserts the >= min_ratio session-throughput
+    scaling only where the host has the cores to show it (replicas
+    time-share cores, so a 1-core runner caps the honest ratio at ~1.0)."""
+    import asyncio
+
+    from repro.serve.fleet import FleetFrontend, FleetRouter, start_fleet, usable_cores
+
+    pools = ((16, 8), (32, 8))
+    sessions_pp = 12
+    cores = usable_cores()
+    transport = "process" if cores > 1 else "local"
+
+    async def serve(n_replicas: int) -> tuple:
+        rng = np.random.default_rng(11)
+        router = FleetRouter()
+        for n, e in pools:
+            for r in start_fleet(
+                n_replicas, transport, n=n, num_slots=e,
+                hold_steps=HOLD_STEPS, chunk_ticks=CHUNK_TICKS,
+            ):
+                router.add_replica(r)
+        async with FleetFrontend(router) as fleet:
+            # warm compiles out of the timed region
+            for n, _ in pools:
+                await fleet.submit_stream(
+                    n, rng.uniform(0.0, 0.5, (CHUNK_TICKS, 1)).astype(np.float32),
+                    collect_states=False,
+                )
+            await fleet.drain_results()
+            t0 = time.perf_counter()
+            for _ in range(2):  # two bursts
+                for n, _ in pools:
+                    for _ in range(sessions_pp):
+                        await fleet.submit_stream(
+                            n,
+                            rng.uniform(0.0, 0.5, (TICKS, 1)).astype(np.float32),
+                            collect_states=False,
+                        )
+            results = await fleet.drain_results()
+            dt = time.perf_counter() - t0
+        return dt, len(results)
+
+    want = 2 * sessions_pp * len(pools)
+    t1, m1 = asyncio.run(serve(1))
+    tr, mr = asyncio.run(serve(replicas))
+    clean = m1 == want and mr == want
+    ratio = (mr / tr) / (m1 / t1)
+    print_fn(
+        f"fleet smoke: {replicas} replicas vs 1 -> {ratio:.2f}x session "
+        f"throughput ({cores} cores, transport={transport}); "
+        f"drained {mr}/{want} and {m1}/{want}"
+    )
+    ok = clean
+    if cores >= 2:
+        ok = ok and ratio >= min_ratio
+    else:
+        print_fn(
+            f"fleet smoke: single-core host — ratio gate (>= {min_ratio}x) "
+            f"skipped, clean-drain gate enforced"
+        )
+    return ok
+
+
+def run(
+    out_path: str = "BENCH_serve.json",
+    quick: bool = False,
+    fleet: bool = True,
+    replicas: int = 2,
+    print_fn=print,
+):
     ns = (16, 128) if quick else NS
     es = (8, 64) if quick else ES
     cells = [bench_cell(n, e, print_fn=print_fn) for n in ns for e in es]
@@ -399,10 +642,30 @@ def run(out_path: str = "BENCH_serve.json", quick: bool = False, print_fn=print)
         "ref_stream_ticks": REF_STREAM_TICKS,
         "cells": cells,
     }
+    if fleet:
+        # planner calibrates from the cells just measured — same run, same
+        # host, so the predicted-vs-measured column is apples to apples
+        payload["fleet"] = bench_fleet(
+            payload, replicas=replicas, print_fn=print_fn
+        )
     with open(out_path, "w") as f:
         json.dump(payload, f, indent=2)
     print_fn(csv_row("serve_json", 0.0, out_path))
     return cells
+
+
+def run_fleet_only(
+    out_path: str = "BENCH_serve.json", replicas: int = 2, print_fn=print
+):
+    """Re-measure ONLY the fleet section, merging into the existing grid
+    file (the 9-cell grid takes minutes; the fleet column takes seconds)."""
+    with open(out_path) as f:
+        payload = json.load(f)
+    payload["fleet"] = bench_fleet(payload, replicas=replicas, print_fn=print_fn)
+    with open(out_path, "w") as f:
+        json.dump(payload, f, indent=2)
+    print_fn(csv_row("serve_json", 0.0, out_path))
+    return payload["fleet"]
 
 
 if __name__ == "__main__":
@@ -411,5 +674,19 @@ if __name__ == "__main__":
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true")
     ap.add_argument("--out", default="BENCH_serve.json")
+    ap.add_argument("--replicas", type=int, default=2)
+    ap.add_argument("--no-fleet", action="store_true",
+                    help="skip the fleet scaling column")
+    ap.add_argument("--fleet-only", action="store_true",
+                    help="re-measure only the fleet column, merge into --out")
+    ap.add_argument("--fleet-smoke", action="store_true",
+                    help="CI gate: 2-replica bursty mixed-N smoke through "
+                         "the async front-end; exits nonzero on failure")
     args = ap.parse_args()
-    run(out_path=args.out, quick=args.quick)
+    if args.fleet_smoke:
+        raise SystemExit(0 if fleet_smoke(replicas=args.replicas) else 1)
+    elif args.fleet_only:
+        run_fleet_only(out_path=args.out, replicas=args.replicas)
+    else:
+        run(out_path=args.out, quick=args.quick, fleet=not args.no_fleet,
+            replicas=args.replicas)

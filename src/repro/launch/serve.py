@@ -19,6 +19,16 @@ the slot count under load through the bucketed plan cache.
     PYTHONPATH=src python -m repro.launch.serve --mode reservoir \
         --n 128 --slots 64 --sessions 96 --ticks 50 --backend auto \
         --chunk-ticks 8 --autoscale --max-slots 256
+
+Fleet mode — `--fleet` lifts reservoir serving onto the fleet tier
+(repro/serve/fleet/): `--replicas R` engine replicas per N-pool behind
+the asyncio front-end, with sessions placed least-loaded, capacity
+planned from BENCH_serve.json when present, and `--transport process`
+putting each replica in its own OS process.
+
+    PYTHONPATH=src python -m repro.launch.serve --mode reservoir --fleet \
+        --replicas 2 --n 16 --slots 8 --sessions 48 --ticks 50 \
+        --transport local
 """
 
 import argparse
@@ -132,6 +142,80 @@ def main_reservoir(args):
           + ")")
 
 
+def main_fleet(args):
+    import asyncio
+    import os
+
+    import numpy as np
+
+    from repro.serve.fleet import (
+        CapacityModel,
+        FleetFrontend,
+        FleetRouter,
+        start_fleet,
+        usable_cores,
+    )
+
+    planner = None
+    bench = args.bench or "BENCH_serve.json"
+    if os.path.exists(bench):
+        planner = CapacityModel.from_bench(bench)
+        err = planner.prediction_error()
+        print(
+            f"planner: calibrated from {bench} "
+            f"(fit err median {err['median']:.0%} max {err['max']:.0%})"
+        )
+    else:
+        print(f"planner: {bench} not found — admission control disabled")
+
+    router = FleetRouter(planner=planner)
+    replicas = start_fleet(
+        args.replicas,
+        transport=args.transport,
+        n=args.n,
+        num_slots=args.slots,
+        hold_steps=args.hold_steps,
+        backend=args.backend,
+        chunk_ticks=args.chunk_ticks,
+        precision=args.precision,
+    )
+    for r in replicas:
+        router.add_replica(r)
+
+    rng = np.random.default_rng(1)
+    streams = [
+        rng.uniform(0.0, 0.5, size=(args.ticks, 1)).astype(np.float32)
+        for _ in range(args.sessions)
+    ]
+
+    async def serve():
+        async with FleetFrontend(router) as fleet:
+            t0 = time.time()
+            for u in streams:
+                await fleet.submit_stream(args.n, u, collect_states=False)
+            results = await fleet.drain_results()
+            dt = time.time() - t0
+            stats = fleet.stats()[args.n]
+            return results, dt, stats
+
+    results, dt, stats = asyncio.run(serve())
+    ticks = sum(s.session_ticks for s in stats)
+    print(
+        f"fleet: {args.replicas}x(N={args.n}, E={args.slots}) "
+        f"transport={args.transport} cores={usable_cores()}"
+    )
+    if planner is not None:
+        pred = planner.fleet_sessions_per_sec(
+            args.n, args.slots, replicas=args.replicas
+        )
+        print(f"planner-predicted capacity: {pred:.1f} ref-sessions/s")
+    print(
+        f"served {len(results)} sessions / {ticks} session-ticks in "
+        f"{dt:.2f}s ({ticks / dt:.1f} ticks/s incl. compile; per-replica "
+        f"occupancy {[round(s.occupancy, 2) for s in stats]})"
+    )
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--mode", choices=["lm", "reservoir"], default="lm")
@@ -163,10 +247,28 @@ def main(argv=None):
                     help="autoscale floor (default: --slots)")
     ap.add_argument("--max-slots", type=int, default=None,
                     help="autoscale ceiling (default: --slots)")
+    # fleet tier (reservoir mode only)
+    ap.add_argument("--fleet", action="store_true",
+                    help="serve through the fleet tier (replicated engines "
+                         "behind the asyncio front-end)")
+    ap.add_argument("--replicas", type=int, default=2,
+                    help="engine replicas in the N-pool (fleet mode)")
+    ap.add_argument("--transport", choices=["local", "process"],
+                    default="local",
+                    help="replica transport: in-process event-loop tasks or "
+                         "one OS process per replica (pipe, chunk batches)")
+    ap.add_argument("--bench", default=None,
+                    help="BENCH_serve.json to calibrate the capacity planner "
+                         "from (default: ./BENCH_serve.json if present)")
     args = ap.parse_args(argv)
 
     if args.mode == "reservoir":
-        main_reservoir(args)
+        if args.fleet:
+            main_fleet(args)
+        else:
+            main_reservoir(args)
+    elif args.fleet:
+        ap.error("--fleet requires --mode reservoir")
     else:
         if not args.arch:
             ap.error("--arch is required in lm mode")

@@ -1,0 +1,42 @@
+"""Fleet serving tier: replicated reservoir engines behind one front door.
+
+The layer ABOVE `ReservoirEngine`: replicas (`replica.py`) each wrap one
+engine in-process or in a spawned worker process, the router
+(`router.py`) places sessions onto per-N replica pools with sticky
+affinity and bit-exact checkpoint migration, the asyncio front-end
+(`frontend.py`) adds submit/push/drain verbs with planner-driven
+admission control, and the capacity planner (`planner.py`) turns the
+measured BENCH_serve.json grid into an analytical
+`sessions_per_sec(N, E, ...)` model for sizing all of it.
+
+Rule of thumb (docs/ARCHITECTURE.md): execution capabilities are
+ExecPlan fields; PLACEMENT — which replica, which pool, how many — is
+fleet fields.
+"""
+
+from .frontend import AdmissionError, FleetFrontend
+from .planner import CapacityModel, FleetPlan, ReplicaSpec, WorkloadClass, usable_cores
+from .replica import (
+    LocalReplica,
+    ProcessReplica,
+    ReplicaError,
+    make_engine,
+    start_fleet,
+)
+from .router import FleetRouter
+
+__all__ = [
+    "AdmissionError",
+    "CapacityModel",
+    "FleetFrontend",
+    "FleetPlan",
+    "FleetRouter",
+    "LocalReplica",
+    "ProcessReplica",
+    "ReplicaError",
+    "ReplicaSpec",
+    "WorkloadClass",
+    "make_engine",
+    "start_fleet",
+    "usable_cores",
+]

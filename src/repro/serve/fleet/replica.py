@@ -1,0 +1,306 @@
+"""Fleet replica workers: one `ReservoirEngine` each, uniform RPC surface.
+
+Two transports, one protocol:
+
+- `LocalReplica` wraps the engine in-process — zero copy, deterministic,
+  the transport for correctness tests and single-core hosts (where extra
+  processes only add context switches).
+- `ProcessReplica` spawns the engine into its own OS process and speaks
+  the same protocol over a `multiprocessing` pipe. Commands are
+  CHUNK-GRANULARITY: the parent says "run_for(k)" and the child advances
+  up to k pipeline chunks before replying, so the pipe carries one small
+  message per chunk, never per tick. `run_for_async`/`run_for_wait` split
+  the round trip so a router can launch every replica's chunk first and
+  collect second — on a multi-core host the children genuinely overlap.
+
+Everything that crosses the pipe is numpy/scalars (StreamSession input
+streams are host numpy by engine contract; `SessionCheckpoint` is
+host-only by construction), so a session can be submitted to either
+transport, checkpointed out of one replica and restored into another —
+process boundaries included — bit-identically.
+
+The engine factory handed to a replica must be a module-level callable
+(`make_engine` below is the default) because the spawn context pickles it
+into the child.
+"""
+
+from __future__ import annotations
+
+import multiprocessing as mp
+from typing import Any, Dict, List, Optional, Tuple
+
+from repro.core.reservoir import make_reservoir
+from repro.serve.reservoir import (
+    EngineStats,
+    ReservoirEngine,
+    SessionCheckpoint,
+    SessionResult,
+    StreamSession,
+)
+
+
+class ReplicaError(RuntimeError):
+    """An engine-side exception surfaced across the replica transport."""
+
+
+def make_engine(
+    n: int = 16,
+    num_slots: int = 8,
+    n_in: int = 1,
+    hold_steps: int = 5,
+    seed: int = 0,
+    backend: str = "auto",
+    chunk_ticks: int = 8,
+    n_out: int = 1,
+    learn: Optional[str] = None,
+    precision: Optional[str] = None,
+    autoscale: bool = False,
+    min_slots: Optional[int] = None,
+    max_slots: Optional[int] = None,
+) -> ReservoirEngine:
+    """Default replica engine factory (module-level: pickles into spawn)."""
+    res = make_reservoir(n=n, n_in=n_in, hold_steps=hold_steps, seed=seed)
+    return ReservoirEngine(
+        res,
+        num_slots=num_slots,
+        backend=backend,
+        chunk_ticks=chunk_ticks,
+        n_out=n_out,
+        learn=learn,
+        precision=precision,
+        autoscale=autoscale or None,
+        min_slots=min_slots,
+        max_slots=max_slots,
+    )
+
+
+class LocalReplica:
+    """In-process replica: the engine lives on this event loop/thread."""
+
+    transport = "local"
+
+    def __init__(self, factory=make_engine, **engine_kw):
+        self.engine = factory(**engine_kw)
+        self.n = self.engine.res.n
+        self.num_slots = self.engine.num_slots
+        # live sessions this replica currently owns (admission signal for
+        # the router's least-loaded placement)
+        self.pending = 0
+        self._last_worked = False
+
+    # -- session lifecycle --------------------------------------------------
+
+    def submit(self, session: StreamSession) -> None:
+        self.engine.submit(session)
+        self.pending += 1
+
+    def append_ticks(self, sid, u, targets=None) -> None:
+        self.engine.append_ticks(sid, u, targets)
+
+    def close_session(self, sid) -> None:
+        self.engine.close_session(sid)
+
+    def checkpoint_session(self, sid) -> SessionCheckpoint:
+        ckpt = self.engine.checkpoint_session(sid)
+        self.pending -= 1
+        return ckpt
+
+    def restore_session(self, ckpt: SessionCheckpoint) -> None:
+        self.engine.restore_session(ckpt)
+        self.pending += 1
+
+    # -- serving ------------------------------------------------------------
+
+    def run_for(self, max_chunks: int = 1) -> bool:
+        """Advance up to max_chunks pipeline chunks; True if any ran."""
+        worked = False
+        for _ in range(max_chunks):
+            if not self.engine.step_chunk():
+                break
+            worked = True
+        return worked
+
+    # split-phase pump (uniform with ProcessReplica; local = immediate)
+    def run_for_async(self, max_chunks: int = 1) -> None:
+        self._last_worked = self.run_for(max_chunks)
+
+    def run_for_wait(self) -> bool:
+        return self._last_worked
+
+    def results(self) -> List[SessionResult]:
+        out = list(self.engine.pop_results().values())
+        self.pending -= len(out)
+        return out
+
+    def stats(self) -> EngineStats:
+        return self.engine.stats()
+
+    def close(self) -> None:
+        pass
+
+
+# ---------------------------------------------------------------------------
+# process transport
+# ---------------------------------------------------------------------------
+
+
+def _child_main(conn, factory, engine_kw: Dict[str, Any]) -> None:
+    """Replica child: build the engine, answer one reply per command."""
+    try:
+        engine = factory(**engine_kw)
+        conn.send(("ok", None))  # ready handshake (after JAX import/compile)
+    except Exception as e:  # noqa: BLE001 — report, don't die silently
+        conn.send(("err", f"{type(e).__name__}: {e}"))
+        return
+    while True:
+        op, *args = conn.recv()
+        try:
+            if op == "run_for":
+                worked = False
+                for _ in range(args[0]):
+                    if not engine.step_chunk():
+                        break
+                    worked = True
+                conn.send(("ok", worked))
+            elif op == "submit":
+                engine.submit(args[0])
+                conn.send(("ok", None))
+            elif op == "results":
+                conn.send(("ok", list(engine.pop_results().values())))
+            elif op == "append":
+                engine.append_ticks(*args)
+                conn.send(("ok", None))
+            elif op == "close_session":
+                engine.close_session(args[0])
+                conn.send(("ok", None))
+            elif op == "checkpoint":
+                conn.send(("ok", engine.checkpoint_session(args[0])))
+            elif op == "restore":
+                engine.restore_session(args[0])
+                conn.send(("ok", None))
+            elif op == "stats":
+                conn.send(("ok", engine.stats()))
+            elif op == "stop":
+                conn.send(("ok", None))
+                return
+            else:
+                conn.send(("err", f"unknown op {op!r}"))
+        except Exception as e:  # noqa: BLE001 — RPC error channel
+            conn.send(("err", f"{type(e).__name__}: {e}"))
+
+
+class ProcessReplica:
+    """A replica in its own OS process, driven over a pipe.
+
+    Spawn (not fork): JAX runtimes don't survive forking, and spawn gives
+    the child a clean import so parent and child each own their XLA
+    threadpool. Construction blocks until the child's engine is built —
+    callers should start several replicas before waiting if they want the
+    compiles to overlap (see `start_fleet`)."""
+
+    transport = "process"
+
+    def __init__(self, factory=make_engine, _defer_ready: bool = False, **engine_kw):
+        ctx = mp.get_context("spawn")
+        self._conn, child_conn = ctx.Pipe()
+        self._proc = ctx.Process(
+            target=_child_main,
+            args=(child_conn, factory, engine_kw),
+            daemon=True,
+        )
+        self._proc.start()
+        child_conn.close()
+        self.n = engine_kw.get("n", 16)
+        self.num_slots = engine_kw.get("num_slots", 8)
+        self.pending = 0
+        self._ready = False
+        if not _defer_ready:
+            self.wait_ready()
+
+    def wait_ready(self) -> None:
+        if not self._ready:
+            self._recv()  # the build handshake
+            self._ready = True
+
+    def _recv(self):
+        status, payload = self._conn.recv()
+        if status == "err":
+            raise ReplicaError(payload)
+        return payload
+
+    def _rpc(self, *msg):
+        self._conn.send(msg)
+        return self._recv()
+
+    # -- session lifecycle --------------------------------------------------
+
+    def submit(self, session: StreamSession) -> None:
+        self._rpc("submit", session)
+        self.pending += 1
+
+    def append_ticks(self, sid, u, targets=None) -> None:
+        self._rpc("append", sid, u, targets)
+
+    def close_session(self, sid) -> None:
+        self._rpc("close_session", sid)
+
+    def checkpoint_session(self, sid) -> SessionCheckpoint:
+        ckpt = self._rpc("checkpoint", sid)
+        self.pending -= 1
+        return ckpt
+
+    def restore_session(self, ckpt: SessionCheckpoint) -> None:
+        self._rpc("restore", ckpt)
+        self.pending += 1
+
+    # -- serving ------------------------------------------------------------
+
+    def run_for(self, max_chunks: int = 1) -> bool:
+        return self._rpc("run_for", max_chunks)
+
+    def run_for_async(self, max_chunks: int = 1) -> None:
+        self._conn.send(("run_for", max_chunks))
+
+    def run_for_wait(self) -> bool:
+        return self._recv()
+
+    def results(self) -> List[SessionResult]:
+        out = self._rpc("results")
+        self.pending -= len(out)
+        return out
+
+    def stats(self) -> EngineStats:
+        return self._rpc("stats")
+
+    def close(self) -> None:
+        if self._proc.is_alive():
+            try:
+                self._rpc("stop")
+            except (EOFError, BrokenPipeError, OSError):
+                pass
+            self._proc.join(timeout=10)
+            if self._proc.is_alive():
+                self._proc.terminate()
+        self._conn.close()
+
+
+def start_fleet(
+    count: int,
+    transport: str = "local",
+    factory=make_engine,
+    **engine_kw,
+) -> List[Any]:
+    """Start `count` replicas of one engine config. Process replicas are
+    all spawned before any ready-handshake is awaited, so their JAX
+    imports/compiles overlap instead of serializing."""
+    if transport == "local":
+        return [LocalReplica(factory, **engine_kw) for _ in range(count)]
+    if transport == "process":
+        reps = [
+            ProcessReplica(factory, _defer_ready=True, **engine_kw)
+            for _ in range(count)
+        ]
+        for r in reps:
+            r.wait_ready()
+        return reps
+    raise ValueError(f"transport must be 'local' or 'process'; got {transport!r}")

@@ -1,0 +1,159 @@
+"""Session router for the fleet tier: per-bucket pools + sticky affinity.
+
+Placement happens at TWO granularities, and the split is the point:
+
+- POOLS are keyed by reservoir size N. A replica only ever serves one
+  compiled spec, so an N=16 tenant physically cannot queue behind an
+  N=1024 tenant — head-of-line isolation is structural, not scheduled.
+- WITHIN a pool, a new session goes to the least-loaded replica (live
+  `pending` count), and every later interaction with that session —
+  pushed ticks, close, results — follows the AFFINITY map to the replica
+  that owns its slot state.
+
+Affinity is sticky but not permanent: `migrate(sid)` checkpoints the
+session out of its replica (`ReservoirEngine.checkpoint_session`, which
+snapshots the SlotStore magnetization column and in-flight RLS P/Wl
+lanes) and restores it into another, after which the stream continues
+bit-identically — the mechanism behind drain-for-maintenance and
+rebalancing, and it works across process transports because checkpoints
+are host-only numpy.
+
+The router is transport-agnostic and synchronous; `fleet.frontend` wraps
+it in asyncio and adds planner-driven admission control.
+"""
+
+from __future__ import annotations
+
+import itertools
+from typing import Dict, List, Optional
+
+from repro.serve.reservoir import SessionResult, StreamSession
+
+from .planner import CapacityModel
+
+
+class FleetRouter:
+    def __init__(self, planner: Optional[CapacityModel] = None):
+        self.planner = planner
+        self.pools: Dict[int, List] = {}  # reservoir size N -> replicas
+        self._affinity: Dict[int, object] = {}  # sid -> owning replica
+        self._sids = itertools.count(1)
+
+    # -- fleet membership ---------------------------------------------------
+
+    def add_replica(self, replica) -> None:
+        self.pools.setdefault(replica.n, []).append(replica)
+
+    def replicas(self) -> List:
+        return [r for pool in self.pools.values() for r in pool]
+
+    def pool(self, n: int) -> List:
+        if n not in self.pools:
+            raise KeyError(
+                f"no replica pool for reservoir size N={n}; pools exist for "
+                f"{sorted(self.pools)}"
+            )
+        return self.pools[n]
+
+    # -- placement ----------------------------------------------------------
+
+    def next_sid(self) -> int:
+        return next(self._sids)
+
+    def select(self, n: int):
+        """Least-loaded replica in the N-pool (live pending count)."""
+        return min(self.pool(n), key=lambda r: r.pending)
+
+    def submit(self, n: int, session: StreamSession):
+        """Place a session in the N-pool; returns the owning replica."""
+        if session.sid in self._affinity:
+            raise ValueError(f"sid {session.sid} is already being served")
+        replica = self.select(n)
+        replica.submit(session)
+        self._affinity[session.sid] = replica
+        return replica
+
+    def replica_for(self, sid: int):
+        try:
+            return self._affinity[sid]
+        except KeyError:
+            raise KeyError(f"no live session with sid {sid}") from None
+
+    # -- per-session forwarding (affinity-routed) ---------------------------
+
+    def append_ticks(self, sid: int, u, targets=None) -> None:
+        self.replica_for(sid).append_ticks(sid, u, targets)
+
+    def close_session(self, sid: int) -> None:
+        self.replica_for(sid).close_session(sid)
+
+    def migrate(self, sid: int, dst=None):
+        """Move a live session to another replica in its pool (or to an
+        explicit `dst`, which may live in a different process). The
+        checkpoint/restore round trip is bit-exact, so the tenant sees one
+        uninterrupted stream. Returns the destination replica."""
+        src = self.replica_for(sid)
+        if dst is None:
+            others = [r for r in self.pool(src.n) if r is not src]
+            if not others:
+                raise ValueError(
+                    f"pool N={src.n} has no other replica to migrate sid "
+                    f"{sid} to"
+                )
+            dst = min(others, key=lambda r: r.pending)
+        if dst is src:
+            return src
+        ckpt = src.checkpoint_session(sid)
+        dst.restore_session(ckpt)
+        self._affinity[sid] = dst
+        return dst
+
+    # -- serving ------------------------------------------------------------
+
+    def run_for(self, max_chunks: int = 1) -> bool:
+        """One overlapped pump round: LAUNCH max_chunks on every replica,
+        then collect. Process replicas genuinely run their chunks in
+        parallel between the send and recv phases; local replicas execute
+        inline. True while any replica still has work."""
+        reps = self.replicas()
+        for r in reps:
+            r.run_for_async(max_chunks)
+        worked = False
+        for r in reps:
+            worked = r.run_for_wait() or worked
+        return worked
+
+    def results(self) -> Dict[int, SessionResult]:
+        """Drain finished results from every replica; affinity entries for
+        finished sessions are released."""
+        out: Dict[int, SessionResult] = {}
+        for r in self.replicas():
+            for res in r.results():
+                out[res.sid] = res
+                self._affinity.pop(res.sid, None)
+        return out
+
+    def drain(self, max_rounds: int = 100_000) -> Dict[int, SessionResult]:
+        """Pump until no replica has work; returns everything that
+        finished. Open (push) streams idle rather than finish — they stay
+        resident and keep their affinity."""
+        out = self.results()
+        for _ in range(max_rounds):
+            if not self.run_for(1):
+                break
+            out.update(self.results())
+        out.update(self.results())
+        return out
+
+    # -- observability ------------------------------------------------------
+
+    def stats(self) -> Dict[int, List]:
+        """Pool -> per-replica EngineStats, the live side of the planner's
+        predicted-vs-measured comparison."""
+        return {
+            n: [r.stats() for r in pool] for n, pool in self.pools.items()
+        }
+
+    def close(self) -> None:
+        for r in self.replicas():
+            r.close()

@@ -63,6 +63,8 @@ advances all of them in lockstep.
 from __future__ import annotations
 
 import dataclasses
+import time
+from collections import deque
 from typing import Dict, List, Optional, Tuple, Union
 
 import jax
@@ -98,6 +100,23 @@ class StreamSession:
     weights (and still drives the static `outputs` column). The trained
     readout, per-tick a-priori predictions, and online NMSE come back on
     the SessionResult.
+
+    Per-session output width: a session's n_out is inferred from its
+    readout / targets column count and may be anything in
+    [1, engine n_out] — the engine pads the narrow session onto its
+    store-width readout lanes with zero columns (RLS weight columns evolve
+    independently given the shared gain, so padding is exact) and slices
+    results back to the session's own width.
+
+    `open=True` marks a PUSH stream: the session stays resident after its
+    current input is exhausted (its lane idles, state frozen) until
+    `engine.append_ticks(sid, ...)` supplies more rows or
+    `engine.close_session(sid)` lets it finish. The fleet front-end's
+    `push_ticks` rides this.
+
+    `learn_w0` / `learn_P0` resume an RLS recursion mid-stream (weights +
+    inverse-Gram) — the checkpoint/migration path; fresh sessions leave
+    them None (`readout` alone warm-starts weights with a fresh P).
     """
 
     sid: int
@@ -108,6 +127,9 @@ class StreamSession:
     collect_states: bool = True
     targets: Optional[np.ndarray] = None  # (T, n_out) online-learning targets
     learn_washout: int = 0  # ticks before the first RLS update
+    open: bool = False  # True: idle (don't finish) when input runs dry
+    learn_w0: Optional[np.ndarray] = None  # (N+1, n_out) RLS weight resume
+    learn_P0: Optional[np.ndarray] = None  # (N+1, N+1) inverse-Gram resume
 
     # engine-internal bookkeeping (set on admit)
     _slot: int = dataclasses.field(default=-1, repr=False)
@@ -117,6 +139,8 @@ class StreamSession:
     _preds: list = dataclasses.field(default_factory=list, repr=False)
     _admitted_tick: int = dataclasses.field(default=-1, repr=False)
     _finished_tick: int = dataclasses.field(default=-1, repr=False)
+    _n_out: int = dataclasses.field(default=1, repr=False)  # session width
+    _restored: bool = dataclasses.field(default=False, repr=False)
 
 
 @dataclasses.dataclass
@@ -135,6 +159,69 @@ class SessionResult:
     predictions: Optional[np.ndarray] = None  # (T, n_out) a-priori per tick
     learned_readout: Optional[Readout] = None  # final trained W (washout=0)
     learn_nmse: Optional[float] = None  # online NMSE after learn_washout
+
+
+@dataclasses.dataclass
+class SessionCheckpoint:
+    """A mid-stream session frozen for migration between engines/replicas.
+
+    Every field is a host (numpy) array or plain scalar, so a checkpoint
+    pickles across a process-transport pipe unchanged. `u_seq`/`targets`
+    carry the FULL stream (targets at the session's own n_out width, not
+    the source store's padded width); `t` marks how far the source engine
+    got; `states`/`outs`/`preds` are the already-harvested prefix. `m` is
+    the magnetization at tick t, and `P`/`Wl` the in-flight RLS learner
+    (None for inference sessions) — restoring injects them back into the
+    destination SlotStore columns, so the resumed stream is bit-identical
+    to one that never moved (tests/test_fleet.py pins this)."""
+
+    sid: int
+    u_seq: np.ndarray  # (T, N_in) full input stream
+    t: int  # ticks already served by the source engine
+    m: Optional[np.ndarray]  # (N, 3) at tick t (None: queued, never ran)
+    params: Optional[STOParams]
+    readout_w: Optional[np.ndarray]  # (N+1, q) static readout, unpadded
+    readout_washout: int
+    collect_states: bool
+    targets: Optional[np.ndarray]  # (T, q) full targets, unpadded
+    learn_washout: int
+    open: bool
+    n_out: int  # the session's own output width q
+    states: Optional[np.ndarray]  # (t, N) harvested prefix
+    outs: Optional[np.ndarray]  # (t, q) harvested prefix
+    preds: Optional[np.ndarray]  # (t, q) harvested prefix
+    P: Optional[np.ndarray]  # (S, S) in-flight RLS inverse-Gram
+    Wl: Optional[np.ndarray]  # (S, q) in-flight learned weights, unpadded
+
+
+@dataclasses.dataclass
+class EngineStats:
+    """One engine's load/latency snapshot — plain scalars only, so it
+    pickles across the replica transport. The fleet router compares these
+    live measurements against the capacity planner's predictions."""
+
+    n: int
+    num_slots: int
+    active: int
+    queued: int
+    backend: str
+    precision: Optional[str]
+    learn: Optional[str]
+    chunk_ticks: int
+    ticks: int
+    session_ticks: int
+    occupancy: float
+    queue_depth: int
+    mean_queue_wait: float
+    grows: int
+    shrinks: int
+    detached: int
+    chunk_median_s: Optional[float]  # median wall time of recent chunks
+    chunks_timed: int
+    ticks_per_sec: Optional[float]  # E * K / chunk_median_s
+
+    def to_dict(self) -> dict:
+        return dataclasses.asdict(self)
 
 
 @dataclasses.dataclass
@@ -373,12 +460,35 @@ class ReservoirEngine:
         self._lmask_dev: Optional[jnp.ndarray] = None
         # the launched-but-unharvested chunk (the pipeline's second buffer)
         self._pending: Optional[_ChunkPlan] = None
+        # wall time of recent step_chunk calls that launched work — the
+        # stats() latency signal the fleet planner checks itself against
+        self._chunk_times: deque = deque(maxlen=128)
 
     @property
     def num_slots(self) -> int:
         return self.store.num_slots
 
     # -- session lifecycle -------------------------------------------------
+
+    def _pad_cols(self, a: np.ndarray, what: str, sid: int) -> np.ndarray:
+        """Zero-pad the trailing (column) axis to the store's n_out width.
+
+        Per-session n_out: a session whose readout/targets carry q < n_out
+        columns rides the store-width lanes with zero columns appended.
+        RLS weight columns update independently given the shared gain
+        (W' = W + k e^T is column-wise), so the padding columns never
+        perturb the real ones and results slice back exactly."""
+        q = a.shape[-1]
+        if q == self.store.n_out:
+            return a
+        if q > self.store.n_out:
+            raise ValueError(
+                f"session {sid}: {what} has {q} output columns but the "
+                f"engine was built with n_out={self.store.n_out}; construct "
+                f"ReservoirEngine(..., n_out={q}) (or wider) to serve it"
+            )
+        pad = np.zeros(a.shape[:-1] + (self.store.n_out - q,), a.dtype)
+        return np.concatenate([a, pad], axis=-1)
 
     def submit(self, session: StreamSession) -> None:
         # xp=np: the engine assembles u blocks host-side, so the series must
@@ -387,16 +497,21 @@ class ReservoirEngine:
         u = coerce_input_series(
             session.u_seq, self.store.n_in, self.store.dtype, xp=np
         )
-        if u.shape[0] == 0:
+        if u.shape[0] == 0 and not session.open:
             raise ValueError(f"session {session.sid}: empty input stream")
         session.u_seq = u
+        n_out = None  # the session's own width, inferred below
         if session.readout is not None:
             w = np.asarray(session.readout.w_out)
-            if w.shape != (self.store.n + 1, self.store.n_out):
+            if w.ndim != 2 or w.shape[0] != self.store.n + 1 or not (
+                1 <= w.shape[1] <= self.store.n_out
+            ):
                 raise ValueError(
-                    f"session {session.sid}: readout w_out shape {w.shape} "
-                    f"!= ({self.store.n + 1}, {self.store.n_out})"
+                    f"session {session.sid}: readout w_out shape "
+                    f"{tuple(w.shape)} must be ({self.store.n + 1}, q) with "
+                    f"1 <= q <= {self.store.n_out} (the engine's n_out)"
                 )
+            n_out = w.shape[1]
         if session.targets is not None:
             if self.learn is None:
                 raise ValueError(
@@ -407,14 +522,27 @@ class ReservoirEngine:
             t = np.asarray(session.targets, dtype=self.store.dtype)
             if t.ndim == 1:
                 t = t[:, None]
-            if t.shape != (u.shape[0], self.store.n_out):
+            if (
+                t.ndim != 2
+                or t.shape[0] != u.shape[0]
+                or not (1 <= t.shape[1] <= self.store.n_out)
+            ):
                 raise ValueError(
                     f"session {session.sid}: targets must have shape "
-                    f"({u.shape[0]}, {self.store.n_out}) — one row per input "
-                    f"row — or ({u.shape[0]},) for n_out == 1; got "
-                    f"{tuple(np.shape(session.targets))}"
+                    f"({u.shape[0]}, q) — one row per input row, "
+                    f"1 <= q <= {self.store.n_out} — or ({u.shape[0]},) for "
+                    f"q == 1; got {tuple(np.shape(session.targets))}"
                 )
-            session.targets = t
+            if n_out is not None and t.shape[1] != n_out:
+                raise ValueError(
+                    f"session {session.sid}: targets carry {t.shape[1]} "
+                    f"output columns but the readout carries {n_out}; a "
+                    f"session has ONE output width"
+                )
+            n_out = t.shape[1]
+            # store-width padded targets: chunk assembly copies rows straight
+            # into the (K, E, n_out) block; results slice back to q columns
+            session.targets = self._pad_cols(t, "targets", session.sid)
             if (
                 isinstance(session.learn_washout, bool)
                 or not isinstance(session.learn_washout, int)
@@ -424,6 +552,31 @@ class ReservoirEngine:
                     f"session {session.sid}: learn_washout must be an int "
                     f">= 0; got {session.learn_washout!r}"
                 )
+        session._n_out = self.store.n_out if n_out is None else n_out
+        if session.learn_w0 is not None or session.learn_P0 is not None:
+            if self.learn is None or session.targets is None:
+                raise ValueError(
+                    f"session {session.sid}: learn_w0/learn_P0 resume an RLS "
+                    f"recursion — they require a learning engine and targets"
+                )
+            if session.learn_w0 is not None:
+                w0 = np.asarray(session.learn_w0, self.store.dtype)
+                if w0.shape != (self.store.n + 1, session._n_out):
+                    raise ValueError(
+                        f"session {session.sid}: learn_w0 shape "
+                        f"{tuple(w0.shape)} != ({self.store.n + 1}, "
+                        f"{session._n_out})"
+                    )
+                session.learn_w0 = w0
+            if session.learn_P0 is not None:
+                p0 = np.asarray(session.learn_P0, self.store.dtype)
+                s = self.store.n + 1
+                if p0.shape != (s, s):
+                    raise ValueError(
+                        f"session {session.sid}: learn_P0 shape "
+                        f"{tuple(p0.shape)} != ({s}, {s})"
+                    )
+                session.learn_P0 = p0
         self.scheduler.submit(session)
 
     def _admit_pending(self) -> None:
@@ -432,23 +585,40 @@ class ReservoirEngine:
             return
         items = []
         for slot, sess in placed:
-            w_out = None if sess.readout is None else sess.readout.w_out
-            items.append(
-                (
-                    slot,
-                    sess.m0,
-                    sess.params,
-                    w_out,
-                    # a learning session's provided readout warm-starts its
-                    # learned weight lane (zeros otherwise)
-                    w_out if sess.targets is not None else None,
+            w_out = None
+            if sess.readout is not None:
+                w_out = self._pad_cols(
+                    np.asarray(sess.readout.w_out, self.store.dtype),
+                    "readout",
+                    sess.sid,
                 )
+            # a learning session's lane warm-starts from (priority order)
+            # a migration checkpoint's in-flight weights, else its provided
+            # readout, else zeros; learn_P0 resumes the inverse-Gram
+            w_learn = None
+            p_learn = None
+            if sess.targets is not None:
+                if sess.learn_w0 is not None:
+                    w_learn = self._pad_cols(
+                        sess.learn_w0, "learn_w0", sess.sid
+                    )
+                else:
+                    w_learn = w_out
+                if sess.learn_P0 is not None:
+                    p_learn = sess.learn_P0
+            items.append(
+                (slot, sess.m0, sess.params, w_out, w_learn, p_learn)
             )
             sess._slot = slot
-            sess._t = 0
-            sess._states = []
-            sess._outs = []
-            sess._preds = []
+            if sess._restored:
+                # a migrated session resumes mid-stream: _t and the
+                # harvested prefix were seeded by restore_session()
+                sess._restored = False
+            else:
+                sess._t = 0
+                sess._states = []
+                sess._outs = []
+                sess._preds = []
             sess._admitted_tick = self.tick_count
         self.store.admit_many(items)  # one scatter per array, not per session
 
@@ -483,17 +653,20 @@ class ReservoirEngine:
         learned_readout = None
         learn_nmse = None
         if sess.targets is not None:
+            q = sess._n_out
             predictions = np.concatenate(
                 [np.atleast_2d(np.asarray(p)) for p in sess._preds]
             )
             if learned_w is not None:
-                # washout=0: the trained readout applies to arbitrary states
+                # washout=0: the trained readout applies to arbitrary
+                # states; padding columns (store width > session width)
+                # slice off so the tenant gets back exactly its shape
                 learned_readout = Readout(
-                    w_out=jnp.asarray(learned_w), washout=0
+                    w_out=jnp.asarray(learned_w[:, :q]), washout=0
                 )
             wo = sess.learn_washout
             if predictions.shape[0] > wo:
-                p, y = predictions[wo:], sess.targets[wo:]
+                p, y = predictions[wo:], sess.targets[wo:, :q]
                 learn_nmse = float(
                     np.mean((p - y) ** 2) / (np.var(y) + 1e-30)
                 )
@@ -605,6 +778,11 @@ class ReservoirEngine:
         u = np.zeros((self.store.num_slots, self.store.n_in), self.store.dtype)
         any_readout = False
         for slot, sess in running.items():
+            if sess.open:
+                raise RuntimeError(
+                    "open (push) streams are served on the chunked path "
+                    "only — drive the engine with run() or step_chunk()"
+                )
             u[slot] = sess.u_seq[sess._t]
             any_readout = any_readout or sess.readout is not None
         states_plane = self._advance(jnp.asarray(u))
@@ -620,13 +798,35 @@ class ReservoirEngine:
             if sess.collect_states:
                 sess._states.append(states_plane[:, slot])
             if sess.readout is not None:
-                sess._outs.append(outs[slot])
+                sess._outs.append(outs[slot, : sess._n_out])
             sess._t += 1
             if sess._t >= sess.u_seq.shape[0]:
                 self._retire(slot)
         return True
 
     # -- the pipelined chunked path -----------------------------------------
+
+    def _retire_finishers(self) -> None:
+        """Snapshot + free the slots of sessions that finished inside the
+        launched chunk. store.m already points at that chunk's (possibly
+        still in-flight) result; jnp arrays are immutable, so slicing now
+        snapshots it lazily. One gather snapshots every finisher's final
+        state (and trained Wl column on learning engines); one scatter
+        frees the slots. Results materialize at `_finalize_awaiting`."""
+        if not self._finishing:
+            return
+        slots = [slot for slot, _ in self._finishing]
+        finals = self.store.state_columns(slots)  # (k, N, 3) device, lazy
+        w_finals = (
+            self.store.learn_w_columns(slots)
+            if self.learn is not None
+            else None
+        )
+        for slot, sess in self._finishing:
+            self.scheduler.retire(slot)
+        self._awaiting = (self._finishing, finals, w_finals)
+        self.store.retire_many(slots)
+        self._finishing = []
 
     def _assemble_chunk(self) -> Optional[_ChunkPlan]:
         """Host-side boundary work: finalize the previous chunk's finishers,
@@ -637,24 +837,8 @@ class ReservoirEngine:
         pipeline exists for."""
         # 1) sessions that finished inside the launched chunk: their lanes
         # were masked off after their last tick, so the chunk-output column
-        # (store.m is that chunk's — still in flight — result; jnp arrays
-        # are immutable, slicing now snapshots it) IS their final state.
-        # One gather snapshots every finisher; one scatter frees the slots.
-        if self._finishing:
-            slots = [slot for slot, _ in self._finishing]
-            finals = self.store.state_columns(slots)  # (k, N, 3) device, lazy
-            # finishers' trained readouts: snapshot the in-flight Wl columns
-            # the same lazy way before retire_many resets them
-            w_finals = (
-                self.store.learn_w_columns(slots)
-                if self.learn is not None
-                else None
-            )
-            for slot, sess in self._finishing:
-                self.scheduler.retire(slot)
-            self._awaiting = (self._finishing, finals, w_finals)
-            self.store.retire_many(slots)
-            self._finishing = []
+        # IS their final state — snapshot + free in one gather/scatter pair.
+        self._retire_finishers()
 
         # 2) resize at the boundary (slots now reflect retirements)
         if self.autoscale is not None:
@@ -683,6 +867,9 @@ class ReservoirEngine:
         session_ticks = 0
         for slot, sess in running.items():
             t0 = sess._t
+            # an idle OPEN session (input exhausted, not closed) serves
+            # n == 0 ticks: its lane mask stays False for the whole chunk,
+            # so tick_chunk freezes the state until append_ticks refills it
             n = min(k, sess.u_seq.shape[0] - t0)
             u[:n, slot] = sess.u_seq[t0 : t0 + n]
             mask[:n, slot] = True
@@ -691,14 +878,24 @@ class ReservoirEngine:
                 # update only from the session's learn_washout tick onward
                 start = max(0, sess.learn_washout - t0)
                 lmask[start:n, slot] = True
-                any_learn = True
+                # a-priori predictions are recorded even during washout, so
+                # any served tick of a learning session needs the preds block
+                any_learn = any_learn or n > 0
             sess._t = t0 + n
             entries.append((sess, slot, n))
             session_ticks += n
-            any_readout = any_readout or sess.readout is not None
-            if sess._t >= sess.u_seq.shape[0]:
+            any_readout = any_readout or (sess.readout is not None and n > 0)
+            if sess._t >= sess.u_seq.shape[0] and not sess.open:
                 sess._finished_tick = self.tick_count + n
                 self._finishing.append((slot, sess))
+        if session_ticks == 0:
+            # every resident is an idle open stream: nothing to launch, and
+            # the clock must NOT advance (a push stream parked for a million
+            # boundaries would otherwise distort occupancy/throughput
+            # stats). quiesce() drains the in-flight chunk first, so a
+            # just-closed exhausted stream retires with every harvested row.
+            self.quiesce()
+            return None
         self.scheduler.on_ticks(k, session_ticks)
         self.tick_count += k
 
@@ -770,35 +967,45 @@ class ReservoirEngine:
         )
         # .copy(): a bare slice is a VIEW pinning the whole (K, N, E) block
         # for the session's lifetime — a long-running collector would retain
-        # every chunk block it ever touched instead of its own lane
+        # every chunk block it ever touched instead of its own lane.
+        # Columns beyond the session's own n_out are padding lanes — sliced
+        # off here so accumulators stay at session width.
         for sess, slot, n in plan.entries:
+            if n == 0:  # idle open stream — nothing served this chunk
+                continue
             if sess.collect_states:
                 sess._states.append(states_np[:n, :, slot].copy())  # (n, N)
             if sess.readout is not None:
-                sess._outs.append(outs_np[:n, slot].copy())  # (n, n_out)
+                sess._outs.append(outs_np[:n, slot, : sess._n_out].copy())
             if preds_np is not None and sess.targets is not None:
-                sess._preds.append(preds_np[:n, slot].copy())  # (n, n_out)
+                sess._preds.append(preds_np[:n, slot, : sess._n_out].copy())
         # sessions retired at the last boundary: their final chunk is now
-        # harvested, so their results are complete (final states arrive as
-        # one bulk transfer, handed out as zero-copy row views)
-        if self._awaiting is not None:
-            finishers, finals, w_finals = self._awaiting
-            finals_np = np.asarray(finals)  # (k, N, 3)
-            w_np = np.asarray(w_finals) if w_finals is not None else None
-            for i, (slot, sess) in enumerate(finishers):
-                # .copy() for the same reason as above: a row view would
-                # pin the whole boundary's finals block per retained result
-                self._record_result(
-                    sess,
-                    slot,
-                    finals_np[i].copy(),
-                    learned_w=(
-                        w_np[i].copy()
-                        if w_np is not None and sess.targets is not None
-                        else None
-                    ),
-                )
-            self._awaiting = None
+        # harvested, so their results are complete
+        self._finalize_awaiting()
+
+    def _finalize_awaiting(self) -> None:
+        """Record results for sessions retired at the previous boundary
+        (their final states/weights arrive as one bulk transfer, handed out
+        as copied rows). Safe to call with nothing awaiting."""
+        if self._awaiting is None:
+            return
+        finishers, finals, w_finals = self._awaiting
+        finals_np = np.asarray(finals)  # (k, N, 3)
+        w_np = np.asarray(w_finals) if w_finals is not None else None
+        for i, (slot, sess) in enumerate(finishers):
+            # .copy(): a row view would pin the whole boundary's finals
+            # block per retained result
+            self._record_result(
+                sess,
+                slot,
+                finals_np[i].copy(),
+                learned_w=(
+                    w_np[i].copy()
+                    if w_np is not None and sess.targets is not None
+                    else None
+                ),
+            )
+        self._awaiting = None
 
     def step_chunk(self) -> bool:
         """Advance the pipeline by one chunk. Returns False when drained.
@@ -811,12 +1018,19 @@ class ReservoirEngine:
         control back to `run()` — so no launched chunk is left unharvested;
         don't interleave with per-tick `step()` while a chunk is in flight.
         """
+        t0 = time.perf_counter()
         plan = self._assemble_chunk()
         if plan is not None:
             self._launch_chunk(plan)
         if self._pending is not None:
             self._harvest_chunk(self._pending)
+        else:
+            # nothing in flight, but the boundary may still have snapshot
+            # finals to hand out (all-idle open streams after a finisher)
+            self._finalize_awaiting()
         self._pending = plan
+        if plan is not None:
+            self._chunk_times.append(time.perf_counter() - t0)
         return plan is not None
 
     def run(
@@ -835,3 +1049,210 @@ class ReservoirEngine:
         while self.step_chunk():
             pass
         return self.results
+
+    # -- fleet lifecycle: push streams, checkpoint/migration, stats --------
+
+    def _find_session(self, sid: int) -> Tuple[Optional[int], StreamSession]:
+        """Locate a live session by sid: (slot, session) if resident,
+        (None, session) if still queued. Raises KeyError when unknown
+        (finished sessions live in `results`, not here)."""
+        for slot, sess in self.scheduler.running.items():
+            if sess.sid == sid:
+                return slot, sess
+        for sess in self.scheduler.queue:
+            if sess.sid == sid:
+                return None, sess
+        raise KeyError(f"no live session with sid {sid}")
+
+    def append_ticks(
+        self,
+        sid: int,
+        u: np.ndarray,
+        targets: Optional[np.ndarray] = None,
+    ) -> None:
+        """Feed more input rows to an OPEN (push) stream.
+
+        The rows join the session's stream at its tail; an idle lane picks
+        them up at the next chunk boundary. Learning sessions must push
+        matching target rows (and inference sessions must not)."""
+        _, sess = self._find_session(sid)
+        if not sess.open:
+            raise ValueError(
+                f"session {sid} is not an open stream — submit it with "
+                f"open=True to push ticks"
+            )
+        u = coerce_input_series(u, self.store.n_in, self.store.dtype, xp=np)
+        if sess.targets is not None:
+            if targets is None:
+                raise ValueError(
+                    f"session {sid} is a learning stream — push target rows "
+                    f"alongside the inputs"
+                )
+            t = np.asarray(targets, dtype=self.store.dtype)
+            if t.ndim == 1:
+                t = t[:, None]
+            if t.shape != (u.shape[0], sess._n_out):
+                raise ValueError(
+                    f"session {sid}: pushed targets shape "
+                    f"{tuple(np.shape(targets))} != ({u.shape[0]}, "
+                    f"{sess._n_out})"
+                )
+            sess.targets = np.concatenate(
+                [sess.targets, self._pad_cols(t, "targets", sid)]
+            )
+        elif targets is not None:
+            raise ValueError(
+                f"session {sid} is inference-only; it cannot take targets"
+            )
+        sess.u_seq = np.concatenate([sess.u_seq, u])
+
+    def close_session(self, sid: int) -> None:
+        """End an open stream: once its pushed input is exhausted the
+        session finishes like any closed-stream session (result in
+        `results`/`pop_results`)."""
+        _, sess = self._find_session(sid)
+        sess.open = False
+
+    def quiesce(self) -> None:
+        """Drain the pipeline without launching new work: harvest the
+        in-flight chunk, retire + record any finishers. Afterwards the
+        SlotStore columns are current for every resident session — the
+        precondition for `checkpoint_session`. Serving resumes with the
+        next `step_chunk()`/`run()`."""
+        if self._pending is not None:
+            self._harvest_chunk(self._pending)
+            self._pending = None
+        self._retire_finishers()
+        self._finalize_awaiting()
+
+    def checkpoint_session(self, sid: int) -> SessionCheckpoint:
+        """Freeze a live session into a host-side SessionCheckpoint and
+        remove it from this engine (detach — not a retirement; no
+        SessionResult is recorded here). The checkpoint restores into any
+        engine compiled for the same reservoir spec via
+        `restore_session`, resuming bit-identically on the scan backend.
+        Quiesces the pipeline first."""
+        self.quiesce()
+        slot, sess = self._find_session(sid)
+        q = sess._n_out
+        learning = self.learn is not None and sess.targets is not None
+        if slot is None:
+            # still queued: nothing on device yet
+            self.scheduler.remove_queued(sess)
+            m = None if sess.m0 is None else np.asarray(sess.m0)
+            P = Wl = None
+        else:
+            m = np.asarray(self.store.state_column(slot))
+            if learning:
+                P = np.asarray(self.store.learn_P_columns([slot])[0])
+                # padding columns stay zero for the session's whole life
+                # (zero targets + zero init), so slicing to q is exact
+                Wl = np.asarray(self.store.learn_w_columns([slot])[0])[:, :q]
+            else:
+                P = Wl = None
+            self.scheduler.detach(slot)
+            self.store.retire(slot)
+
+        def cat(blocks):
+            if not blocks:
+                return None
+            return np.concatenate([np.atleast_2d(np.asarray(b)) for b in blocks])
+
+        ckpt = SessionCheckpoint(
+            sid=sess.sid,
+            u_seq=np.asarray(sess.u_seq),
+            t=sess._t,
+            m=m,
+            params=sess.params,
+            readout_w=(
+                None
+                if sess.readout is None
+                else np.asarray(sess.readout.w_out)
+            ),
+            readout_washout=(
+                0 if sess.readout is None else sess.readout.washout
+            ),
+            collect_states=sess.collect_states,
+            targets=(
+                None if sess.targets is None else sess.targets[:, :q].copy()
+            ),
+            learn_washout=sess.learn_washout,
+            open=sess.open,
+            n_out=q,
+            states=cat(sess._states) if sess.collect_states else None,
+            outs=cat(sess._outs) if sess.readout is not None else None,
+            preds=cat(sess._preds) if learning else None,
+            P=P,
+            Wl=Wl,
+        )
+        sess._states = []
+        sess._outs = []
+        sess._preds = []
+        return ckpt
+
+    def restore_session(self, ckpt: SessionCheckpoint) -> StreamSession:
+        """Resume a checkpointed session on THIS engine: re-submit it with
+        the frozen magnetization as m0 and the in-flight RLS learner
+        injected into the destination slot's P/Wl columns, then seed the
+        already-served prefix so the final SessionResult covers the whole
+        stream. The resumed stream is bit-identical to one that never
+        migrated (scan backend; tests/test_fleet.py)."""
+        readout = None
+        if ckpt.readout_w is not None:
+            readout = Readout(
+                w_out=jnp.asarray(ckpt.readout_w),
+                washout=ckpt.readout_washout,
+            )
+        sess = StreamSession(
+            sid=ckpt.sid,
+            u_seq=ckpt.u_seq,
+            params=ckpt.params,
+            readout=readout,
+            m0=None if ckpt.m is None else jnp.asarray(ckpt.m),
+            collect_states=ckpt.collect_states,
+            targets=ckpt.targets,
+            learn_washout=ckpt.learn_washout,
+            open=ckpt.open,
+            learn_w0=ckpt.Wl,
+            learn_P0=ckpt.P,
+        )
+        self.submit(sess)  # validates + pads against THIS engine's store
+        if ckpt.t:
+            sess._t = ckpt.t
+            sess._states = [] if ckpt.states is None else [ckpt.states]
+            sess._outs = [] if ckpt.outs is None else [ckpt.outs]
+            sess._preds = [] if ckpt.preds is None else [ckpt.preds]
+            sess._restored = True  # _admit_pending keeps the seeded prefix
+        return sess
+
+    def stats(self) -> EngineStats:
+        """Load/latency snapshot for the fleet planner and router — plain
+        scalars only (pickles across the replica transport)."""
+        sched = self.scheduler
+        timed = sorted(self._chunk_times)
+        median = timed[len(timed) // 2] if timed else None
+        return EngineStats(
+            n=self.res.n,
+            num_slots=self.num_slots,
+            active=len(sched.running),
+            queued=len(sched.queue),
+            backend=self.backend,
+            precision=self.precision,
+            learn=self.learn,
+            chunk_ticks=self.chunk_ticks,
+            ticks=sched.stats.ticks,
+            session_ticks=sched.stats.session_ticks,
+            occupancy=sched.occupancy(),
+            queue_depth=sched.queue_depth(),
+            mean_queue_wait=sched.mean_queue_wait(),
+            grows=sched.stats.grows,
+            shrinks=sched.stats.shrinks,
+            detached=sched.stats.detached,
+            chunk_median_s=median,
+            chunks_timed=len(timed),
+            ticks_per_sec=(
+                None
+                if not median
+                else self.num_slots * self.chunk_ticks / median
+            ),
+        )

@@ -41,6 +41,9 @@ class SchedulerStats:
     # autoscale events applied via remap()
     grows: int = 0
     shrinks: int = 0
+    # sessions detached mid-stream (fleet checkpoint/migration) — they
+    # leave without counting as retired, so occupancy stays honest
+    detached: int = 0
 
 
 class SlotScheduler:
@@ -82,6 +85,25 @@ class SlotScheduler:
         session = self.running.pop(slot)
         self.stats.retired += 1
         return session
+
+    def detach(self, slot: int) -> object:
+        """Remove a RUNNING session without retiring it: the fleet tier's
+        checkpoint/migration path — the session continues elsewhere, so it
+        is neither finished nor abandoned."""
+        session = self.running.pop(slot)
+        self.stats.detached += 1
+        return session
+
+    def remove_queued(self, session) -> bool:
+        """Drop a not-yet-admitted session from the queue (migration of a
+        queued session is just moving it). Returns False if absent."""
+        try:
+            self.queue.remove(session)
+        except ValueError:
+            return False
+        self._enq_tick.pop(id(session), None)
+        self.stats.detached += 1
+        return True
 
     def remap(self, slot_map: Dict[int, int], num_slots: int) -> None:
         """Apply an autoscale resize: running sessions move old -> new slot."""

@@ -111,8 +111,9 @@ class SlotStore:
         params: Optional[STOParams] = None,  # per-tenant physics
         w_out: Optional[jnp.ndarray] = None,  # (N+1, n_out) trained readout
         learn_w0: Optional[jnp.ndarray] = None,  # (N+1, n_out) RLS warm start
+        learn_P0: Optional[jnp.ndarray] = None,  # (S, S) inverse-Gram resume
     ) -> None:
-        self.admit_many([(slot, m0, params, w_out, learn_w0)])
+        self.admit_many([(slot, m0, params, w_out, learn_w0, learn_P0)])
 
     def admit_many(
         self,
@@ -120,12 +121,13 @@ class SlotStore:
     ) -> None:
         """Splice several sessions in ONE scatter per batched array.
 
-        items: (slot, m0, params, w_out[, learn_w0]) per admission — the
-        whole chunk boundary's admissions become one column write into m,
-        one row write into w_out (and, on learning stores, one each into
-        P / Wl), and host-side numpy column writes for the params.
-        learn_w0 warm-starts the slot's LEARNED weights (defaults to zeros;
-        P always restarts at I / learn_reg)."""
+        items: (slot, m0, params, w_out[, learn_w0[, learn_P0]]) per
+        admission — the whole chunk boundary's admissions become one column
+        write into m, one row write into w_out (and, on learning stores, one
+        each into P / Wl), and host-side numpy column writes for the params.
+        learn_w0 warm-starts the slot's LEARNED weights (defaults to zeros);
+        learn_P0 resumes the slot's inverse-Gram mid-recursion (a migrated
+        session's checkpoint; defaults to the fresh I / learn_reg)."""
         if not items:
             return
         idx = np.empty(len(items), dtype=np.int32)
@@ -133,9 +135,11 @@ class SlotStore:
         w_idx: List[int] = []
         w_rows: List[np.ndarray] = []
         lw_cols: List[np.ndarray] = []
+        lp_cols: List[Optional[np.ndarray]] = []
         for i, item in enumerate(items):
             slot, m0, params, w_out = item[:4]
             learn_w0 = item[4] if len(item) > 4 else None
+            learn_P0 = item[5] if len(item) > 5 else None
             assert not self._active[slot], f"slot {slot} already occupied"
             self._active[slot] = True  # in-loop: a duplicate slot in ONE
             # batch must trip the assert, not silently double-admit
@@ -165,25 +169,48 @@ class SlotStore:
                         self.n_state, self.n_out
                     )
                 )
+                lp_cols.append(
+                    None
+                    if learn_P0 is None
+                    else np.asarray(learn_P0, self.dtype).reshape(
+                        self.n_state, self.n_state
+                    )
+                )
         self.m = self.m.at[:, :, idx].set(jnp.asarray(cols))
         if w_idx:
             self.w_out = self.w_out.at[np.asarray(w_idx)].set(
                 jnp.asarray(np.stack(w_rows))
             )
         if self.learn:
-            self._reset_learn_columns(idx, lw_cols)
+            self._reset_learn_columns(idx, lw_cols, lp_cols)
         self._invalidate()
 
     def _reset_learn_columns(
-        self, idx: np.ndarray, w_cols: Optional[List[np.ndarray]] = None
+        self,
+        idx: np.ndarray,
+        w_cols: Optional[List[np.ndarray]] = None,
+        p_cols: Optional[List[Optional[np.ndarray]]] = None,
     ) -> None:
         """Restart the learning state of several slots in one scatter each:
-        P <- I / learn_reg, Wl <- w_cols (zeros when None/omitted)."""
-        eye = jnp.broadcast_to(
-            (jnp.eye(self.n_state, dtype=self.dtype) / self.learn_reg)[None],
-            (len(idx), self.n_state, self.n_state),
+        P <- p_cols entry (I / learn_reg when None — the fresh-start
+        default; a checkpointed P resumes a migrated recursion), Wl <-
+        w_cols (zeros when None/omitted)."""
+        eye_np = np.asarray(
+            np.eye(self.n_state, dtype=self.dtype) / self.learn_reg
         )
-        self.P = self.P.at[idx].set(eye)
+        if p_cols and any(p is not None for p in p_cols):
+            self.P = self.P.at[idx].set(
+                jnp.asarray(
+                    np.stack([eye_np if p is None else p for p in p_cols])
+                )
+            )
+        else:
+            self.P = self.P.at[idx].set(
+                jnp.broadcast_to(
+                    jnp.asarray(eye_np)[None],
+                    (len(idx), self.n_state, self.n_state),
+                )
+            )
         if w_cols:
             self.Wl = self.Wl.at[idx].set(jnp.asarray(np.stack(w_cols)))
         else:
@@ -303,3 +330,9 @@ class SlotStore:
         gather — the finishers' trained readouts, snapshotted lazily like
         `state_columns` (the slice pins the in-flight chunk's result)."""
         return self.Wl[np.asarray(slots, dtype=np.int32)]
+
+    def learn_P_columns(self, slots: Sequence[int]) -> jnp.ndarray:
+        """(k, S, S) inverse-Gram blocks of several slots in one gather —
+        the checkpoint/migration path snapshots a mid-recursion learner so
+        the destination replica resumes it bit-identically."""
+        return self.P[np.asarray(slots, dtype=np.int32)]
