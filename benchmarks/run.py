@@ -11,10 +11,13 @@ learning engine bit-checked against the fit_rls oracle, and a "mixed"-
 precision serve asserted against the f32 accuracy guardrail — so the CI
 leg exercises plan compilation, dispatch-table loading, precision
 policies, and the serving engine end-to-end without paying for the full
-grids. The smoke grid's WITHIN-RUN ratio columns are the perf gate
-(pipelined/sync, fleet/single-replica, planner predicted-vs-measured);
-absolute sessions/sec is never asserted — the container's ±40% noise
-owns that axis.
+grids — plus the tune subsystem: an LMS engine bit-checked against the
+fit_lms oracle, a washout auto-tune that serves a tuned tenant end-to-end,
+and the lane-vectorized-vs-sequential search ratio. The smoke grid's
+WITHIN-RUN ratio columns are the perf gate (pipelined/sync,
+fleet/single-replica, planner predicted-vs-measured,
+tune vectorized/sequential); absolute sessions/sec is never asserted —
+the container's ±40% noise owns that axis.
 
 ``--save-dispatch-table`` persists measured dispatch choices after the
 run: the fresh serving grid is seeded into the in-process table
@@ -109,6 +112,69 @@ def smoke(save_dispatch_table: bool = False) -> None:
         ), f"smoke: session {sid} learned readout != fit_rls oracle"
     print(f"smoke_serve_learn,0.0,trained_{len(learned)}_bitmatch_oracle")
 
+    # LMS twin of the RLS oracle check: an ExecPlan(learn="lms") engine's
+    # learned weights must bit-match the offline fit_lms oracle (same
+    # normalized-LMS recursion over the harvested states, scan backend)
+    from repro.core.reservoir import fit_lms
+
+    lms_eng = ReservoirEngine(
+        compile_plan(
+            spec, ExecPlan(impl="scan", ensemble=4, chunk_ticks=4, learn="lms",
+                           learn_mu=0.5)
+        )
+    )
+    rng_lms = np.random.default_rng(8)
+    lms_learners = [
+        StreamSession(
+            sid=i,
+            u_seq=rng_lms.uniform(0, 0.5, (10, 1)).astype(np.float32),
+            targets=rng_lms.uniform(0, 0.5, (10, 1)).astype(np.float32),
+            learn_washout=2,
+        )
+        for i in range(5)
+    ]
+    lms_targets = {s.sid: s.targets for s in lms_learners}
+    lms_learned = lms_eng.run(lms_learners)
+    for sid, r in lms_learned.items():
+        oracle = fit_lms(r.states, lms_targets[sid], washout=2, mu=0.5)
+        assert np.array_equal(
+            np.asarray(r.learned_readout.w_out), np.asarray(oracle.w_out)
+        ), f"smoke: session {sid} LMS readout != fit_lms oracle"
+    print(f"smoke_serve_lms,0.0,trained_{len(lms_learned)}_bitmatch_oracle")
+
+    # washout auto-tune end-to-end: a live learning engine probes the
+    # search space on spare lanes during a tenant's washout window, then
+    # serves the tenant with the winning parameters (the tune subsystem's
+    # serving entry point)
+    from repro.core.tasks import narma_series
+    from repro.tune import Float, SearchSpace
+
+    tune_space = SearchSpace({
+        "drive_current": Float(0.5e-3, 4.5e-3),
+        "spectral_radius": Float(0.2, 1.2),
+    })
+    at_eng = ReservoirEngine(
+        compile_plan(
+            spec, ExecPlan(impl="scan", ensemble=4, chunk_ticks=4, learn="rls")
+        )
+    )
+    u_at, y_at = narma_series(60, order=10, seed=3)
+    tenant = StreamSession(sid=1, u_seq=u_at, targets=y_at, learn_washout=20)
+    probe = at_eng.submit_autotuned(tenant, tune_space, budget=4, seed=0)
+    while at_eng.step_chunk():
+        pass
+    served = at_eng.pop_results()
+    assert len(probe.trials) == 4, f"expected 4 probe trials, got {len(probe.trials)}"
+    assert 1 in served and served[1].learn_nmse is not None
+    assert np.isfinite(served[1].learn_nmse)
+    assert float(tenant.params.current) == probe.best.assignment["current"], (
+        "smoke: tenant was not served with the probe winner's parameters"
+    )
+    print(
+        f"smoke_washout_autotune,0.0,probed_{len(probe.trials)}"
+        f"_tenant_nmse_{served[1].learn_nmse:.3f}"
+    )
+
     # mixed-precision serving end-to-end + the accuracy guardrail: the same
     # sessions served by a bit-exact chunk-impl engine and a "mixed" one
     # (reduced-precision coupling/input GEMMs, f32 state carry) must agree
@@ -185,11 +251,28 @@ def smoke(save_dispatch_table: bool = False) -> None:
         f"smoke: planner predicted-vs-measured drain error "
         f"{fl['planner_vs_measured_err']:.0%} exceeds the 50% gate"
     )
+    # tune leg, armed like the fleet gate (within-run ratios, never
+    # absolutes):
+    #   vectorized/sequential >= 6.0 (acceptance target is 10x; the floor
+    #                         leaves the container's ±40% noise band)
+    #   grid winner           identical across lane widths (stable-regime
+    #                         grid — see bench_tune)
+    tu = smoke_bench["tune"]
+    assert tu["tune_speedup"] >= 6.0, (
+        f"smoke: vectorized search only {tu['tune_speedup']:.1f}x over "
+        f"sequential (budget={tu['budget']}, lanes={tu['lanes']}) — below "
+        f"the 6x gate; lane-vectorized tuning has regressed"
+    )
+    assert tu["grid_winner_match"], (
+        f"smoke: grid search winner changed with lane width "
+        f"({tu['grid_winner']}) — vectorized fitness is off"
+    )
     print(
         f"smoke_perf_gates,0.0,pipelined_min_"
         f"{min(c['pipelined_speedup'] for c in smoke_bench['cells']):.1f}x"
         f"_fleet_{ratio:.2f}x_planner_err_"
         f"{fl['planner_vs_measured_err']:.0%}"
+        f"_tune_{tu['tune_speedup']:.1f}x"
     )
     if save_dispatch_table:
         _save_dispatch_table(out)

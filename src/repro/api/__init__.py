@@ -19,8 +19,8 @@ Capabilities are added as ExecPlan fields, not new entry points
 (docs/ARCHITECTURE.md).
 """
 
-from repro.api.spec import SimSpec, make_spec
-from repro.api.plan import ExecPlan, PLAN_IMPLS, PLAN_PRECISIONS
+from repro.api.spec import SimSpec, make_spec, LANE_TUNABLE, STRUCT_TUNABLE
+from repro.api.plan import ExecPlan, PLAN_IMPLS, PLAN_PRECISIONS, PLAN_TUNABLE
 from repro.api.compiled import CompiledSim, compile_plan
 
 __all__ = [
@@ -29,6 +29,9 @@ __all__ = [
     "ExecPlan",
     "PLAN_IMPLS",
     "PLAN_PRECISIONS",
+    "LANE_TUNABLE",
+    "STRUCT_TUNABLE",
+    "PLAN_TUNABLE",
     "CompiledSim",
     "compile_plan",
 ]

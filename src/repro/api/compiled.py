@@ -241,6 +241,41 @@ def _tick_chunk_scan_rls(params_e, w_cp, w_in, m_planes, u_block, mask_block,
     return mT, states, pT, wT, preds
 
 
+def _lms_chunk_tail(states, y_block, lmask_block, w0, mu):
+    """Shared LMS learn tail: states block (K, N, E) -> chunked NLMS update.
+
+    Same feature construction as `_learn_chunk_tail` (node states + bias),
+    applied through `kernels.rls.lms_chunk` — O(S) per tick, no P block.
+    """
+    xb = jnp.concatenate(
+        [
+            jnp.transpose(states, (0, 2, 1)),  # (K, E, N)
+            jnp.ones((states.shape[0], states.shape[2], 1), states.dtype),
+        ],
+        axis=-1,
+    )
+    return krls.lms_chunk(w0, xb, y_block, lmask_block, mu)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("mu", "hold_steps", "tableau_name")
+)
+def _tick_chunk_scan_lms(params_e, w_cp, w_in, m_planes, u_block, mask_block,
+                         y_block, lmask_block, w0, mu, dt, hold_steps,
+                         tableau_name: str = "rk4"):
+    """`_tick_chunk_scan` + the chunked NLMS readout update, one dispatch
+    (ExecPlan.learn="lms", core layout). Identical integration to the
+    inference-only chunk; the learn tail carries only the (E, S, n_out)
+    weight lanes — no inverse-Gram block rides the dispatch.
+    Returns (m' (3, N, E), states (K, N, E), W', preds (K, E, n_out))."""
+    mT, states = _tick_chunk_scan(
+        params_e, w_cp, w_in, m_planes, u_block, mask_block, dt, hold_steps,
+        tableau_name,
+    )
+    wT, preds = _lms_chunk_tail(states, y_block, lmask_block, w0, mu)
+    return mT, states, wT, preds
+
+
 # ---------------------------------------------------------------------------
 # jit'd workers — kernel (3, N, E) planes layout ("ref"/"fused"/"tiled"/"chunk")
 # ---------------------------------------------------------------------------
@@ -385,6 +420,29 @@ def _tick_chunk_planes_rls(
 
 @functools.partial(
     jax.jit,
+    static_argnames=("mu", "dt", "hold_steps", "impl", "n_inner", "block_n", "block_e", "interpret", "precision"),
+)
+def _tick_chunk_planes_lms(
+    params_e, w_cp, w_in, m_planes, u_block, mask_block, y_block, lmask_block,
+    w0, *, mu, dt, hold_steps, impl, n_inner, block_n, block_e, interpret,
+    precision="highest",
+):
+    """`_tick_chunk_planes` + the chunked NLMS readout update, one dispatch
+    (ExecPlan.learn="lms", kernel layout). Like the RLS twin, the learn tail
+    always runs in the state dtype — reduced precision stops at the
+    readout-learning boundary."""
+    mT, states = _tick_chunk_planes(
+        params_e, w_cp, w_in, m_planes, u_block, mask_block,
+        dt=dt, hold_steps=hold_steps, impl=impl, n_inner=n_inner,
+        block_n=block_n, block_e=block_e, interpret=interpret,
+        precision=precision,
+    )
+    wT, preds = _lms_chunk_tail(states, y_block, lmask_block, w0, mu)
+    return mT, states, wT, preds  # (3,N,E), (K,N,E), W', (K,E,n_out)
+
+
+@functools.partial(
+    jax.jit,
     static_argnames=("dt", "n_steps", "save_every", "impl", "n_inner", "block_n", "block_e", "interpret", "precision"),
 )
 def _integrate_planes(
@@ -437,18 +495,26 @@ class CompiledSim:
         # sharded gather dtype (precision subsumes the ad-hoc gather_dtype)
         self.precision = ops.normalize_precision(plan.precision)
         self._gather_dtype = plan.effective_gather_dtype
-        # static: the RLS workers specialize on lam (lam == 1 skips the
-        # per-tick P rescale; see kernels/rls.py)
+        # static: the learn workers specialize on their knob (RLS: lam == 1
+        # skips the per-tick P rescale; LMS: mu is baked into the gain)
         self._lam = float(plan.learn_lam) if plan.learn else None
+        self._mu = float(plan.learn_mu) if plan.learn == "lms" else None
         self._params_cache: Optional[STOParams] = None
 
-    def init_learn_state(self) -> Tuple[jnp.ndarray, jnp.ndarray]:
-        """Fresh (P (E, S, S), W (E, S, n_out=1)) lanes for plan.learn="rls":
-        P = I / learn_reg, W = 0, with S = N + 1 (states + bias). Serving
-        keeps these per-slot (SlotStore); callers driving tick_chunk by hand
-        start here. For n_out != 1, call kernels.rls.rls_init directly."""
+    def init_learn_state(self) -> Tuple[Optional[jnp.ndarray], jnp.ndarray]:
+        """Fresh learn_state lanes for the plan's learner, with S = N + 1
+        (states + bias) and n_out = 1.
+
+        learn="rls": (P (E, S, S) = I / learn_reg, W (E, S, 1) = 0).
+        learn="lms": (None, W (E, S, 1) = 0) — LMS carries no P block; the
+        None slot keeps the (P, W) tuple contract uniform across learners.
+        Serving keeps these per-slot (SlotStore); callers driving tick_chunk
+        by hand start here. For n_out != 1, call kernels.rls.rls_init /
+        lms_init directly."""
         if self.plan.learn is None:
             raise ValueError("init_learn_state() requires ExecPlan(learn=...)")
+        if self.plan.learn == "lms":
+            return None, krls.lms_init(self.e, self.spec.n + 1, 1, self.spec.dtype)
         return krls.rls_init(
             self.e, self.spec.n + 1, 1, self.plan.learn_reg, self.spec.dtype
         )
@@ -759,9 +825,10 @@ class CompiledSim:
             return self._tick_chunk_infer(params_e, m_planes, u_block, mask_block)
         if learn_state is None or targets is None:
             raise ValueError(
-                "ExecPlan(learn='rls') tick_chunk needs learn_state=(P, W) "
-                "and targets (K, E, n_out); for an inference-only chunk "
-                "compile a plan with learn=None"
+                f"ExecPlan(learn={self.plan.learn!r}) tick_chunk needs "
+                "learn_state=(P, W) (P is None for learn='lms') and targets "
+                "(K, E, n_out); for an inference-only chunk compile a plan "
+                "with learn=None"
             )
         p0, w0 = learn_state
         n_out = w0.shape[-1]
@@ -771,18 +838,42 @@ class CompiledSim:
                 f"targets must have shape ({k}, {self.e}, {n_out}) to match "
                 f"the u block and learn_state W lanes; got {tuple(targets.shape)}"
             )
-        if p0.shape != (self.e, spec.n + 1, spec.n + 1) or w0.shape[:2] != (
-            self.e,
-            spec.n + 1,
-        ):
+        if w0.shape[:2] != (self.e, spec.n + 1):
             raise ValueError(
-                f"learn_state must be (P ({self.e}, {spec.n + 1}, "
-                f"{spec.n + 1}), W ({self.e}, {spec.n + 1}, n_out)); got "
-                f"{tuple(p0.shape)}, {tuple(w0.shape)}"
+                f"learn_state W must have shape ({self.e}, {spec.n + 1}, "
+                f"n_out); got {tuple(w0.shape)}"
             )
         lmask_block = (
             mask_block if learn_mask is None else self._coerce_tick_mask(learn_mask, k)
         )
+        if self.plan.learn == "lms":
+            if p0 is not None:
+                raise ValueError(
+                    "learn='lms' carries no P block; pass learn_state="
+                    "(None, W) (see init_learn_state)"
+                )
+            if self.impl == "scan":
+                mT, states, wT, preds = _tick_chunk_scan_lms(
+                    params_e, spec.w_cp, spec.w_in, m_planes, u_block,
+                    mask_block, targets, lmask_block, w0, self._mu,
+                    self._dt_scan, spec.hold_steps, spec.tableau,
+                )
+            else:
+                mT, states, wT, preds = _tick_chunk_planes_lms(
+                    params_e, spec.w_cp, spec.w_in, m_planes, u_block,
+                    mask_block, targets, lmask_block, w0, mu=self._mu,
+                    dt=float(spec.dt), hold_steps=spec.hold_steps,
+                    impl=self.impl, n_inner=self._n_inner,
+                    block_n=self._block_n, block_e=self._block_e,
+                    interpret=self.plan.interpret, precision=self.precision,
+                )
+            return mT, states, (None, wT), preds
+        if p0 is None or p0.shape != (self.e, spec.n + 1, spec.n + 1):
+            raise ValueError(
+                f"learn_state must be (P ({self.e}, {spec.n + 1}, "
+                f"{spec.n + 1}), W ({self.e}, {spec.n + 1}, n_out)); got "
+                f"P={None if p0 is None else tuple(p0.shape)}"
+            )
         if self.plan.sharded:
             m = jnp.transpose(m_planes, (2, 1, 0))  # (E, N, 3)
             m_new, states, pT, wT, preds = _sharded.tick_chunk_sharded_rls(

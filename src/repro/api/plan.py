@@ -58,13 +58,21 @@ Every execution decision that used to be scattered across
              squares update (kernels/rls.py) per tick — per-lane
              (S, S) = (N+1, N+1) inverse-Gram P and (S, n_out) weight
              lanes ride the dispatch alongside the magnetization, zero
-             extra host round-trips. None (default) keeps tick_chunk
-             inference-only (signature and results unchanged).
+             extra host round-trips. "lms" runs normalized least mean
+             squares instead: no P block at all, O(S) state and work per
+             tick — approximate where RLS is exact, but the per-candidate
+             cost the `repro.tune` search lanes want at large S. None
+             (default) keeps tick_chunk inference-only (signature and
+             results unchanged).
   learn_lam  RLS forgetting factor in (0, 1]. 1.0 (default) weights all
              history equally and converges to batch ridge regression;
              < 1 exponentially forgets, tracking non-stationary targets.
+             RLS-only (LMS has no history weighting to forget).
   learn_reg  RLS regularization: P initializes to I / learn_reg, the
-             exact analogue of `fit_ridge`'s `reg`.
+             exact analogue of `fit_ridge`'s `reg`. RLS-only.
+  learn_mu   LMS step size in (0, 2) — the normalized-LMS stability
+             range, input-scale-free because the update divides by
+             ||x||^2. LMS-only.
 """
 
 from __future__ import annotations
@@ -80,8 +88,15 @@ except Exception:  # pragma: no cover
     Mesh = object  # type: ignore
 
 PLAN_IMPLS = ("auto", "scan", "ref", "fused", "tiled", "chunk")
-PLAN_LEARN = (None, "rls")
+PLAN_LEARN = (None, "rls", "lms")
 PLAN_PRECISIONS = (None, "highest", "bf16_coupling", "mixed")
+
+# ExecPlan knobs `repro.tune` may search over. All are STRUCTURAL: each is
+# either a static argument of the jit'd learn workers (learn_lam / learn_mu
+# specialize the compiled update) or folded into per-lane init state once at
+# admit (learn_reg -> P0) — so candidates with different values group into
+# separate compiled engines, like SimSpec.STRUCT_TUNABLE.
+PLAN_TUNABLE = ("learn_lam", "learn_reg", "learn_mu")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -97,9 +112,10 @@ class ExecPlan:
     gather_dtype: Optional[object] = None
     precision: Optional[str] = None  # None/"highest" = bit-exact
     chunk_ticks: int = 1
-    learn: Optional[str] = None  # None = inference-only; "rls" = online readout
+    learn: Optional[str] = None  # None = inference-only; "rls"/"lms" = online
     learn_lam: float = 1.0  # RLS forgetting factor, (0, 1]
     learn_reg: float = 1e-6  # RLS regularization: P0 = I / learn_reg
+    learn_mu: float = 0.5  # NLMS step size, (0, 2)
     interpret: bool = False
     measure: bool = False  # time impl candidates at compile, pin the winner
 
@@ -145,6 +161,13 @@ class ExecPlan:
             raise ValueError(
                 f"learn must be one of {PLAN_LEARN}; got {self.learn!r}"
             )
+        if self.learn == "lms" and self.mesh is not None:
+            raise ValueError(
+                "learn='lms' is not wired through the sharded (mesh) serving "
+                "path yet — its per-lane weight columns would need the "
+                "lane-sharded P-free variant of api/sharded's learn plumbing; "
+                "use learn='rls' on sharded plans"
+            )
         if not isinstance(self.learn_lam, (int, float)) or isinstance(
             self.learn_lam, bool
         ) or not (0.0 < float(self.learn_lam) <= 1.0):
@@ -159,6 +182,26 @@ class ExecPlan:
                 f"learn_reg (RLS regularization; P0 = I / learn_reg) must be "
                 f"> 0; got {self.learn_reg!r}"
             )
+        if not isinstance(self.learn_mu, (int, float)) or isinstance(
+            self.learn_mu, bool
+        ) or not (0.0 < float(self.learn_mu) < 2.0):
+            raise ValueError(
+                f"learn_mu (NLMS step size) must be a float in (0, 2); got "
+                f"{self.learn_mu!r}"
+            )
+
+    def with_knobs(self, **knobs) -> "ExecPlan":
+        """A new plan with named PLAN_TUNABLE knobs applied — the validated
+        write path for parameter search (`repro.tune`). Unknown names raise
+        with the valid list; values re-run the full __post_init__
+        validation (dataclasses.replace)."""
+        for name in knobs:
+            if name not in PLAN_TUNABLE:
+                raise ValueError(
+                    f"unknown plan knob {name!r}; tunable plan knobs: "
+                    f"{PLAN_TUNABLE}"
+                )
+        return dataclasses.replace(self, **knobs)
 
     @property
     def sharded(self) -> bool:

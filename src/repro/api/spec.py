@@ -22,6 +22,22 @@ import jax.numpy as jnp
 from repro.core import constants, coupling
 from repro.core.constants import STOParams
 
+# Knob classification for `repro.tune` (and anything else sweeping specs).
+#
+# LANE_TUNABLE fields vary PER ENSEMBLE LANE of one CompiledSim: they are
+# exactly the STOParams leaves, which every backend reads as (E, 1) columns
+# — so E candidates with different values ride ONE dispatch (a_cp is the
+# effective spectral radius: make_coupling_matrix normalizes W^cp to
+# rho = 1, so the per-lane a_cp scale IS rho of the effective coupling).
+#
+# STRUCT_TUNABLE fields are STRUCTURAL: dt and hold_steps are static
+# arguments of the jit'd workers (dt scales every RK stage, hold_steps is
+# a scan length), so changing them means a different compiled simulator —
+# searches over them group candidates per value (repro.tune compiles one
+# engine per structural combination and sweeps lane knobs within each).
+LANE_TUNABLE = STOParams._fields
+STRUCT_TUNABLE = ("dt", "hold_steps")
+
 
 class SimSpec(NamedTuple):
     """Pure physics description of one reservoir (or an ensemble template).
@@ -64,6 +80,57 @@ class SimSpec(NamedTuple):
             hold_steps=res.hold_steps,
             tableau=tableau,
         )
+
+    def with_knobs(self, **knobs) -> "SimSpec":
+        """A new SimSpec with named knobs applied — the validated write path
+        for parameter search (`repro.tune`).
+
+        Accepts any LANE_TUNABLE name (an STOParams field: current, a_cp,
+        a_in, alpha, ...) as a scalar override of `params`, and any
+        STRUCT_TUNABLE name (dt, hold_steps). Unknown names raise with the
+        full valid list — a typo'd search space fails at construction, not
+        as a silently-ignored knob. Lane overrides require scalar-leaved
+        params (a sweep template); per-lane values ride sessions/plans, not
+        the spec.
+        """
+        lane_kw = {}
+        struct_kw = {}
+        for name, value in knobs.items():
+            if name in LANE_TUNABLE:
+                lane_kw[name] = value
+            elif name in STRUCT_TUNABLE:
+                struct_kw[name] = value
+            else:
+                raise ValueError(
+                    f"unknown spec knob {name!r}; lane-tunable: "
+                    f"{LANE_TUNABLE}, structural: {STRUCT_TUNABLE}"
+                )
+        spec = self
+        if lane_kw:
+            leaf = jnp.asarray(self.params.gamma)
+            if leaf.ndim != 0:
+                raise ValueError(
+                    "with_knobs lane overrides require scalar-leaved params; "
+                    "this spec carries ensemble leaves — apply per-lane "
+                    "values via broadcast_params / session params instead"
+                )
+            dt_ = self.dtype
+            spec = spec._replace(
+                params=self.params._replace(
+                    **{k: jnp.asarray(v, dt_) for k, v in lane_kw.items()}
+                )
+            )
+        if struct_kw:
+            if "hold_steps" in struct_kw:
+                hs = struct_kw["hold_steps"]
+                if isinstance(hs, bool) or not isinstance(hs, int) or hs < 1:
+                    raise ValueError(
+                        f"hold_steps must be an int >= 1; got {hs!r}"
+                    )
+            if "dt" in struct_kw and not float(struct_kw["dt"]) > 0.0:
+                raise ValueError(f"dt must be > 0; got {struct_kw['dt']!r}")
+            spec = spec._replace(**struct_kw)
+        return spec
 
     def to_reservoir(self):
         """Project back to the legacy Reservoir tuple (drops the tableau)."""

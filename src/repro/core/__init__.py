@@ -34,6 +34,7 @@ from repro.core.reservoir import (
     drive,
     fit_ridge,
     fit_rls,
+    fit_lms,
     predict,
     nmse,
     Readout,

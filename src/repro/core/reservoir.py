@@ -257,6 +257,65 @@ def fit_rls(
     return Readout(w_out=w_fin[0], washout=washout)
 
 
+def fit_lms(
+    states: jnp.ndarray,  # (T, N)
+    targets: jnp.ndarray,  # (T, n_out) or (T,)
+    washout: int = 0,
+    mu: float = 0.5,
+    w0: Optional[jnp.ndarray] = None,  # (N + 1, n_out) warm start
+) -> Readout:
+    """Normalized-LMS readout — the offline oracle for streaming online
+    learning with `ExecPlan.learn="lms"`.
+
+    Processes the state rows sequentially with the same update kernel the
+    serving engine fuses into `CompiledSim.tick_chunk`
+    (kernels/rls.py::lms_chunk) at batch width 1: weights start at w0
+    (zeros by default) and the first `washout` rows are masked (exactly-
+    zero steps), mirroring a streaming session's `learn_washout` ticks.
+
+    Unlike `fit_rls` there is no `block` parameter: the LMS recursion has
+    no cross-tick P block, so chunked application at ANY chunk_ticks runs
+    the identical per-tick op sequence — fed a session's HARVESTED states
+    (`SessionResult.states`), this reproduces the session's learned
+    readout bit-for-bit on the scan backend regardless of the engine's
+    chunk size (the update kernel is reduction-order stable across batch
+    widths; see kernels/rls.py).
+
+    LMS is a stochastic-gradient approximation: it converges toward the
+    ridge solution but does not equal it in finite samples — use it where
+    the O(S) per-tick cost matters (large S, or many `repro.tune`
+    candidates), and RLS/ridge where exactness does.
+    """
+    from repro.kernels import rls as krls
+
+    states = jnp.asarray(states)
+    targets = jnp.asarray(targets)
+    t = states.shape[0]
+    if targets.ndim == 1:
+        targets = targets[:, None]
+    if targets.ndim != 2 or targets.shape[0] != t:
+        raise ValueError(
+            f"targets must have shape ({t}, n_out) — one row per state "
+            f"sample — or ({t},) for a single output; got "
+            f"{tuple(targets.shape)} against states {tuple(states.shape)}."
+        )
+    if not 0.0 < float(mu) < 2.0:
+        raise ValueError(f"mu (NLMS step size) must be in (0, 2); got {mu}")
+    dtype = states.dtype
+    n_state = states.shape[1] + 1
+    n_out = targets.shape[1]
+    xb = jnp.concatenate([states, jnp.ones((t, 1), dtype)], axis=1)  # (T, S)
+    y = targets.astype(dtype)
+    mask = jnp.arange(t) >= washout
+    w_init = krls.lms_init(1, n_state, n_out, dtype)
+    if w0 is not None:
+        w_init = jnp.asarray(w0, dtype).reshape(1, n_state, n_out)
+    w_fin, _ = krls.lms_chunk(
+        w_init, xb[:, None, :], y[:, None, :], mask[:, None], float(mu)
+    )
+    return Readout(w_out=w_fin[0], washout=washout)
+
+
 def predict(readout: Readout, states: jnp.ndarray) -> jnp.ndarray:
     x = states[readout.washout :]
     ones = jnp.ones((x.shape[0], 1), dtype=x.dtype)

@@ -1,4 +1,5 @@
-"""Batched recursive-least-squares (RLS) readout update.
+"""Batched online readout updates: recursive least squares (RLS) and
+normalized least mean squares (LMS).
 
 The device-side learning rule behind `ExecPlan.learn="rls"`: every serving
 tick, each ensemble lane e refines its readout weights W[e] against that
@@ -48,6 +49,7 @@ from __future__ import annotations
 
 from typing import Tuple
 
+import jax
 import jax.numpy as jnp
 
 
@@ -216,3 +218,90 @@ def rls_chunk(
     p_scaled = p if lam == 1.0 else cum[:, None, None] * p
     p_new = p_scaled - jnp.einsum("eti,etj->eij", gst, pxst)
     return p_new, w_t, jnp.stack(preds)  # (E,S,S), (E,S,O), (K,E,O)
+
+
+# ---------------------------------------------------------------------------
+# LMS (normalized least mean squares) — the O(S) learner behind
+# ExecPlan.learn="lms"
+# ---------------------------------------------------------------------------
+#
+# RLS pays O(S^2) state (the (E, S, S) inverse-Gram P) and O(S^2) work per
+# tick for exact recursive ridge. LMS is the classic cheap alternative: a
+# stochastic-gradient step on the instantaneous squared error,
+#
+#     pred = W^T x
+#     e    = y - pred
+#     W'   = W + mu * x e^T / (eps + ||x||^2)        (NLMS normalization)
+#
+# O(S) state per output column and O(S) work per tick — the fitness signal
+# the tune/ subsystem wants at large S, where allocating E (N+1)^2 P blocks
+# per candidate would dominate the search itself. The ||x||^2 normalization
+# (NLMS) makes the stable step-size range input-scale-free: 0 < mu < 2
+# regardless of the state magnitudes, the standard result for normalized
+# LMS. eps = 1e-8 guards all-zero feature rows (washout-padded ticks).
+#
+# Like rls_update, every reduction is broadcast-multiply + trailing-axis
+# sum, so lane results are bit-identical at any batch width E — that is
+# what lets a served lane bit-match the E=1 offline oracle
+# (core.reservoir.fit_lms). Masked ticks fold into the gain (step = 0), so
+# frozen lanes stay value-frozen, and because the update is per-tick local
+# (no cross-tick P recursion), chunked application is the SAME op sequence
+# at any chunk size — fit_lms needs no `block` parameter.
+
+_LMS_EPS = 1e-8
+
+
+def lms_init(e: int, n_state: int, n_out: int, dtype) -> jnp.ndarray:
+    """Fresh per-lane LMS weights: W = 0, shape (E, S, n_out)."""
+    return jnp.zeros((e, n_state, n_out), dtype)
+
+
+def lms_update(
+    w: jnp.ndarray,  # (E, S, n_out) readout weights per lane
+    x: jnp.ndarray,  # (E, S) this tick's feature vector per lane
+    y: jnp.ndarray,  # (E, n_out) this tick's target per lane
+    mask: jnp.ndarray,  # (E,) bool; False lanes return w value-frozen
+    mu: float,  # STATIC step size in (0, 2) (a Python float)
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """One masked batched NLMS step -> (W', a-priori predictions (E, n_out)).
+
+    Same contract as `rls_update`: predictions use the INCOMING weights;
+    masked-off lanes keep W value-frozen but still predict.
+    """
+    # learn math never runs reduced: see the module precision note
+    x = x.astype(w.dtype)
+    y = y.astype(w.dtype)
+    pred = jnp.sum(w * x[:, :, None], axis=1)  # (E, n_out)
+    err = y - pred
+    norm = jnp.sum(x * x, axis=-1) + w.dtype.type(_LMS_EPS)  # (E,)
+    g = jnp.where(mask, mu / norm, 0.0)  # (E,) masked gain
+    w_new = w + (g[:, None] * x)[:, :, None] * err[:, None, :]
+    return w_new, pred
+
+
+def lms_chunk(
+    w: jnp.ndarray,  # (E, S, n_out) readout weights per lane
+    xb: jnp.ndarray,  # (K, E, S) feature vectors, one row per tick
+    y: jnp.ndarray,  # (K, E, n_out) targets per tick
+    mask: jnp.ndarray,  # (K, E) bool; False ticks leave w value-frozen
+    mu: float,  # STATIC step size in (0, 2)
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """K sequential NLMS steps -> (W', a-priori preds (K, E, n_out)).
+
+    A lax.scan of `lms_update` over the chunk's ticks: unlike RLS there is
+    no O(S^2) P block to amortize, so the per-tick recursion IS the cheap
+    spelling — O(K * S) work, O(S) state. The per-tick op sequence is
+    exactly `lms_update`'s, so chunked serving at any chunk_ticks is
+    bit-identical to per-tick application (and to the offline
+    `core.reservoir.fit_lms` oracle at E = 1).
+    """
+    xb = xb.astype(w.dtype)
+    y = y.astype(w.dtype)
+
+    def tick(w_c, rows):
+        x_t, y_t, m_t = rows
+        w_n, pred = lms_update(w_c, x_t, y_t, m_t, mu)
+        return w_n, pred
+
+    w_fin, preds = jax.lax.scan(tick, w, (xb, y, mask))
+    return w_fin, preds  # (E, S, n_out), (K, E, n_out)

@@ -20,6 +20,15 @@ the slot count under load through the bucketed plan cache.
         --n 128 --slots 64 --sessions 96 --ticks 50 --backend auto \
         --chunk-ticks 8 --autoscale --max-slots 256
 
+`--learn rls|lms` turns the tenants into online-learning NARMA streams
+(per-tenant readouts train on device while serving), and
+`--autotune-budget B` washout-auto-tunes the first tenant's physical
+parameters on the live engine before it streams (repro/tune):
+
+    PYTHONPATH=src python -m repro.launch.serve --mode reservoir \
+        --n 64 --slots 8 --sessions 12 --ticks 120 --learn rls \
+        --autotune-budget 8
+
 Fleet mode — `--fleet` lifts reservoir serving onto the fleet tier
 (repro/serve/fleet/): `--replicas R` engine replicas per N-pool behind
 the asyncio front-end, with sessions placed least-loaded, capacity
@@ -75,6 +84,15 @@ def main_lm(args):
           f"({total_toks / dt:.1f} tok/s incl. compile) with {args.slots} slots")
 
 
+#: default search ranges for --autotune-budget knobs (lane knobs only — a
+#: live engine cannot recompile; see repro.tune.washout_autotune)
+AUTOTUNE_RANGES = {
+    "drive_current": (0.5e-3, 4.5e-3),
+    "spectral_radius": (0.2, 1.2),
+    "input_gain": (0.1, 2.0),
+}
+
+
 def main_reservoir(args):
     import jax.numpy as jnp
     import numpy as np
@@ -86,26 +104,42 @@ def main_reservoir(args):
     spec = make_spec(
         n=args.n, n_in=1, hold_steps=args.hold_steps, dtype=jnp.float32
     )
-    # one shared trained readout per task flavor (NARMA here); tenants could
-    # each bring their own — see examples/serve_reservoir.py
-    u_tr, y_tr = tasks.narma_series(args.ticks * 4, order=2, seed=0)
-    _, states_tr = compile_plan(spec, impl="scan").drive(
-        jnp.asarray(u_tr[:, None], jnp.float32)
-    )
-    readout = fit_ridge(
-        states_tr, jnp.asarray(y_tr[:, None], jnp.float32), washout=10, reg=1e-6
-    )
-
     rng = np.random.default_rng(1)
-    sessions = [
-        StreamSession(
-            sid=i,
-            u_seq=rng.uniform(0.0, 0.5, size=(args.ticks, 1)).astype(np.float32),
-            readout=readout,
-            collect_states=False,
+    if args.learn:
+        # online-learning tenants: every session trains its readout on
+        # device against its own NARMA-2 targets while it streams
+        sessions = []
+        for i in range(args.sessions):
+            u_i, y_i = tasks.narma_series(args.ticks, order=2, seed=i)
+            sessions.append(
+                StreamSession(
+                    sid=i,
+                    u_seq=u_i[:, None].astype(np.float32),
+                    targets=y_i[:, None].astype(np.float32),
+                    learn_washout=args.learn_washout,
+                    collect_states=False,
+                )
+            )
+    else:
+        # one shared trained readout per task flavor (NARMA here); tenants
+        # could each bring their own — see examples/serve_reservoir.py
+        u_tr, y_tr = tasks.narma_series(args.ticks * 4, order=2, seed=0)
+        _, states_tr = compile_plan(spec, impl="scan").drive(
+            jnp.asarray(u_tr[:, None], jnp.float32)
         )
-        for i in range(args.sessions)
-    ]
+        readout = fit_ridge(
+            states_tr, jnp.asarray(y_tr[:, None], jnp.float32), washout=10,
+            reg=1e-6,
+        )
+        sessions = [
+            StreamSession(
+                sid=i,
+                u_seq=rng.uniform(0.0, 0.5, size=(args.ticks, 1)).astype(np.float32),
+                readout=readout,
+                collect_states=False,
+            )
+            for i in range(args.sessions)
+        ]
 
     autoscale_kw = {}
     if args.autoscale:
@@ -123,23 +157,58 @@ def main_reservoir(args):
                 measure=args.measure,
                 chunk_ticks=args.chunk_ticks,
                 precision=args.precision,
+                learn=args.learn,
             ),
         ),
         **autoscale_kw,
     )
+
+    probe = None
+    if args.autotune_budget:
+        # washout auto-tune the FIRST tenant on the live engine: probes
+        # stream its washout prefix on spare lanes, the winner's knobs are
+        # frozen into the session, and it queues tuned (repro.tune)
+        from repro.tune import Float, SearchSpace
+
+        knobs = [k.strip() for k in args.autotune_knobs.split(",") if k.strip()]
+        bad = [k for k in knobs if k not in AUTOTUNE_RANGES]
+        if bad:
+            raise SystemExit(
+                f"--autotune-knobs: unknown {bad}; choose from "
+                f"{sorted(AUTOTUNE_RANGES)}"
+            )
+        space = SearchSpace({k: Float(*AUTOTUNE_RANGES[k]) for k in knobs})
+        tuned, rest = sessions[0], sessions[1:]
+        probe = eng.submit_autotuned(
+            tuned, space, budget=args.autotune_budget, seed=0
+        )
+        sessions = rest
+
     t0 = time.time()
     results = eng.run(sessions)
     dt = time.time() - t0
     st = eng.scheduler.stats
     print(f"backend={eng.backend} precision={eng.precision} "
           f"slots={eng.num_slots} N={args.n} "
-          f"hold_steps={args.hold_steps} chunk_ticks={eng.chunk_ticks}")
+          f"hold_steps={args.hold_steps} chunk_ticks={eng.chunk_ticks}"
+          + (f" learn={eng.learn}" if eng.learn else ""))
     print(f"served {len(results)} sessions / {st.session_ticks} session-ticks "
           f"in {dt:.2f}s ({st.session_ticks / dt:.1f} ticks/s incl. compile; "
           f"{st.ticks} wall ticks, occupancy {eng.scheduler.occupancy():.2f}, "
           f"mean queue wait {eng.scheduler.mean_queue_wait():.1f} ticks"
           + (f", grows {st.grows} shrinks {st.shrinks}" if args.autoscale else "")
           + ")")
+    if args.learn:
+        nmses = [r.learn_nmse for r in results.values() if r.learn_nmse is not None]
+        print(f"online learning: mean nmse {float(np.mean(nmses)):.4f} "
+              f"over {len(nmses)} tenants")
+    if probe is not None:
+        best = probe.best
+        print(f"washout autotune: {len(probe.trials)} probes on the live "
+              f"engine; tenant 0 served with "
+              + ", ".join(f"{k}={v:.4g}" for k, v in best.assignment.items())
+              + f" (probe nmse {best.fitness:.4f}, "
+                f"full-stream nmse {results[0].learn_nmse:.4f})")
 
 
 def main_fleet(args):
@@ -240,6 +309,19 @@ def main(argv=None):
                     help="time backend candidates for this (N, E) first")
     ap.add_argument("--chunk-ticks", type=int, default=8,
                     help="input ticks per serving dispatch (pipelined chunks)")
+    ap.add_argument("--learn", default=None, choices=["rls", "lms"],
+                    help="online per-tenant readout learning: sessions "
+                         "stream NARMA-2 targets and train on device "
+                         "(ExecPlan.learn)")
+    ap.add_argument("--learn-washout", type=int, default=20,
+                    help="ticks before the first on-device learner update")
+    ap.add_argument("--autotune-budget", type=int, default=0,
+                    help="washout auto-tune the first tenant on the live "
+                         "engine with this many probe candidates "
+                         "(requires --learn; repro.tune)")
+    ap.add_argument("--autotune-knobs", default="drive_current,spectral_radius",
+                    help="comma-separated lane knobs to search "
+                         f"(from {sorted(AUTOTUNE_RANGES)})")
     ap.add_argument("--autoscale", action="store_true",
                     help="grow/shrink the slot count under load "
                          "(bucketed plan cache, QueueDepthPolicy)")
@@ -262,6 +344,9 @@ def main(argv=None):
                          "from (default: ./BENCH_serve.json if present)")
     args = ap.parse_args(argv)
 
+    if args.autotune_budget and not args.learn:
+        ap.error("--autotune-budget requires --learn (probe fitness is the "
+                 "on-device learner's nmse)")
     if args.mode == "reservoir":
         if args.fleet:
             main_fleet(args)

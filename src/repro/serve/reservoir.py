@@ -310,12 +310,13 @@ class ReservoirEngine:
                     grow/shrink the slot count between min_slots and
                     max_slots at chunk boundaries via the bucketed plan
                     cache (powers of two from min_slots).
-      learn         "rls" (template route; CompiledSim route: set on the
-                    ExecPlan) enables online readout learning for sessions
-                    that submit targets; learn_lam / learn_reg are the RLS
-                    forgetting factor and regularization (see
-                    repro.api.plan.ExecPlan). Learning engines serve
-                    through the chunked path (run()/step_chunk()) only.
+      learn         "rls" or "lms" (template route; CompiledSim route: set
+                    on the ExecPlan) enables online readout learning for
+                    sessions that submit targets; learn_lam / learn_reg are
+                    the RLS forgetting factor and regularization, learn_mu
+                    the NLMS step size (see repro.api.plan.ExecPlan).
+                    Learning engines serve through the chunked path
+                    (run()/step_chunk()) only.
       precision     numerical policy for the compute-bound GEMMs (template
                     route; CompiledSim route: set on the ExecPlan):
                     None/"highest" bit-exact, "bf16_coupling"/"mixed"
@@ -338,6 +339,7 @@ class ReservoirEngine:
         learn: Optional[str] = None,
         learn_lam: Optional[float] = None,
         learn_reg: Optional[float] = None,
+        learn_mu: Optional[float] = None,
         precision: Optional[str] = None,
     ):
         if isinstance(res, CompiledSim):
@@ -356,6 +358,7 @@ class ReservoirEngine:
                 or learn is not None
                 or learn_lam is not None
                 or learn_reg is not None
+                or learn_mu is not None
                 or precision is not None
             ):
                 raise ValueError(
@@ -388,6 +391,7 @@ class ReservoirEngine:
                     learn=learn,
                     learn_lam=1.0 if learn_lam is None else learn_lam,
                     learn_reg=1e-6 if learn_reg is None else learn_reg,
+                    learn_mu=0.5 if learn_mu is None else learn_mu,
                     precision=precision,
                 ),
             )
@@ -399,7 +403,7 @@ class ReservoirEngine:
             sim.spec,
             num_slots,
             n_out=n_out,
-            learn=self.learn is not None,
+            learn=self.learn,
             learn_reg=sim.plan.learn_reg,
         )
         self.scheduler = SlotScheduler(num_slots)
@@ -517,7 +521,7 @@ class ReservoirEngine:
                 raise ValueError(
                     f"session {session.sid}: targets require a learning "
                     f"engine — compile the plan with ExecPlan(learn='rls') "
-                    f"(or pass learn='rls' to ReservoirEngine)"
+                    f"or learn='lms' (or pass learn=... to ReservoirEngine)"
                 )
             t = np.asarray(session.targets, dtype=self.store.dtype)
             if t.ndim == 1:
@@ -556,8 +560,15 @@ class ReservoirEngine:
         if session.learn_w0 is not None or session.learn_P0 is not None:
             if self.learn is None or session.targets is None:
                 raise ValueError(
-                    f"session {session.sid}: learn_w0/learn_P0 resume an RLS "
-                    f"recursion — they require a learning engine and targets"
+                    f"session {session.sid}: learn_w0/learn_P0 resume a "
+                    f"learn recursion — they require a learning engine and "
+                    f"targets"
+                )
+            if session.learn_P0 is not None and self.learn == "lms":
+                raise ValueError(
+                    f"session {session.sid}: learn_P0 resumes an RLS "
+                    f"inverse-Gram — learn='lms' carries no P; resume LMS "
+                    f"sessions with learn_w0 alone"
                 )
             if session.learn_w0 is not None:
                 w0 = np.asarray(session.learn_w0, self.store.dtype)
@@ -688,6 +699,37 @@ class ReservoirEngine:
         if self.max_retained is not None:
             while len(self.results) > self.max_retained:
                 self.results.pop(next(iter(self.results)))
+
+    def submit_autotuned(
+        self,
+        session: StreamSession,
+        space,
+        budget: int = 8,
+        strategy="random",
+        seed: int = 0,
+        **kwargs,
+    ):
+        """Auto-tune this session's lane knobs during its washout window,
+        then submit it with the winning parameters.
+
+        `space` is a `repro.tune.SearchSpace` over LANE knobs (STOParams
+        fields — structural knobs would need a recompile, which a live
+        engine cannot do). Probe sessions stream the tenant's washout
+        prefix on spare lanes with negative sids, scored by the fused
+        online learner; the best assignment is frozen into
+        `session.params` and the session submits normally. Returns the
+        probe `TuneResult` (trial history + winner). Requires a learning
+        engine and a learning session with learn_washout >= 2.
+
+        Thin delegate to `repro.tune.washout_autotune` (imported lazily:
+        serve must not depend on tune at import time — tune drives serve).
+        """
+        from repro.tune.driver import washout_autotune
+
+        return washout_autotune(
+            self, session, space,
+            budget=budget, strategy=strategy, seed=seed, **kwargs,
+        )
 
     def pop_results(self) -> Dict[int, SessionResult]:
         """Drain finished-session results: returns sid -> SessionResult and
@@ -1144,7 +1186,13 @@ class ReservoirEngine:
         else:
             m = np.asarray(self.store.state_column(slot))
             if learning:
-                P = np.asarray(self.store.learn_P_columns([slot])[0])
+                # LMS learners have no inverse-Gram: Wl IS the whole
+                # resumable learn state (SessionCheckpoint.P stays None)
+                P = (
+                    np.asarray(self.store.learn_P_columns([slot])[0])
+                    if self.learn == "rls"
+                    else None
+                )
                 # padding columns stay zero for the session's whole life
                 # (zero targets + zero init), so slicing to q is exact
                 Wl = np.asarray(self.store.learn_w_columns([slot])[0])[:, :q]

@@ -7,15 +7,19 @@ kernels want it (kernels/ref.py):
     pv     : (NP, E)        packed per-tenant STOParams, one column per slot
     w_out  : (E, N+1, n_out) per-session trained readouts (last row = bias)
 
-and, when the engine learns online (`ExecPlan.learn="rls"`):
+and, when the engine learns online (`ExecPlan.learn`):
 
     P      : (E, S, S)      per-slot RLS inverse-Gram, S = N + 1
+                            (learn="rls" only — LMS carries no P; the
+                            attribute stays None on learn="lms" stores)
     Wl     : (E, S, n_out)  per-slot LEARNED readout weights
 
 P/Wl lanes reset to the template (I / learn_reg, zeros — or a session's
 warm-start readout) on admit, ride every `tick_chunk` dispatch next to the
 magnetization, and migrate through `resized` exactly like the state
 columns, so autoscaling never perturbs a session's learning trajectory.
+The store's `learn` attribute is the learner KIND (None | "rls" | "lms");
+the legacy boolean spelling (learn=True) still means "rls".
 
 Admitting a session SPLICES its state into the batched arrays at a free
 slot (column writes via .at); retiring resets the column to the engine's
@@ -53,7 +57,7 @@ class SlotStore:
         res,
         num_slots: int,
         n_out: int = 1,
-        learn: bool = False,
+        learn=None,  # None/False | True (= "rls") | "rls" | "lms"
         learn_reg: float = 1e-6,
     ):
         # res: the engine's physics template — a repro.api.SimSpec (or the
@@ -64,15 +68,25 @@ class SlotStore:
         self.n_in = int(res.w_in.shape[1])
         self.n_out = n_out
         self.dtype = res.m0.dtype
+        if learn is True:  # legacy boolean spelling
+            learn = "rls"
+        elif learn is False:
+            learn = None
+        if learn not in (None, "rls", "lms"):
+            raise ValueError(
+                f"learn must be None, True, 'rls', or 'lms'; got {learn!r}"
+            )
         self.learn = learn
         self.learn_reg = float(learn_reg)
         self.n_state = self.n + 1
         self.P: Optional[jnp.ndarray] = None
         self.Wl: Optional[jnp.ndarray] = None
-        if learn:
+        if learn == "rls":
             self.P, self.Wl = krls.rls_init(
                 num_slots, self.n_state, n_out, self.learn_reg, self.dtype
             )
+        elif learn == "lms":
+            self.Wl = krls.lms_init(num_slots, self.n_state, n_out, self.dtype)
 
         self._m0_col = jnp.transpose(res.m0)  # (3, N) template column
         self._m0_col_np = np.asarray(self._m0_col)
@@ -194,23 +208,31 @@ class SlotStore:
         """Restart the learning state of several slots in one scatter each:
         P <- p_cols entry (I / learn_reg when None — the fresh-start
         default; a checkpointed P resumes a migrated recursion), Wl <-
-        w_cols (zeros when None/omitted)."""
-        eye_np = np.asarray(
-            np.eye(self.n_state, dtype=self.dtype) / self.learn_reg
-        )
-        if p_cols and any(p is not None for p in p_cols):
-            self.P = self.P.at[idx].set(
-                jnp.asarray(
-                    np.stack([eye_np if p is None else p for p in p_cols])
+        w_cols (zeros when None/omitted). LMS stores have no P: p_cols
+        entries must all be None there."""
+        if self.P is None:  # learn="lms"
+            if p_cols and any(p is not None for p in p_cols):
+                raise ValueError(
+                    "learn_P0 was passed to a learn='lms' store — LMS "
+                    "carries no inverse-Gram block to resume"
                 )
-            )
         else:
-            self.P = self.P.at[idx].set(
-                jnp.broadcast_to(
-                    jnp.asarray(eye_np)[None],
-                    (len(idx), self.n_state, self.n_state),
-                )
+            eye_np = np.asarray(
+                np.eye(self.n_state, dtype=self.dtype) / self.learn_reg
             )
+            if p_cols and any(p is not None for p in p_cols):
+                self.P = self.P.at[idx].set(
+                    jnp.asarray(
+                        np.stack([eye_np if p is None else p for p in p_cols])
+                    )
+                )
+            else:
+                self.P = self.P.at[idx].set(
+                    jnp.broadcast_to(
+                        jnp.asarray(eye_np)[None],
+                        (len(idx), self.n_state, self.n_state),
+                    )
+                )
         if w_cols:
             self.Wl = self.Wl.at[idx].set(jnp.asarray(np.stack(w_cols)))
         else:
@@ -271,9 +293,10 @@ class SlotStore:
             new.w_out = new.w_out.at[new_idx].set(self.w_out[old_idx])
             new._params_np[:, new_idx] = self._params_np[:, old_idx]
             if self.learn:
-                # learning state moves with the session: mid-stream RLS
+                # learning state moves with the session: mid-stream learn
                 # trajectories survive the autoscale bit-identically
-                new.P = new.P.at[new_idx].set(self.P[old_idx])
+                if self.P is not None:
+                    new.P = new.P.at[new_idx].set(self.P[old_idx])
                 new.Wl = new.Wl.at[new_idx].set(self.Wl[old_idx])
             for old, tgt in slot_map.items():
                 new._active[tgt] = self._active[old]
@@ -334,5 +357,11 @@ class SlotStore:
     def learn_P_columns(self, slots: Sequence[int]) -> jnp.ndarray:
         """(k, S, S) inverse-Gram blocks of several slots in one gather —
         the checkpoint/migration path snapshots a mid-recursion learner so
-        the destination replica resumes it bit-identically."""
+        the destination replica resumes it bit-identically. RLS stores
+        only: an LMS learner's whole resumable state is its Wl lanes."""
+        if self.P is None:
+            raise ValueError(
+                "learn_P_columns() on a learn='lms' store — LMS has no "
+                "inverse-Gram block; checkpoint the Wl lanes only"
+            )
         return self.P[np.asarray(slots, dtype=np.int32)]

@@ -1,4 +1,4 @@
-"""Streaming online readout learning (ExecPlan.learn="rls").
+"""Streaming online readout learning (ExecPlan.learn="rls" / "lms").
 
 The contracts this file pins:
 
@@ -15,6 +15,9 @@ The contracts this file pins:
   - The planes backends and sharded plans learn tolerance-equal to scan.
   - ExecPlan validates the learn knobs; the engine validates target
     submission and refuses learning on the per-tick step() path.
+  - learn="lms" (TestLMS) pins the same contracts for the O(S) NLMS
+    learner: batch-width bit stability, streaming == `fit_lms` oracle,
+    chunk-size independence (no P block), and P-free checkpoints.
 """
 
 import dataclasses
@@ -25,7 +28,15 @@ import numpy as np
 import pytest
 
 from repro.api import ExecPlan, compile_plan, make_spec
-from repro.core import default_params, fit_ridge, fit_rls, nmse, predict, tasks
+from repro.core import (
+    default_params,
+    fit_lms,
+    fit_ridge,
+    fit_rls,
+    nmse,
+    predict,
+    tasks,
+)
 from repro.kernels import ops
 from repro.kernels import rls as krls
 from repro.serve.reservoir import ReservoirEngine, StreamSession
@@ -487,3 +498,151 @@ class TestValidation:
         sim = compile_plan(spec, ExecPlan(impl="scan", ensemble=2))
         with pytest.raises(ValueError, match="ExecPlan"):
             ReservoirEngine(sim, learn="rls")
+
+
+class TestLMS:
+    """ExecPlan.learn="lms": the O(S)-per-tick normalized-LMS twin of the
+    RLS contracts above — same bit-stability and streaming-vs-oracle pins,
+    no inverse-Gram block anywhere."""
+
+    def test_update_batch_width_bit_stability(self):
+        rng = np.random.default_rng(11)
+        s, o, e = 9, 2, 7
+        w = rng.normal(size=(1, s, o)).astype(np.float32)
+        x = rng.normal(size=(1, s)).astype(np.float32)
+        y = rng.normal(size=(1, o)).astype(np.float32)
+        upd = jax.jit(krls.lms_update, static_argnames=("mu",))
+        a = upd(*map(jnp.asarray, (w, x, y, np.ones(1, bool))), mu=0.5)
+        b = upd(
+            *map(lambda z: jnp.asarray(np.repeat(z, e, 0)), (w, x, y)),
+            jnp.ones(e, bool),
+            mu=0.5,
+        )
+        for one, many in zip(a, b):
+            np.testing.assert_array_equal(np.asarray(one)[0], np.asarray(many)[0])
+
+    def test_masked_update_is_bit_frozen(self):
+        rng = np.random.default_rng(12)
+        w = rng.normal(size=(2, 4, 1)).astype(np.float32)
+        x = rng.normal(size=(2, 4)).astype(np.float32)
+        y = rng.normal(size=(2, 1)).astype(np.float32)
+        w2, pred = krls.lms_update(
+            jnp.asarray(w), jnp.asarray(x), jnp.asarray(y),
+            jnp.asarray([True, False]), 0.5,
+        )
+        np.testing.assert_array_equal(np.asarray(w2)[1], w[1])
+        assert not np.array_equal(np.asarray(w2)[0], w[0])
+        # masked lanes still answer (frozen weights applied to x)
+        np.testing.assert_allclose(np.asarray(pred)[1], w[1].T @ x[1], rtol=1e-6)
+
+    def test_fit_lms_learns_a_linear_map(self):
+        rng = np.random.default_rng(13)
+        x = rng.normal(size=(600, 6)).astype(np.float32)
+        w_true = rng.normal(size=(6, 1)).astype(np.float32)
+        y = x @ w_true
+        readout = fit_lms(x, y, washout=10, mu=0.5)
+        pred = predict(readout._replace(washout=0), x[300:])
+        assert float(nmse(pred, y[300:])) < 0.05
+
+    def test_fit_lms_is_chunk_size_independent(self):
+        """lms_chunk is a per-tick-local scan — no block parameter exists,
+        and the engine's chunk_ticks cannot change the recursion. Pinned by
+        running the same stream through chunk_ticks 1 and 4 engines."""
+        spec = make_spec(n=8, n_in=1, hold_steps=5, dtype=jnp.float32)
+        rng = np.random.default_rng(14)
+        sessions = _learn_sessions(rng, 3, (6, 9))
+        outs = []
+        for ct in (1, 4):
+            eng = ReservoirEngine(
+                spec, num_slots=2, backend="scan", chunk_ticks=ct,
+                learn="lms", learn_mu=0.5,
+            )
+            rs = eng.run([dataclasses.replace(s) for s in sessions])
+            outs.append({
+                sid: np.asarray(r.learned_readout.w_out) for sid, r in rs.items()
+            })
+        for sid in outs[0]:
+            np.testing.assert_array_equal(outs[0][sid], outs[1][sid])
+
+    def test_engine_learned_readout_matches_fit_lms(self):
+        """Streaming LMS fused into tick_chunk bit-matches the offline
+        fit_lms oracle over the harvested states (scan backend), across
+        slot turnover and mid-chunk finishes — the learn="rls" contract,
+        same words, cheaper learner."""
+        spec = make_spec(n=10, n_in=1, hold_steps=6, dtype=jnp.float32)
+        rng = np.random.default_rng(15)
+        sessions = _learn_sessions(rng, 8, (5, 9, 14))
+        eng = ReservoirEngine(
+            spec, num_slots=3, backend="scan", chunk_ticks=4,
+            learn="lms", learn_mu=0.7,
+        )
+        results = eng.run([dataclasses.replace(s) for s in sessions])
+        assert len(results) == 8
+        for sid, r in results.items():
+            oracle = fit_lms(r.states, sessions[sid].targets, washout=2, mu=0.7)
+            np.testing.assert_array_equal(
+                np.asarray(r.learned_readout.w_out), np.asarray(oracle.w_out)
+            )
+
+    def test_checkpoint_carries_no_P_and_resumes_bitexact(self):
+        """An LMS checkpoint has weights but no inverse-Gram; restoring it
+        on a fresh engine continues the stream bit-exactly."""
+        spec = make_spec(n=8, n_in=1, hold_steps=5, dtype=jnp.float32)
+        rng = np.random.default_rng(16)
+        u = rng.uniform(0, 0.5, (12, 1)).astype(np.float32)
+        y = rng.normal(size=(12, 1)).astype(np.float32)
+        mk = lambda sid: StreamSession(
+            sid=sid, u_seq=u.copy(), targets=y.copy(), learn_washout=2
+        )
+        ref_eng = ReservoirEngine(
+            spec, num_slots=2, backend="scan", chunk_ticks=4,
+            learn="lms", learn_mu=0.5,
+        )
+        ref = ref_eng.run([mk(0)])[0]
+
+        eng = ReservoirEngine(
+            spec, num_slots=2, backend="scan", chunk_ticks=4,
+            learn="lms", learn_mu=0.5,
+        )
+        eng.submit(mk(1))
+        eng.step_chunk()  # 4 of 12 ticks
+        ck = eng.checkpoint_session(1)
+        assert ck.P is None and ck.Wl is not None
+        eng2 = ReservoirEngine(
+            spec, num_slots=2, backend="scan", chunk_ticks=4,
+            learn="lms", learn_mu=0.5,
+        )
+        eng2.restore_session(ck)
+        while eng2.step_chunk():
+            pass
+        resumed = eng2.pop_results()[1]
+        np.testing.assert_array_equal(
+            np.asarray(resumed.learned_readout.w_out),
+            np.asarray(ref.learned_readout.w_out),
+        )
+
+    def test_validation(self):
+        spec = make_spec(n=6, n_in=1, hold_steps=3, dtype=jnp.float32)
+        with pytest.raises(ValueError, match="learn_mu"):
+            ExecPlan(learn="lms", learn_mu=0.0)
+        with pytest.raises(ValueError, match="learn_mu"):
+            ExecPlan(learn="lms", learn_mu=2.0)
+        with pytest.raises(ValueError, match="learn"):
+            ExecPlan(learn="nlms")
+        with pytest.raises(ValueError, match="mu"):
+            fit_lms(np.zeros((4, 3)), np.zeros((4, 1)), mu=2.5)
+        # an LMS engine refuses RLS inverse-Gram resume state
+        eng = ReservoirEngine(
+            spec, num_slots=1, backend="scan", chunk_ticks=2,
+            learn="lms", learn_mu=0.5,
+        )
+        u = np.zeros((4, 1), np.float32)
+        with pytest.raises(ValueError, match="learn_P0"):
+            eng.submit(
+                StreamSession(
+                    sid=0, u_seq=u, targets=np.zeros((4, 1), np.float32),
+                    learn_P0=np.eye(7, dtype=np.float32),
+                )
+            )
+        with pytest.raises(ValueError, match="inverse-Gram|rls"):
+            eng.store.learn_P_columns([0])

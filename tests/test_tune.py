@@ -1,0 +1,386 @@
+"""The tune subsystem (repro/tune): lane-vectorized hyperparameter search.
+
+The contracts this file pins:
+
+  - `SearchSpace` resolves aliases against the tunable-knob registries,
+    forces structural knobs (dt/hold_steps/learn_*) to Choice domains,
+    and owns a deterministic [0, 1]^d genotype codec (sorted knob order).
+  - Strategies are deterministic in (seed, tell order): fixed-seed
+    `tune_spec` runs reproduce their trial histories EXACTLY — ids,
+    assignments, and fitnesses — for random and CMA-ES.
+  - CMA-ES converges on a known quadratic surrogate (pure ask/tell, no
+    engine) and respects the generation-buffered ask protocol.
+  - Candidate lanes are invisible to co-resident tenants: a tenant served
+    next to washout-autotune probe traffic is BIT-IDENTICAL (states,
+    learned weights, nmse) to the same tenant served alone — lane
+    re-seeding at chunk boundaries goes through the same SlotStore
+    admit/retire path ordinary sessions use, and scan-backend lanes are
+    independent.
+  - `washout_autotune` / `ReservoirEngine.submit_autotuned` runs end to
+    end: probes with negative sids never leak into tenant results,
+    max_retained is restored, the winner's knobs are frozen into the
+    session, and the tuned tenant is served.
+  - Structural knobs group candidates into per-combination engines;
+    failed candidates rank last but are reported to the strategy as a
+    finite penalty.
+"""
+
+import numpy as np
+import pytest
+
+from repro.api import ExecPlan, compile_plan, make_spec
+from repro.core.tasks import narma_series
+from repro.serve.reservoir import ReservoirEngine, StreamSession
+from repro.tune import (
+    CMAES,
+    PENALTY_FITNESS,
+    Choice,
+    Float,
+    GridSearch,
+    LogFloat,
+    RandomSearch,
+    SearchSpace,
+    TuneTask,
+    make_strategy,
+    narma_task,
+    tune_spec,
+    washout_autotune,
+)
+
+
+def _space():
+    return SearchSpace({
+        "drive_current": Float(0.5e-3, 4.5e-3),
+        "spectral_radius": Float(0.2, 1.2),
+    })
+
+
+def _spec(n=24):
+    return make_spec(n=n, n_in=1, hold_steps=5, seed=1)
+
+
+def _plan(e=4, learn="rls"):
+    return ExecPlan(impl="scan", ensemble=e, chunk_ticks=8, learn=learn)
+
+
+class TestSearchSpace:
+    def test_sorted_names_and_alias_resolution(self):
+        s = _space()
+        assert s.names == ("a_cp", "current")  # sorted canonical order
+        assert s.dim == 2
+
+    def test_decode_bounds(self):
+        s = _space()
+        lo = s.decode([0.0, 0.0])
+        hi = s.decode([1.0, 1.0])
+        assert lo["a_cp"] == 0.2 and hi["a_cp"] == 1.2
+        assert lo["current"] == 0.5e-3 and hi["current"] == 4.5e-3
+
+    def test_logfloat_decodes_log_uniform(self):
+        s = SearchSpace({"learn_reg": Choice([1e-2]), "current": LogFloat(1e-4, 1e-2)})
+        mid = s.decode([0.5, 0.5])["current"]
+        assert mid == pytest.approx(1e-3, rel=1e-9)  # geometric midpoint
+
+    def test_choice_bucket_decode_clamps_top(self):
+        dom = Choice([10, 20, 30])
+        assert dom.decode(0.0) == 10
+        assert dom.decode(0.999) == 30
+        assert dom.decode(1.0) == 30  # u = 1.0 clamps into the last bucket
+
+    def test_structural_knob_requires_choice(self):
+        with pytest.raises(TypeError, match="STRUCTURAL"):
+            SearchSpace({"hold_steps": Float(1, 10)})
+        with pytest.raises(TypeError, match="STRUCTURAL"):
+            SearchSpace({"learn_lam": LogFloat(0.9, 1.0)})
+        SearchSpace({"hold_steps": Choice([2, 4])})  # Choice is fine
+
+    def test_unknown_knob_raises_with_valid_list(self):
+        with pytest.raises(ValueError, match="valid knobs"):
+            SearchSpace({"warp_factor": Float(0, 1)})
+
+    def test_duplicate_via_alias_raises(self):
+        with pytest.raises(ValueError, match="duplicate"):
+            SearchSpace({"a_cp": Float(0, 1), "spectral_radius": Float(0, 1)})
+
+    def test_split_classifies_lane_struct_plan(self):
+        s = SearchSpace({
+            "drive_current": Float(1e-3, 4e-3),
+            "hold_steps": Choice([2, 4]),
+            "learn_lam": Choice([0.99, 1.0]),
+        })
+        lane, spec_kw, plan_kw = s.split(s.decode([0.0, 0.0, 0.0]))
+        assert set(lane) == {"current"}
+        assert set(spec_kw) == {"hold_steps"}
+        assert set(plan_kw) == {"learn_lam"}
+
+    def test_genotype_validation(self):
+        s = _space()
+        with pytest.raises(ValueError, match="shape"):
+            s.decode([0.5])
+        with pytest.raises(ValueError, match=r"\[0, 1\]"):
+            s.decode([0.5, 1.5])
+
+    def test_grid_sizes(self):
+        assert _space().grid_sizes is None
+        s = SearchSpace({"current": Choice([1, 2]), "a_cp": Choice([1, 2, 3])})
+        assert s.grid_sizes == (3, 2)  # sorted name order: a_cp, current
+
+
+class TestStrategies:
+    def test_random_is_seed_deterministic_and_budget_capped(self):
+        a = RandomSearch(_space(), budget=5, seed=7)
+        b = RandomSearch(_space(), budget=5, seed=7)
+        ga = [g for _, g in a.ask(10)]
+        gb = [g for _, g in b.ask(10)]
+        assert len(ga) == 5 and a.exhausted
+        np.testing.assert_array_equal(np.stack(ga), np.stack(gb))
+        assert a.ask(1) == []
+
+    def test_grid_enumerates_choice_product_exactly(self):
+        s = SearchSpace({"current": Choice([1e-3, 2e-3]), "a_cp": Choice([0.3, 0.9])})
+        g = GridSearch(s, budget=10)
+        assert g.grid_size == 4
+        out = [s.decode(geno) for _, geno in g.ask(10)]
+        assert g.exhausted
+        # row-major over sorted names (a_cp outer, current inner)
+        assert [(o["a_cp"], o["current"]) for o in out] == [
+            (0.3, 1e-3), (0.3, 2e-3), (0.9, 1e-3), (0.9, 2e-3),
+        ]
+
+    def test_tell_validates_token_and_finiteness(self):
+        s = RandomSearch(_space(), budget=2, seed=0)
+        (tok, _), = s.ask(1)
+        with pytest.raises(KeyError):
+            s.tell(tok + 99, 1.0)
+        with pytest.raises(ValueError, match="finite"):
+            s.tell(tok, float("nan"))
+        s.tell(tok, 1.0)
+        with pytest.raises(KeyError):  # double-tell
+            s.tell(tok, 1.0)
+
+    def test_cmaes_generation_buffered_ask(self):
+        s = CMAES(_space(), budget=20, seed=0, popsize=4)
+        first = s.ask(10)
+        assert len(first) == 4  # one generation, not the full ask
+        assert s.ask(10) == []  # waiting on tells
+        for tok, g in first:
+            s.tell(tok, float(np.sum(g**2)))
+        assert len(s.ask(10)) == 4  # next generation after the update
+
+    def test_cmaes_converges_on_quadratic_surrogate(self):
+        # minimize ||g - g*||^2 over the unit cube — pure ask/tell, no
+        # engine; CMA-ES must land near the optimum within a small budget
+        target = np.array([0.7, 0.3])
+        s = CMAES(_space(), budget=120, seed=2, popsize=8)
+        best, first_gen_best = np.inf, None
+        while not s.exhausted:
+            batch = s.ask(8)
+            for tok, g in batch:
+                f = float(np.sum((g - target) ** 2))
+                s.tell(tok, f)
+                best = min(best, f)
+            if first_gen_best is None and batch:
+                first_gen_best = best
+        assert best < 1e-3, f"CMA-ES best {best} did not converge"
+        assert best < first_gen_best / 10
+
+    def test_cmaes_seed_determinism(self):
+        runs = []
+        for _ in range(2):
+            s = CMAES(_space(), budget=24, seed=5, popsize=6)
+            hist = []
+            while not s.exhausted:
+                for tok, g in s.ask(6):
+                    f = float(np.sum((g - 0.4) ** 2))
+                    s.tell(tok, f)
+                    hist.append((tok, f))
+            runs.append(hist)
+        assert runs[0] == runs[1]
+
+    def test_make_strategy_passthrough_and_validation(self):
+        s = _space()
+        st = RandomSearch(s, budget=3, seed=0)
+        assert make_strategy(st, s, 3) is st
+        other = SearchSpace({"alpha": Float(0.001, 0.1)})
+        with pytest.raises(ValueError, match="different search space"):
+            make_strategy(st, other, 3)
+        with pytest.raises(ValueError, match="unknown strategy"):
+            make_strategy("anneal", s, 3)
+
+
+class TestTuneSpec:
+    def test_fixed_seed_trial_history_is_exact(self):
+        spec, task = _spec(), narma_task(t=60, seed=0, learn_washout=15)
+        runs = []
+        for _ in range(2):
+            r = tune_spec(spec, task, _space(), budget=6, plan=_plan(), seed=3)
+            runs.append([
+                (t.trial_id, t.fitness, tuple(sorted(t.assignment.items())))
+                for t in r.trials
+            ])
+        assert runs[0] == runs[1]
+        assert len(runs[0]) == 6
+
+    def test_cmaes_history_deterministic_through_engine(self):
+        spec, task = _spec(), narma_task(t=60, seed=0, learn_washout=15)
+        runs = []
+        for _ in range(2):
+            r = tune_spec(spec, task, _space(), budget=8, plan=_plan(),
+                          strategy="cmaes", seed=1, popsize=4)
+            runs.append([(t.trial_id, t.fitness) for t in r.trials])
+        assert runs[0] == runs[1]
+        assert len(runs[0]) == 8
+
+    def test_structural_knobs_group_engines(self):
+        spec, task = _spec(), narma_task(t=40, seed=0, learn_washout=10)
+        space = SearchSpace({
+            "drive_current": Float(1e-3, 4e-3),
+            "hold_steps": Choice([3, 5]),
+        })
+        r = tune_spec(spec, task, space, budget=6, plan=_plan(), seed=0)
+        keys = {t.engine_key for t in r.trials}
+        assert keys <= {"hold_steps=3", "hold_steps=5"}
+        assert len(keys) == 2  # 6 random draws hit both buckets w.h.p.
+
+    def test_failed_candidates_rank_last_and_tell_penalty(self):
+        spec = _spec()
+        calls = []
+
+        def score(result):
+            calls.append(result.sid)
+            return float("inf") if result.sid % 2 == 0 else 1.0
+
+        task = TuneTask(u_seq=np.zeros(24, np.float32), score=score)
+        r = tune_spec(spec, task, _space(), budget=4,
+                      plan=ExecPlan(impl="scan", ensemble=4, chunk_ticks=8),
+                      seed=0)
+        ranked = r.ranked()
+        assert [t.ok for t in ranked] == [True, True, False, False]
+        assert r.best.fitness == 1.0
+        assert all(not np.isfinite(t.fitness) for t in ranked[2:])
+        assert len(calls) == 4
+
+    def test_rejects_ensemble_leaved_template(self):
+        from repro.core import broadcast_params
+
+        spec = _spec()
+        wide = spec._replace(params=broadcast_params(spec.params, 4))
+        with pytest.raises(ValueError, match="scalar-leaved"):
+            tune_spec(wide, narma_task(t=20), _space(), budget=2)
+
+    def test_sequential_flag(self):
+        spec, task = _spec(), narma_task(t=40, seed=0, learn_washout=10)
+        r = tune_spec(spec, task, _space(), budget=2,
+                      plan=ExecPlan(impl="scan", ensemble=1, chunk_ticks=8,
+                                    learn="rls"), seed=0)
+        assert r.sequential and len(r.trials) == 2
+
+    def test_task_requires_targets_or_score(self):
+        with pytest.raises(ValueError, match="targets.*score|score.*targets"):
+            TuneTask(u_seq=np.zeros(10))
+
+
+class TestNonPerturbation:
+    def test_probe_traffic_does_not_perturb_cotenant_bitwise(self):
+        """The ISSUE's reseed-at-chunk-boundary pin: a tenant co-resident
+        with washout-autotune probe lanes is bit-identical to the same
+        tenant served alone (scan backend)."""
+        spec, plan = _spec(), _plan(e=4)
+        u, y = narma_series(96, order=10, seed=0)
+        mk = lambda: StreamSession(
+            sid=0, u_seq=u.copy(), targets=y.copy(), learn_washout=24
+        )
+
+        solo_eng = ReservoirEngine(compile_plan(spec, plan))
+        solo_eng.submit(mk())
+        while solo_eng.step_chunk():
+            pass
+        solo = solo_eng.pop_results()[0]
+
+        eng = ReservoirEngine(compile_plan(spec, plan))
+        eng.submit(mk())
+        u2, y2 = narma_series(96, order=10, seed=5)
+        tuned = StreamSession(sid=1, u_seq=u2, targets=y2, learn_washout=24)
+        eng.submit_autotuned(tuned, _space(), budget=5, seed=9)
+        while eng.step_chunk():
+            pass
+        shared = eng.pop_results()
+        assert set(shared) == {0, 1}  # probe sids (negative) never leak
+
+        assert shared[0].learn_nmse == solo.learn_nmse
+        np.testing.assert_array_equal(shared[0].final_m, solo.final_m)
+        np.testing.assert_array_equal(shared[0].states, solo.states)
+        np.testing.assert_array_equal(
+            np.asarray(shared[0].learned_readout.w_out),
+            np.asarray(solo.learned_readout.w_out),
+        )
+
+
+class TestWashoutAutotune:
+    def test_end_to_end_winner_frozen_and_served(self):
+        spec, plan = _spec(), _plan(e=4)
+        eng = ReservoirEngine(compile_plan(spec, plan), max_retained=3)
+        u, y = narma_series(80, order=10, seed=2)
+        session = StreamSession(sid=7, u_seq=u, targets=y, learn_washout=20)
+        result = eng.submit_autotuned(session, _space(), budget=5, seed=0)
+        assert len(result.trials) == 5
+        assert all(t.engine_key == "live" for t in result.trials)
+        winner = result.best.assignment
+        assert float(session.params.current) == winner["current"]
+        assert float(session.params.a_cp) == winner["a_cp"]
+        assert eng.max_retained == 3  # restored after the probe phase
+        while eng.step_chunk():
+            pass
+        served = eng.pop_results()
+        assert set(served) == {7}
+        assert np.isfinite(served[7].learn_nmse)
+
+    def test_probe_history_is_seed_deterministic(self):
+        spec, plan = _spec(), _plan(e=4)
+        u, y = narma_series(80, order=10, seed=2)
+        hists = []
+        for _ in range(2):
+            eng = ReservoirEngine(compile_plan(spec, plan))
+            s = StreamSession(sid=0, u_seq=u.copy(), targets=y.copy(),
+                              learn_washout=20)
+            r = eng.submit_autotuned(s, _space(), budget=5, seed=4)
+            hists.append([(t.trial_id, t.fitness) for t in r.trials])
+        assert hists[0] == hists[1]
+
+    def test_validation(self):
+        spec = _spec()
+        u, y = narma_series(40, order=10, seed=0)
+
+        plain_eng = ReservoirEngine(
+            compile_plan(spec, ExecPlan(impl="scan", ensemble=4, chunk_ticks=8))
+        )
+        with pytest.raises(ValueError, match="learning engine"):
+            plain_eng.submit_autotuned(
+                StreamSession(sid=0, u_seq=u, targets=y, learn_washout=10),
+                _space(), budget=2,
+            )
+
+        eng = ReservoirEngine(compile_plan(spec, _plan(e=4)))
+        with pytest.raises(ValueError, match="targets"):
+            eng.submit_autotuned(
+                StreamSession(sid=0, u_seq=u, learn_washout=10), _space(),
+                budget=2,
+            )
+        with pytest.raises(ValueError, match="learn_washout"):
+            eng.submit_autotuned(
+                StreamSession(sid=0, u_seq=u, targets=y, learn_washout=0),
+                _space(), budget=2,
+            )
+        struct_space = SearchSpace({"hold_steps": Choice([2, 4])})
+        with pytest.raises(ValueError, match="lane knobs only"):
+            eng.submit_autotuned(
+                StreamSession(sid=0, u_seq=u, targets=y, learn_washout=10),
+                struct_space, budget=2,
+            )
+        with pytest.raises(ValueError, match="shorter than"):
+            washout_autotune(
+                eng,
+                StreamSession(sid=0, u_seq=u[:5], targets=y[:5],
+                              learn_washout=10),
+                _space(), budget=2,
+            )

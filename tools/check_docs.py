@@ -34,6 +34,7 @@ MARKDOWN = [
 
 DOCTEST_MODULES = [
     "repro.core.tasks",
+    "repro.tune.space",
 ]
 
 _LINK = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
