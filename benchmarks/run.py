@@ -267,12 +267,118 @@ def smoke(save_dispatch_table: bool = False) -> None:
         f"smoke: grid search winner changed with lane width "
         f"({tu['grid_winner']}) — vectorized fitness is off"
     )
+    # compile-path gates (process-wide PlanCache). Unlike the throughput
+    # ratios these are NOT noise-limited: the warm side of each ratio is a
+    # dictionary hit and the "zero new compiles" assertions read the
+    # cache's own counters, so the gates are exact.
+    #   warm construction >= 5x cold   (quick grid's compile section; the
+    #                                  true ratio is ~1000x — 5x leaves
+    #                                  room for a pathologically slow host)
+    #   warm construction compiles     exactly zero (counter, not timing)
+    #   warm autoscale rescale         zero new XLA compiles after the
+    #                                  adjacent buckets were pre-warmed
+    from repro.api import PLAN_CACHE
+
+    co = smoke_bench["compile"]
+    assert co["cold_compiles"] >= 1, (
+        "smoke: compile bench's cold probe never compiled — the probe "
+        "spec collides with an earlier section's cache entry"
+    )
+    assert co["warm_compiles"] == 0, (
+        f"smoke: warm construction recompiled ({co['warm_compiles']}x) — "
+        f"the PlanCache key is unstable across identical requests"
+    )
+    assert co["warm_speedup"] >= 5.0, (
+        f"smoke: warm engine construction only {co['warm_speedup']:.1f}x "
+        f"faster than cold ({co['cold_s']:.2f}s -> {co['warm_s']:.4f}s) — "
+        f"below the 5x gate; the plan cache has regressed"
+    )
+    spec_rs = make_spec(n=16, n_in=1, hold_steps=5, seed=81_001,
+                        dtype=jnp.float32)
+    eng_rs = ReservoirEngine(
+        compile_plan(spec_rs, ExecPlan(ensemble=4, chunk_ticks=4)),
+        autoscale=True, min_slots=2, max_slots=8,
+    )
+    # warm current width + adjacent buckets synchronously: 2, 4 and 8 are
+    # now all warm-marked, so neither the rescale nor its trailing
+    # background pre-warm round has any compile left to race the counter
+    eng_rs.prewarm(block=True)
+    compiles_before = PLAN_CACHE.stats.compiles
+    eng_rs._rescale(8)
+    rescale_compiles = PLAN_CACHE.stats.compiles - compiles_before
+    st = eng_rs.stats()
+    assert rescale_compiles == 0, (
+        f"smoke: rescale into a pre-warmed bucket triggered "
+        f"{rescale_compiles} XLA compile(s) — zero-stall autoscale is "
+        f"broken"
+    )
+    assert st.cold_rescales == 0 and st.warm_rescales >= 1, (
+        f"smoke: pre-warmed rescale accounted as cold "
+        f"(cold={st.cold_rescales}, warm={st.warm_rescales})"
+    )
+    print(
+        f"smoke_compile_gates,0.0,warm_{co['warm_speedup']:.0f}x"
+        f"_rescale_compiles_{rescale_compiles}"
+    )
+    # revisiting-structural tune gate: the same CMA-ES search over a
+    # structural knob run twice — the second run draws every per-combo
+    # CompiledSim out of the shared PlanCache (zero compiles), must be
+    # >= 2x faster wall-clock, and must reproduce the first run's trial
+    # fitnesses bit-for-bit (cached engines are the same executables)
+    import time as _time
+
+    from repro.tune import Choice, Float, SearchSpace, narma_task, tune_spec
+
+    tune_task = narma_task(48, order=10, seed=5)
+    revisit_space = SearchSpace({
+        "drive_current": Float(0.5e-3, 4.5e-3),
+        "hold_steps": Choice((4, 6)),
+    })
+    revisit_plan = ExecPlan(impl="scan", ensemble=4, chunk_ticks=4,
+                            learn="rls")
+
+    def _revisit():
+        t0 = _time.perf_counter()
+        res = tune_spec(
+            make_spec(n=16, n_in=1, hold_steps=5, seed=82_001,
+                      dtype=jnp.float32),
+            tune_task, revisit_space, budget=8, plan=revisit_plan,
+            strategy="cmaes", seed=4,
+        )
+        return _time.perf_counter() - t0, res
+
+    compiles_before = PLAN_CACHE.stats.compiles
+    t_first, res_first = _revisit()
+    first_compiles = PLAN_CACHE.stats.compiles - compiles_before
+    t_second, res_second = _revisit()
+    second_compiles = PLAN_CACHE.stats.compiles - compiles_before - first_compiles
+    assert second_compiles == 0, (
+        f"smoke: revisiting tune run recompiled {second_compiles} "
+        f"structural combo(s) the first run already cached"
+    )
+    fits_first = [t.fitness for t in res_first.trials]
+    fits_second = [t.fitness for t in res_second.trials]
+    assert fits_first == fits_second, (
+        "smoke: revisiting tune run's fitnesses differ from the first — "
+        "cached engines are not bit-identical to fresh compiles"
+    )
+    tune_revisit_speedup = t_first / max(t_second, 1e-9)
+    assert tune_revisit_speedup >= 2.0, (
+        f"smoke: revisiting structural tune only {tune_revisit_speedup:.1f}x "
+        f"faster ({t_first:.2f}s -> {t_second:.2f}s, first run compiled "
+        f"{first_compiles}) — below the 2x gate"
+    )
+    print(
+        f"smoke_tune_revisit,0.0,speedup_{tune_revisit_speedup:.1f}x"
+        f"_combo_compiles_{first_compiles}_then_{second_compiles}"
+    )
     print(
         f"smoke_perf_gates,0.0,pipelined_min_"
         f"{min(c['pipelined_speedup'] for c in smoke_bench['cells']):.1f}x"
         f"_fleet_{ratio:.2f}x_planner_err_"
         f"{fl['planner_vs_measured_err']:.0%}"
         f"_tune_{tu['tune_speedup']:.1f}x"
+        f"_revisit_{tune_revisit_speedup:.1f}x"
     )
     if save_dispatch_table:
         _save_dispatch_table(out)

@@ -63,6 +63,12 @@ online learner) and sequentially (ensemble=1) — `tune_speedup` is the
 within-run wall-clock ratio and `best_match_sequential` pins that lane
 width cannot change the winner.
 
+plus a COMPILE section (`bench_compile`): cold vs warm engine spin-up
+through the process-wide PlanCache, pure-AOT `lower().compile()` seconds,
+and a two-subprocess probe of the JAX persistent compilation cache
+(cross-restart cold-start) — `BENCH_serve.json["compile"]`, refreshable
+alone via `--compile-only`.
+
 Emits the shared `name,us_per_call,derived` CSV rows and writes
 BENCH_serve.json (benchmarks/run.py wires it into the suite) so future PRs
 can track the serving-perf trajectory. `kernels.dispatch_table
@@ -581,7 +587,7 @@ def bench_fleet(
     the ratio as min(R, cores): near-linear on multi-core hosts, ~1.0 on
     a single-core host (where the fleet buys capacity and isolation, not
     FLOPs). Both prediction and measurement are recorded."""
-    from repro.serve.fleet import CapacityModel, usable_cores
+    from repro.serve.fleet import CapacityModel, measure_probe_rates, usable_cores
 
     cores = usable_cores()
     if transport is None:
@@ -609,23 +615,18 @@ def bench_fleet(
     # re-measured ONCE with the grid's own burst methodology on a bare
     # engine. Non-circular — the probe never touches the fleet stack the
     # measurement goes through, so the error still bills router/replica
-    # overhead and the bursty-injection queueing.
+    # overhead and the bursty-injection queueing. The probe engines draw
+    # from the process-wide PlanCache (`measure_probe_rates`), so the
+    # replicas that just served the workload above already paid every
+    # compile the probe needs — recalibration costs pure measurement.
     planner = CapacityModel.from_bench(bench_payload)
-    probe = {}
-    for n, e in FLEET_POOLS:
-        spec = make_spec(n=n, n_in=1, hold_steps=HOLD_STEPS, dtype=jnp.float32)
-        eng = ReservoirEngine(
-            compile_plan(spec, ExecPlan(ensemble=e, chunk_ticks=CHUNK_TICKS)),
-            max_retained=e,
-        )
-        _drain_time(
-            eng, _mk_sessions(WAVES * e, CHUNK_TICKS, 1, rng), pipelined=True
-        )  # warm the full admit/retire shape repertoire
-        t_probe, ticks_probe = _drain_time(
-            eng, _mk_sessions(WAVES * e, TICKS, 1, rng, base_sid=600_000),
-            pipelined=True,
-        )
-        probe.setdefault(n, {})[e] = ticks_probe / t_probe
+    probe = measure_probe_rates(
+        FLEET_POOLS,
+        hold_steps=HOLD_STEPS,
+        chunk_ticks=CHUNK_TICKS,
+        stream_ticks=TICKS,
+        waves=WAVES,
+    )
     host_scale = planner.recalibrate(probe)
     sessions_total = FLEET_BURSTS * FLEET_SESSIONS_PER_POOL_BURST
     pred_t1 = sum(
@@ -729,6 +730,146 @@ def fleet_smoke(replicas: int = 2, min_ratio: float = 1.5, print_fn=print) -> bo
     return ok
 
 
+def _compile_probe_child(conn, n, e, k, hold_steps, cache_dir):
+    """Spawn target for the persistent-cache columns: build + warm ONE
+    engine config in a fresh process and report wall seconds. With both
+    probes pointed at the same `cache_dir`, the first populates the JAX
+    persistent compilation cache and the second reads its XLA executables
+    off disk — the cross-restart cold-start the ExecPlan flag buys."""
+    try:
+        import time as _time
+
+        import jax.numpy as _jnp
+
+        from repro.api import ExecPlan, compile_plan, make_spec
+
+        t0 = _time.perf_counter()
+        spec = make_spec(n=n, n_in=1, hold_steps=hold_steps, dtype=_jnp.float32)
+        sim = compile_plan(
+            spec,
+            ExecPlan(
+                ensemble=e, chunk_ticks=k, compilation_cache_dir=cache_dir
+            ),
+        )
+        sim.warmup()
+        conn.send(("ok", _time.perf_counter() - t0))
+    except Exception as exc:  # noqa: BLE001 — report, don't hang the parent
+        conn.send(("err", f"{type(exc).__name__}: {exc}"))
+
+
+def bench_compile(quick: bool = False, print_fn=print) -> dict:
+    """Compile-path columns: what the PlanCache and the persistent disk
+    cache each buy, in seconds, on this host.
+
+      cold_s            PLAN_CACHE.ensure_warm of a fresh structural spec:
+                        XLA compile + first chunk execution
+      warm_s            the identical call again — cache hit, zero compiles
+      warm_speedup      cold_s / warm_s (the autoscale / fleet spin-up win;
+                        benchmarks/run.py --smoke gates >= 5x)
+      aot_s             lower().compile() of a second structural variant:
+                        pure ahead-of-time compile seconds, no execution
+      persistent_cold_s / persistent_warm_s / persistent_speedup
+                        two spawned subprocesses against one shared
+                        on-disk JAX compilation cache: the first pays the
+                        compile and populates disk, the second reads it
+                        back — process-restart cold-start. None when the
+                        persistent cache is unavailable on this jaxlib.
+    """
+    import multiprocessing as mp
+    import tempfile
+
+    from repro.api import PLAN_CACHE, ExecPlan, compile_plan, make_spec
+
+    # Deliberately off-grid N: the tick workers are module-level jit
+    # functions, so any (shape, statics) signature another section already
+    # ran would make "cold" a JAX-level jit hit instead of a real XLA
+    # compile. An N no other section uses guarantees cold pays the
+    # compile; the unique seed keeps the PlanCache entry fresh too.
+    n, e = (19, 8) if quick else (131, 16)
+    plan = ExecPlan(ensemble=e, chunk_ticks=CHUNK_TICKS)
+    spec_cold = make_spec(
+        n=n, n_in=1, hold_steps=HOLD_STEPS, seed=91_001, dtype=jnp.float32
+    )
+
+    compiles0 = PLAN_CACHE.stats.compiles
+    t0 = time.perf_counter()
+    PLAN_CACHE.ensure_warm(spec_cold, plan)
+    cold_s = time.perf_counter() - t0
+    cold_compiles = PLAN_CACHE.stats.compiles - compiles0
+    t0 = time.perf_counter()
+    PLAN_CACHE.ensure_warm(spec_cold, plan)
+    warm_s = time.perf_counter() - t0
+    warm_compiles = PLAN_CACHE.stats.compiles - compiles0 - cold_compiles
+
+    # AOT column on a distinct structural variant so it pays a real lower
+    spec_aot = make_spec(
+        n=n, n_in=1, hold_steps=HOLD_STEPS + 2, seed=91_002, dtype=jnp.float32
+    )
+    t0 = time.perf_counter()
+    compile_plan(spec_aot, plan).aot_compile()
+    aot_s = time.perf_counter() - t0
+
+    persistent_cold_s = persistent_warm_s = None
+    try:
+        ctx = mp.get_context("spawn")
+        with tempfile.TemporaryDirectory(prefix="jaxcache-") as cache_dir:
+            times = []
+            for _ in range(2):
+                parent, child = ctx.Pipe()
+                proc = ctx.Process(
+                    target=_compile_probe_child,
+                    args=(child, n, e, CHUNK_TICKS, HOLD_STEPS, cache_dir),
+                    daemon=True,
+                )
+                proc.start()
+                child.close()
+                status, payload = parent.recv()
+                proc.join(timeout=60)
+                parent.close()
+                if status != "ok":
+                    raise RuntimeError(payload)
+                times.append(payload)
+            persistent_cold_s, persistent_warm_s = times
+    except Exception as exc:  # noqa: BLE001 — column is best-effort
+        print_fn(f"compile bench: persistent-cache probe skipped ({exc})")
+
+    out = {
+        "n": n,
+        "slots": e,
+        "chunk_ticks": CHUNK_TICKS,
+        "cold_s": cold_s,
+        "cold_compiles": cold_compiles,
+        "warm_s": warm_s,
+        "warm_compiles": warm_compiles,
+        "warm_speedup": cold_s / max(warm_s, 1e-9),
+        "aot_s": aot_s,
+        "persistent_cold_s": persistent_cold_s,
+        "persistent_warm_s": persistent_warm_s,
+        "persistent_speedup": (
+            persistent_cold_s / max(persistent_warm_s, 1e-9)
+            if persistent_cold_s is not None
+            else None
+        ),
+        "cache_stats": PLAN_CACHE.stats.snapshot(),
+    }
+    print_fn(
+        csv_row(
+            "serve_compile_cold",
+            cold_s * 1e6,
+            f"warm_{out['warm_speedup']:.0f}x_aot_{aot_s:.2f}s",
+        )
+    )
+    if persistent_cold_s is not None:
+        print_fn(
+            csv_row(
+                "serve_compile_persistent",
+                persistent_warm_s * 1e6,
+                f"vs_cold_{out['persistent_speedup']:.2f}x",
+            )
+        )
+    return out
+
+
 def run(
     out_path: str = "BENCH_serve.json",
     quick: bool = False,
@@ -757,6 +898,7 @@ def run(
         )
     if tune:
         payload["tune"] = bench_tune(print_fn=print_fn)
+    payload["compile"] = bench_compile(quick=quick, print_fn=print_fn)
     with open(out_path, "w") as f:
         json.dump(payload, f, indent=2)
     print_fn(csv_row("serve_json", 0.0, out_path))
@@ -777,6 +919,18 @@ def run_fleet_only(
     return payload["fleet"]
 
 
+def run_compile_only(out_path: str = "BENCH_serve.json", print_fn=print):
+    """Re-measure ONLY the compile section, merging into the existing grid
+    file (the compile columns take seconds, the grid takes minutes)."""
+    with open(out_path) as f:
+        payload = json.load(f)
+    payload["compile"] = bench_compile(print_fn=print_fn)
+    with open(out_path, "w") as f:
+        json.dump(payload, f, indent=2)
+    print_fn(csv_row("serve_json", 0.0, out_path))
+    return payload["compile"]
+
+
 if __name__ == "__main__":
     import argparse
 
@@ -790,6 +944,9 @@ if __name__ == "__main__":
                     help="skip the tune (vectorized search) columns")
     ap.add_argument("--fleet-only", action="store_true",
                     help="re-measure only the fleet column, merge into --out")
+    ap.add_argument("--compile-only", action="store_true",
+                    help="re-measure only the cold/warm/persistent compile "
+                         "columns, merge into --out")
     ap.add_argument("--fleet-smoke", action="store_true",
                     help="CI gate: 2-replica bursty mixed-N smoke through "
                          "the async front-end; exits nonzero on failure")
@@ -798,6 +955,8 @@ if __name__ == "__main__":
         raise SystemExit(0 if fleet_smoke(replicas=args.replicas) else 1)
     elif args.fleet_only:
         run_fleet_only(out_path=args.out, replicas=args.replicas)
+    elif args.compile_only:
+        run_compile_only(out_path=args.out)
     else:
         run(out_path=args.out, quick=args.quick, fleet=not args.no_fleet,
             replicas=args.replicas, tune=not args.no_tune)

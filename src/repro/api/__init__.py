@@ -17,11 +17,25 @@ sharded serving is just `ExecPlan(mesh=...)`, chunked serving
 and reduced-precision execution `ExecPlan(precision="mixed")`.
 Capabilities are added as ExecPlan fields, not new entry points
 (docs/ARCHITECTURE.md).
+
+Compilation itself is a shared, memoized resource: `PLAN_CACHE`
+(repro.api.cache) maps (spec structural hash, plan key) -> CompiledSim so
+autoscale buckets, fleet replicas, and tune combos compile once per
+process — `PLAN_CACHE.get_or_compile(spec, plan)` is the cached analogue
+of `compile_plan`, and `ExecPlan(compilation_cache_dir=...)` extends the
+reuse across process restarts via JAX's persistent compilation cache.
 """
 
 from repro.api.spec import SimSpec, make_spec, LANE_TUNABLE, STRUCT_TUNABLE
 from repro.api.plan import ExecPlan, PLAN_IMPLS, PLAN_PRECISIONS, PLAN_TUNABLE
 from repro.api.compiled import CompiledSim, compile_plan
+from repro.api.cache import (
+    PLAN_CACHE,
+    PlanCache,
+    enable_persistent_cache,
+    plan_cache_key,
+    spec_structural_hash,
+)
 
 __all__ = [
     "SimSpec",
@@ -34,4 +48,9 @@ __all__ = [
     "PLAN_TUNABLE",
     "CompiledSim",
     "compile_plan",
+    "PLAN_CACHE",
+    "PlanCache",
+    "enable_persistent_cache",
+    "plan_cache_key",
+    "spec_structural_hash",
 ]

@@ -941,6 +941,120 @@ class CompiledSim:
             precision=self.precision,
         )
 
+    # -- warm-up / AOT -----------------------------------------------------
+
+    def _warmup_inputs(self, n_out: int):
+        """Representative zero-valued tick_chunk inputs: shapes and dtypes
+        match what the serving loop dispatches (mask values never change
+        the executable), so compiling on these warms the real hot path."""
+        spec = self.spec
+        k = max(self.plan.chunk_ticks, 1)
+        m = ops.to_planes(jnp.broadcast_to(spec.m0, (self.e, spec.n, 3)))
+        u = jnp.zeros((k, self.e, spec.n_in), spec.dtype)
+        mask = jnp.zeros((k, self.e), dtype=bool)
+        if self.plan.learn is None:
+            return m, u, mask, None, None
+        s = spec.n + 1
+        if self.plan.learn == "lms":
+            state = (None, krls.lms_init(self.e, s, n_out, spec.dtype))
+        else:
+            state = krls.rls_init(
+                self.e, s, n_out, self.plan.learn_reg, spec.dtype
+            )
+        targets = jnp.zeros((k, self.e, n_out), spec.dtype)
+        return m, u, mask, targets, state
+
+    def warmup(self, n_out: int = 1) -> "CompiledSim":
+        """Force XLA compilation of the chunked serving hot path by
+        executing ONE all-lanes-masked zero chunk (per-FLOP cost of a
+        single chunk; masked lanes make it state-neutral by construction).
+
+        Unlike `aot_compile`, this populates the in-process jit fast path
+        for the exact executable `tick_chunk` dispatches — an engine that
+        rescales into a warmed bucket pays zero XLA work at the chunk
+        boundary. Learn plans specialize on n_out (the readout width is a
+        trace shape); pass the serving n_out to warm that variant.
+        """
+        m, u, mask, targets, state = self._warmup_inputs(n_out)
+        if targets is None:
+            out = self.tick_chunk(m, u, lane_mask=mask)
+        else:
+            out = self.tick_chunk(
+                m, u, lane_mask=mask, targets=targets,
+                learn_state=state, learn_mask=mask,
+            )
+        jax.block_until_ready(out[0])
+        return self
+
+    def _chunk_worker_call(self, n_out: int = 1):
+        """(jitted worker, args, kwargs) for the exact module-level call
+        tick_chunk dispatches — the AOT lowering target."""
+        if self.plan.sharded:
+            raise NotImplementedError(
+                "AOT lowering covers unsharded plans; sharded plans warm by "
+                "executing one masked chunk (CompiledSim.warmup)"
+            )
+        spec = self.spec
+        params_e = self.ensemble_params()
+        m, u, mask, targets, state = self._warmup_inputs(n_out)
+        planes_kw = dict(
+            dt=float(spec.dt), hold_steps=spec.hold_steps, impl=self.impl,
+            n_inner=self._n_inner, block_n=self._block_n,
+            block_e=self._block_e, interpret=self.plan.interpret,
+            precision=self.precision,
+        )
+        if self.plan.learn is None:
+            if self.impl == "scan":
+                return _tick_chunk_scan, (
+                    params_e, spec.w_cp, spec.w_in, m, u, mask,
+                    self._dt_scan, spec.hold_steps, spec.tableau,
+                ), {}
+            return _tick_chunk_planes, (
+                params_e, spec.w_cp, spec.w_in, m, u, mask,
+            ), planes_kw
+        p0, w0 = state
+        if self.plan.learn == "lms":
+            if self.impl == "scan":
+                return _tick_chunk_scan_lms, (
+                    params_e, spec.w_cp, spec.w_in, m, u, mask, targets,
+                    mask, w0, self._mu, self._dt_scan, spec.hold_steps,
+                    spec.tableau,
+                ), {}
+            return _tick_chunk_planes_lms, (
+                params_e, spec.w_cp, spec.w_in, m, u, mask, targets,
+                mask, w0,
+            ), dict(mu=self._mu, **planes_kw)
+        if self.impl == "scan":
+            return _tick_chunk_scan_rls, (
+                params_e, spec.w_cp, spec.w_in, m, u, mask, targets,
+                mask, p0, w0, self._lam, self._dt_scan, spec.hold_steps,
+                spec.tableau,
+            ), {}
+        return _tick_chunk_planes_rls, (
+            params_e, spec.w_cp, spec.w_in, m, u, mask, targets,
+            mask, p0, w0,
+        ), dict(lam=self._lam, **planes_kw)
+
+    def lower_tick_chunk(self, n_out: int = 1):
+        """AOT-lower the chunked hot path (a `jax.stages.Lowered`).
+
+        Raises NotImplementedError for sharded plans (use `warmup`)."""
+        fn, args, kwargs = self._chunk_worker_call(n_out)
+        return fn.lower(*args, **kwargs)
+
+    def aot_compile(self, n_out: int = 1) -> "CompiledSim":
+        """`lower().compile()` the chunked hot path without executing it.
+
+        Zero FLOPs: the XLA compile happens now (and lands in the
+        persistent compilation cache when one is configured — see
+        `ExecPlan.compilation_cache_dir`) instead of at first dispatch.
+        The in-process jit fast path still keys its own first call, so
+        serving loops that must never stall use `warmup` instead; AOT is
+        the restart-survival and compile-time-measurement path.
+        """
+        self.lower_tick_chunk(n_out).compile()
+        return self
+
 
 # ---------------------------------------------------------------------------
 # compile_plan
@@ -961,6 +1075,11 @@ def compile_plan(spec: SimSpec, plan: Optional[ExecPlan] = None, **overrides) ->
         plan = ExecPlan(**overrides)
     elif overrides:
         plan = dataclasses.replace(plan, **overrides)
+
+    if plan.compilation_cache_dir:
+        from repro.api import cache as _cache  # deferred: cache imports us
+
+        _cache.enable_persistent_cache(plan.compilation_cache_dir)
 
     if spec.tableau not in integrators.TABLEAUX:
         raise ValueError(
@@ -992,7 +1111,11 @@ def compile_plan(spec: SimSpec, plan: Optional[ExecPlan] = None, **overrides) ->
             # both the measurement and the lookup are precision-keyed (the
             # impl ranking shifts when the coupling GEMM goes bf16)
             if plan.measure:
-                ops.measure_impl_latency(
+                # memoized through the process-wide PlanCache: identical
+                # (platform, N, E, dtype, precision, K) keys are timed once
+                from repro.api import cache as _cache
+
+                _cache.PLAN_CACHE.measure(
                     spec.n, plan.ensemble, dt=float(spec.dt),
                     dtype=spec.dtype, precision=plan.effective_precision,
                     chunk_ticks=max(plan.chunk_ticks, 1),
@@ -1011,4 +1134,10 @@ def compile_plan(spec: SimSpec, plan: Optional[ExecPlan] = None, **overrides) ->
             f"the fused kernels integrate classical RK4 only; impl={impl!r} "
             f"cannot run tableau {spec.tableau!r} (use impl='scan' or 'ref')"
         )
-    return CompiledSim(spec, plan, impl)
+    sim = CompiledSim(spec, plan, impl)
+    if plan.aot:
+        try:
+            sim.aot_compile()
+        except NotImplementedError:
+            sim.warmup()
+    return sim

@@ -64,6 +64,20 @@ Every execution decision that used to be scattered across
              cost the `repro.tune` search lanes want at large S. None
              (default) keeps tick_chunk inference-only (signature and
              results unchanged).
+  aot        ahead-of-time compile: `compile_plan` immediately lowers and
+             compiles the chunked serving hot path (`lower().compile()`,
+             falling back to executing one masked zero chunk where AOT is
+             not wired, e.g. sharded plans) instead of deferring XLA work
+             to the first dispatch. Pair with `compilation_cache_dir` to
+             populate the on-disk cache at spin-up.
+  compilation_cache_dir  opt into JAX's persistent compilation cache: the
+             XLA executables this plan compiles are spilled to (and read
+             back from) this directory, so cold-start survives process
+             restarts. First configured directory wins for the process
+             (api/cache.enable_persistent_cache); launcher flag
+             `--compilation-cache-dir` threads it through serve + fleet.
+             Neither field changes numerics or the compiled executable —
+             both are excluded from the PlanCache key.
   learn_lam  RLS forgetting factor in (0, 1]. 1.0 (default) weights all
              history equally and converges to batch ridge regression;
              < 1 exponentially forgets, tracking non-stationary targets.
@@ -118,6 +132,8 @@ class ExecPlan:
     learn_mu: float = 0.5  # NLMS step size, (0, 2)
     interpret: bool = False
     measure: bool = False  # time impl candidates at compile, pin the winner
+    aot: bool = False  # lower().compile() the hot path at compile_plan time
+    compilation_cache_dir: Optional[str] = None  # JAX persistent cache dir
 
     def __post_init__(self):
         if self.impl not in PLAN_IMPLS:
@@ -188,6 +204,13 @@ class ExecPlan:
             raise ValueError(
                 f"learn_mu (NLMS step size) must be a float in (0, 2); got "
                 f"{self.learn_mu!r}"
+            )
+        if self.compilation_cache_dir is not None and not isinstance(
+            self.compilation_cache_dir, str
+        ):
+            raise ValueError(
+                "compilation_cache_dir must be a directory path string or "
+                f"None; got {self.compilation_cache_dir!r}"
             )
 
     def with_knobs(self, **knobs) -> "ExecPlan":

@@ -80,6 +80,16 @@ def fused_fits_vmem(n: int, block_e: int, itemsize: int = 4) -> bool:
 # on most CPUs).
 _LATENCY_TABLE: Dict[Tuple[str, int, int, int, str], str] = {}
 
+# Bumped on every register_impl_choice(): the api-layer PlanCache keys
+# impl="auto" resolutions on this, so a cached auto plan is invalidated
+# (and re-resolves) the moment a new measurement pins a different winner.
+_DISPATCH_GEN = 0
+
+
+def dispatch_generation() -> int:
+    """Monotonic version of the in-process dispatch table state."""
+    return _DISPATCH_GEN
+
 # The bit-exact default's tag in dispatch keys (ExecPlan.precision None
 # and "highest" collapse to this).
 PRECISION_DEFAULT = "highest"
@@ -100,7 +110,9 @@ def register_impl_choice(
 ):
     """Pin the dispatch choice for a padded (N, E, itemsize, precision)
     shape on a platform."""
+    global _DISPATCH_GEN
     platform = platform or jax.default_backend()
+    _DISPATCH_GEN += 1
     _LATENCY_TABLE[
         (
             platform,

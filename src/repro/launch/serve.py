@@ -158,6 +158,7 @@ def main_reservoir(args):
                 chunk_ticks=args.chunk_ticks,
                 precision=args.precision,
                 learn=args.learn,
+                compilation_cache_dir=args.compilation_cache_dir,
             ),
         ),
         **autoscale_kw,
@@ -247,6 +248,7 @@ def main_fleet(args):
         backend=args.backend,
         chunk_ticks=args.chunk_ticks,
         precision=args.precision,
+        compilation_cache_dir=args.compilation_cache_dir,
     )
     for r in replicas:
         router.add_replica(r)
@@ -342,6 +344,12 @@ def main(argv=None):
     ap.add_argument("--bench", default=None,
                     help="BENCH_serve.json to calibrate the capacity planner "
                          "from (default: ./BENCH_serve.json if present)")
+    ap.add_argument("--compilation-cache-dir", default=None,
+                    help="directory for JAX's persistent compilation cache: "
+                         "XLA executables round-trip through disk, so a "
+                         "restarted server (and every process replica "
+                         "pointed at the same directory) skips its "
+                         "cold-start compiles")
     args = ap.parse_args(argv)
 
     if args.autotune_budget and not args.learn:

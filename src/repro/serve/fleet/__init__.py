@@ -15,7 +15,14 @@ fleet fields.
 """
 
 from .frontend import AdmissionError, FleetFrontend
-from .planner import CapacityModel, FleetPlan, ReplicaSpec, WorkloadClass, usable_cores
+from .planner import (
+    CapacityModel,
+    FleetPlan,
+    ReplicaSpec,
+    WorkloadClass,
+    measure_probe_rates,
+    usable_cores,
+)
 from .replica import (
     LocalReplica,
     ProcessReplica,
@@ -37,6 +44,7 @@ __all__ = [
     "ReplicaSpec",
     "WorkloadClass",
     "make_engine",
+    "measure_probe_rates",
     "start_fleet",
     "usable_cores",
 ]

@@ -69,6 +69,71 @@ def usable_cores() -> int:
         return os.cpu_count() or 1
 
 
+def measure_probe_rates(
+    pools: Sequence,
+    hold_steps: int,
+    chunk_ticks: int,
+    stream_ticks: int,
+    waves: int = 2,
+    seed: int = 7,
+) -> Dict[int, Dict[int, float]]:
+    """Same-run host probe for `recalibrate`: each (n, e) pool cell
+    re-measured ONCE as sustained ticks/sec of a full churn-billed drain
+    on a bare engine — the grid's own burst methodology, outside the
+    fleet stack, so the planner error still bills router/replica overhead.
+
+    Probe engines draw from the process-wide plan cache
+    (`repro.api.PLAN_CACHE`), so a probe that runs alongside fleet
+    spin-up over the same pool shapes — `benchmarks/serve_throughput.
+    bench_fleet` does exactly that — re-traces nothing. The warm pass
+    still executes: recalibration wants execution-speed truth, and that
+    is unaffected by where the compile came from. Returns the
+    `{n: {e: rate}}` mapping `recalibrate` consumes."""
+    import time
+
+    import jax
+    import jax.numpy as jnp
+
+    from repro.api import PLAN_CACHE, ExecPlan, make_spec
+    from repro.serve.reservoir import ReservoirEngine, StreamSession
+
+    rng = np.random.default_rng(seed)
+    probe: Dict[int, Dict[int, float]] = {}
+    for n, e in pools:
+        spec = make_spec(n=n, n_in=1, hold_steps=hold_steps, dtype=jnp.float32)
+        eng = ReservoirEngine(
+            PLAN_CACHE.get_or_compile(
+                spec, ExecPlan(ensemble=e, chunk_ticks=chunk_ticks)
+            ),
+            max_retained=e,
+        )
+
+        def _drain(num: int, ticks: int, base_sid: int):
+            sessions = [
+                StreamSession(
+                    sid=base_sid + i,
+                    u_seq=rng.uniform(0.0, 0.5, size=(ticks, 1)).astype(
+                        np.float32
+                    ),
+                    collect_states=False,
+                )
+                for i in range(num)
+            ]
+            t0_ticks = eng.scheduler.stats.session_ticks
+            t0 = time.perf_counter()
+            eng.run(sessions)
+            jax.block_until_ready(eng.store.m)
+            dt = time.perf_counter() - t0
+            return dt, eng.scheduler.stats.session_ticks - t0_ticks
+
+        # warm the full admit/retire shape repertoire before timing
+        _drain(waves * e, chunk_ticks, 0)
+        dt, served = _drain(waves * e, stream_ticks, 600_000)
+        eng.pop_results()
+        probe.setdefault(n, {})[e] = served / dt
+    return probe
+
+
 def _nnls(x: np.ndarray, y: np.ndarray) -> np.ndarray:
     """Non-negative least squares by active-set pruning: solve, drop
     negative coefficients, re-solve on the survivors. Small fixed feature

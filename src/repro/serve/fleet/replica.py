@@ -57,8 +57,17 @@ def make_engine(
     autoscale: bool = False,
     min_slots: Optional[int] = None,
     max_slots: Optional[int] = None,
+    compilation_cache_dir: Optional[str] = None,
 ) -> ReservoirEngine:
-    """Default replica engine factory (module-level: pickles into spawn)."""
+    """Default replica engine factory (module-level: pickles into spawn).
+
+    The engine's template route draws from the process-wide PlanCache, so
+    local replicas of one config share a single CompiledSim; process
+    replicas each compile in their own process — point
+    `compilation_cache_dir` at a shared directory and their XLA
+    executables come off disk instead (JAX persistent compilation cache),
+    which is what makes `start_fleet(transport="process")` spin-up warm
+    across restarts."""
     res = make_reservoir(n=n, n_in=n_in, hold_steps=hold_steps, seed=seed)
     return ReservoirEngine(
         res,
@@ -71,6 +80,7 @@ def make_engine(
         autoscale=autoscale or None,
         min_slots=min_slots,
         max_slots=max_slots,
+        compilation_cache_dir=compilation_cache_dir,
     )
 
 
@@ -135,6 +145,13 @@ class LocalReplica:
     def stats(self) -> EngineStats:
         return self.engine.stats()
 
+    def prewarm(self) -> None:
+        """Warm-start: compile + execute the serving hot path (and adjacent
+        autoscale buckets) before traffic arrives — the router calls this
+        on a migration destination so a restored session's first chunk
+        never stalls on XLA."""
+        self.engine.prewarm(block=True)
+
     def close(self) -> None:
         pass
 
@@ -180,6 +197,9 @@ def _child_main(conn, factory, engine_kw: Dict[str, Any]) -> None:
                 conn.send(("ok", None))
             elif op == "stats":
                 conn.send(("ok", engine.stats()))
+            elif op == "prewarm":
+                engine.prewarm(block=True)
+                conn.send(("ok", None))
             elif op == "stop":
                 conn.send(("ok", None))
                 return
@@ -271,6 +291,10 @@ class ProcessReplica:
 
     def stats(self) -> EngineStats:
         return self._rpc("stats")
+
+    def prewarm(self) -> None:
+        """Warm-start the child's engine (see LocalReplica.prewarm)."""
+        self._rpc("prewarm")
 
     def close(self) -> None:
         if self._proc.is_alive():

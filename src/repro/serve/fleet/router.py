@@ -103,6 +103,15 @@ class FleetRouter:
             dst = min(others, key=lambda r: r.pending)
         if dst is src:
             return src
+        # warm-start the destination BEFORE moving the stream: dst's hot
+        # path (and adjacent autoscale buckets) compile through the shared
+        # plan cache now, so the restored session's next chunk dispatches
+        # a ready executable instead of stalling mid-migration on XLA.
+        # getattr-guarded: third-party replica objects without prewarm
+        # migrate exactly as before.
+        dst_prewarm = getattr(dst, "prewarm", None)
+        if dst_prewarm is not None:
+            dst_prewarm()
         ckpt = src.checkpoint_session(sid)
         dst.restore_session(ckpt)
         self._affinity[sid] = dst

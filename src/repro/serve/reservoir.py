@@ -63,6 +63,7 @@ advances all of them in lockstep.
 from __future__ import annotations
 
 import dataclasses
+import threading
 import time
 from collections import deque
 from typing import Dict, List, Optional, Tuple, Union
@@ -71,7 +72,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.api import CompiledSim, ExecPlan, SimSpec, compile_plan
+from repro.api import PLAN_CACHE, CompiledSim, ExecPlan, SimSpec, compile_plan
 from repro.core.constants import STOParams
 from repro.core.reservoir import Readout, Reservoir, coerce_input_series
 from repro.serve.scheduler import AutoscalePolicy, QueueDepthPolicy, SlotScheduler
@@ -216,6 +217,11 @@ class EngineStats:
     grows: int
     shrinks: int
     detached: int
+    # rescale compile behavior (see SchedulerStats): cold = bucket had to
+    # compile at the boundary, stalling rescale_stall_s total seconds
+    cold_rescales: int
+    warm_rescales: int
+    rescale_stall_s: float
     chunk_median_s: Optional[float]  # median wall time of recent chunks
     chunks_timed: int
     ticks_per_sec: Optional[float]  # E * K / chunk_median_s
@@ -283,6 +289,29 @@ def _bucket_slots(demand: int, min_slots: int, max_slots: int) -> int:
     return min(b, max_slots)
 
 
+def _bucket_ladder(min_slots: int, max_slots: int) -> List[int]:
+    """Every width `_bucket_slots` can return: min_slots * 2^k while below
+    max_slots, plus the clamp bucket max_slots itself (which need not be a
+    power-of-two multiple)."""
+    ladder = []
+    b = min_slots
+    while b < max_slots:
+        ladder.append(b)
+        b *= 2
+    ladder.append(max_slots)
+    return ladder
+
+
+def _ensemble_axis_size(plan: ExecPlan) -> int:
+    """Devices the ensemble axis spans on a sharded plan (1 if unsharded)."""
+    if plan.mesh is None:
+        return 1
+    size = 1
+    for a in plan.ensemble_axes:
+        size *= int(plan.mesh.shape[a])
+    return size
+
+
 # ---------------------------------------------------------------------------
 # Engine
 # ---------------------------------------------------------------------------
@@ -321,6 +350,20 @@ class ReservoirEngine:
                     route; CompiledSim route: set on the ExecPlan):
                     None/"highest" bit-exact, "bf16_coupling"/"mixed"
                     reduced — see repro.api.plan.ExecPlan.precision.
+      compilation_cache_dir  (template route) opt into JAX's persistent
+                    compilation cache so cold-start survives restarts —
+                    see repro.api.plan.ExecPlan.compilation_cache_dir.
+      prewarm       autoscale engines pre-compile + warm the adjacent
+                    buckets in a background daemon thread (at construction
+                    and after every rescale), so `_rescale` at a chunk
+                    boundary finds its bucket ready in the process-wide
+                    PlanCache — zero XLA stall. prewarm=False disables the
+                    thread (deterministic compile counting in tests);
+                    `prewarm_buckets(block=True)` warms explicitly.
+
+    Compilation is shared: the template route and every rescale draw from
+    `repro.api.PLAN_CACHE`, so repeated engines over the same topology and
+    plan (fleet replicas, tune combos) compile once per process.
     """
 
     def __init__(
@@ -341,6 +384,8 @@ class ReservoirEngine:
         learn_reg: Optional[float] = None,
         learn_mu: Optional[float] = None,
         precision: Optional[str] = None,
+        compilation_cache_dir: Optional[str] = None,
+        prewarm: bool = True,
     ):
         if isinstance(res, CompiledSim):
             sim = res
@@ -360,12 +405,13 @@ class ReservoirEngine:
                 or learn_reg is not None
                 or learn_mu is not None
                 or precision is not None
+                or compilation_cache_dir is not None
             ):
                 raise ValueError(
-                    "backend/measure/interpret/chunk_ticks/learn*/precision "
-                    "are ExecPlan decisions; when constructing from a "
-                    "CompiledSim, set them on the plan passed to compile_plan "
-                    "instead"
+                    "backend/measure/interpret/chunk_ticks/learn*/precision/"
+                    "compilation_cache_dir are ExecPlan decisions; when "
+                    "constructing from a CompiledSim, set them on the plan "
+                    "passed to compile_plan instead"
                 )
             num_slots = sim.plan.ensemble
         else:
@@ -380,7 +426,10 @@ class ReservoirEngine:
             # XLA path over the planes layout (unpadded, measured faster than
             # the core-layout scan at every (N, E)); "scan" remains available
             # as the core-layout mode that reproduces solo drive() bit-for-bit.
-            sim = compile_plan(
+            # Drawn through the process-wide PlanCache: engines built from
+            # the same topology + plan (fleet replicas, repeated spin-ups)
+            # share one CompiledSim instead of re-tracing it.
+            sim = PLAN_CACHE.get_or_compile(
                 spec,
                 ExecPlan(
                     impl=backend,
@@ -393,6 +442,7 @@ class ReservoirEngine:
                     learn_reg=1e-6 if learn_reg is None else learn_reg,
                     learn_mu=0.5 if learn_mu is None else learn_mu,
                     precision=precision,
+                    compilation_cache_dir=compilation_cache_dir,
                 ),
             )
         self.sim = sim
@@ -429,10 +479,20 @@ class ReservoirEngine:
                     f"num={num_slots} max={self.max_slots}"
                 )
             if sim.plan.sharded:
-                raise ValueError(
-                    "autoscale on sharded plans is not supported yet: "
-                    "resizing E would change the mesh decomposition mid-serve"
-                )
+                # every reachable bucket width must divide evenly across
+                # the mesh's ensemble axis, or a rescale would strand lanes
+                # on a decomposition the shard_map body can't express
+                axis = _ensemble_axis_size(sim.plan)
+                widths = [num_slots] + _bucket_ladder(self.min_slots, self.max_slots)
+                bad = sorted({w for w in widths if w % axis})
+                if bad:
+                    raise ValueError(
+                        "autoscale on a sharded plan requires every bucket "
+                        "width to be divisible by the ensemble-axis size "
+                        f"{axis} (mesh axes {tuple(sim.plan.ensemble_axes)}); "
+                        f"min_slots={self.min_slots} / max_slots="
+                        f"{self.max_slots} reach incompatible widths {bad}"
+                    )
             leaf = jnp.asarray(sim.spec.params.gamma)
             if leaf.ndim != 0:
                 raise ValueError(
@@ -440,6 +500,12 @@ class ReservoirEngine:
                     "params ride in session lanes, not the spec)"
                 )
         self._sims: Dict[int, CompiledSim] = {num_slots: sim}
+        # background pre-warm of adjacent autoscale buckets (daemon thread;
+        # advisory — _rescale compiles on demand if the thread hasn't won)
+        self._prewarm_enabled = bool(prewarm)
+        self._prewarm_thread: Optional[threading.Thread] = None
+        if self._prewarm_enabled and self.autoscale is not None:
+            self.prewarm_buckets()
 
         # -- pipelined-chunk bookkeeping ------------------------------------
         # sessions whose final tick was served by the most recently LAUNCHED
@@ -769,13 +835,33 @@ class ReservoirEngine:
 
         Occupied slots compact into the low lanes of the new store (one
         gather-scatter of the (3, N, E) planes + readout lanes); running
-        sessions keep streaming across the boundary bit-identically."""
+        sessions keep streaming across the boundary bit-identically.
+
+        The bucket is drawn from the process-wide PlanCache. A bucket the
+        background pre-warm thread (prewarm_buckets) already compiled AND
+        executed costs zero XLA work here (warm_rescales); otherwise the
+        boundary pays the compile NOW — warmed synchronously so the stall
+        is measured here (cold_rescales / rescale_stall_s) instead of
+        surfacing as one mysteriously slow chunk."""
+        stats = self.scheduler.stats
         sim = self._sims.get(new_e)
-        if sim is None:
-            sim = compile_plan(
-                self.sim.spec,
-                dataclasses.replace(self.sim.plan, ensemble=new_e),
+        if sim is not None:
+            stats.warm_rescales += 1
+        else:
+            spec = self.sim.spec
+            plan_b = dataclasses.replace(self.sim.plan, ensemble=new_e)
+            n_out = self.store.n_out
+            warm = PLAN_CACHE.contains(spec, plan_b) and PLAN_CACHE.is_warm(
+                spec, plan_b, n_out=n_out
             )
+            t0 = time.perf_counter()
+            sim = PLAN_CACHE.get_or_compile(spec, plan_b)
+            PLAN_CACHE.warm(sim, n_out=n_out)
+            if warm:
+                stats.warm_rescales += 1
+            else:
+                stats.cold_rescales += 1
+                stats.rescale_stall_s += time.perf_counter() - t0
             self._sims[new_e] = sim
         slot_map = {old: new for new, old in enumerate(sorted(self.scheduler.running))}
         self.store = self.store.resized(new_e, slot_map)
@@ -785,6 +871,67 @@ class ReservoirEngine:
         self.sim = sim
         self.backend = sim.impl
         self.precision = sim.precision
+        if self._prewarm_enabled:
+            self.prewarm_buckets()
+
+    def prewarm(self, block: bool = True) -> None:
+        """Warm-start the engine: force XLA compilation of the current
+        width's serving hot path (one masked zero chunk through the shared
+        PlanCache) plus the adjacent autoscale buckets. The fleet spin-up /
+        migration warm-start entry point — after this, the first real
+        chunk and the next rescale both dispatch pre-compiled executables."""
+        PLAN_CACHE.warm(self.sim, n_out=self.store.n_out)
+        self.prewarm_buckets(block=block)
+
+    def prewarm_buckets(self, block: bool = False) -> Tuple[int, ...]:
+        """Pre-compile the autoscale buckets adjacent to the current width.
+
+        Runs in a daemon thread so a later `_rescale` at a chunk boundary
+        finds its bucket already compiled AND warmed in the shared
+        PlanCache — the serving loop never stalls on XLA. The compile runs
+        outside the cache lock with per-key in-flight events, so a
+        concurrent `_rescale` racing the pre-warm waits for that one
+        compile rather than duplicating it. Advisory: failures are
+        swallowed (the rescale path compiles on demand), and a still-busy
+        previous pre-warm skips this round. Returns the widths scheduled;
+        block=True waits for completion (tests, explicit warm spin-up)."""
+        if self.autoscale is None:
+            return ()
+        if self._prewarm_thread is not None and self._prewarm_thread.is_alive():
+            if not block:
+                return ()
+            self._prewarm_thread.join()
+        ladder = _bucket_ladder(self.min_slots, self.max_slots)
+        below = [b for b in ladder if b < self.num_slots]
+        above = [b for b in ladder if b > self.num_slots]
+        spec, plan = self.sim.spec, self.sim.plan
+        n_out = self.store.n_out
+        targets = tuple(
+            b
+            for b in ([below[-1]] if below else []) + ([above[0]] if above else [])
+            if not PLAN_CACHE.is_warm(
+                spec, dataclasses.replace(plan, ensemble=b), n_out=n_out
+            )
+        )
+        if not targets:
+            return ()
+
+        def work():
+            for b in targets:
+                try:
+                    sim = PLAN_CACHE.ensure_warm(
+                        spec, dataclasses.replace(plan, ensemble=b), n_out=n_out
+                    )
+                    self._sims.setdefault(b, sim)
+                except Exception:  # advisory: the serving loop compiles on demand
+                    pass
+
+        t = threading.Thread(target=work, daemon=True, name="plan-prewarm")
+        self._prewarm_thread = t
+        t.start()
+        if block:
+            t.join()
+        return targets
 
     # -- the synchronous per-tick path --------------------------------------
 
@@ -1296,6 +1443,9 @@ class ReservoirEngine:
             grows=sched.stats.grows,
             shrinks=sched.stats.shrinks,
             detached=sched.stats.detached,
+            cold_rescales=sched.stats.cold_rescales,
+            warm_rescales=sched.stats.warm_rescales,
+            rescale_stall_s=sched.stats.rescale_stall_s,
             chunk_median_s=median,
             chunks_timed=len(timed),
             ticks_per_sec=(

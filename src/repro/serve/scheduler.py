@@ -41,6 +41,14 @@ class SchedulerStats:
     # autoscale events applied via remap()
     grows: int = 0
     shrinks: int = 0
+    # rescale compile behavior: warm_rescales drew an already-compiled
+    # bucket from the process-wide plan cache (zero XLA work at the chunk
+    # boundary); cold_rescales had to compile, stalling the serving loop
+    # for rescale_stall_s total seconds — a nonzero cold count with the
+    # background pre-warm enabled means demand outran the prewarm thread
+    cold_rescales: int = 0
+    warm_rescales: int = 0
+    rescale_stall_s: float = 0.0
     # sessions detached mid-stream (fleet checkpoint/migration) — they
     # leave without counting as retired, so occupancy stays honest
     detached: int = 0

@@ -41,7 +41,7 @@ from typing import Callable, Dict, List, Optional, Tuple
 
 import numpy as np
 
-from repro.api import ExecPlan, SimSpec, compile_plan
+from repro.api import PLAN_CACHE, ExecPlan, SimSpec
 from repro.tune.results import Trial, TuneResult
 from repro.tune.space import SearchSpace
 from repro.tune.strategies import Strategy, make_strategy
@@ -167,11 +167,16 @@ def tune_spec(
     from repro.serve.reservoir import ReservoirEngine, StreamSession
 
     def _get_engine(spec_kw: Dict, plan_kw: Dict, key: str):
+        # one live engine per structural combo per CALL (lanes/sessions are
+        # call-local state), but the CompiledSim underneath comes from the
+        # process-wide PLAN_CACHE — a CMA-ES population that revisits a
+        # structural combo, or a second tune_spec call over the same space,
+        # re-traces nothing (structural hash ignores lane param values)
         eng = engines.get(key)
         if eng is None:
             spec_g = spec.with_knobs(**spec_kw)
             plan_g = plan.with_knobs(**plan_kw) if plan_kw else plan
-            eng = ReservoirEngine(compile_plan(spec_g, plan_g))
+            eng = ReservoirEngine(PLAN_CACHE.get_or_compile(spec_g, plan_g))
             engines[key] = eng
         return eng
 
