@@ -82,6 +82,34 @@ def smoke(save_dispatch_table: bool = False) -> None:
     results = eng.run(sessions)
     print(f"smoke_serve_chunked,0.0,served_{len(results)}_chunk_{eng.chunk_ticks}")
 
+    # physics families + mixed-spec tenancy: a time-multiplexed and an
+    # array-transient tenant ride the coupled-array engine above; each
+    # stream must be bit-identical to a dedicated engine for its spec
+    from repro.api import make_array_transient_spec, make_time_multiplexed_spec
+
+    spec_tm = make_time_multiplexed_spec(6, hold_steps=4)
+    spec_at = make_array_transient_spec(8, readout_window=3, hold_steps=5)
+    fam_u = {
+        1: np.random.default_rng(21).uniform(0, 1, 9).astype(np.float32),
+        2: np.random.default_rng(22).uniform(0, 1, 9).astype(np.float32),
+    }
+    mixed_eng = ReservoirEngine(spec, num_slots=2, backend="scan", chunk_ticks=4)
+    mixed_eng.submit(StreamSession(sid=1, u_seq=fam_u[1], spec=spec_tm))
+    mixed_eng.submit(StreamSession(sid=2, u_seq=fam_u[2], spec=spec_at))
+    mixed = mixed_eng.run()
+    for sid, fam_spec in ((1, spec_tm), (2, spec_at)):
+        solo_eng = ReservoirEngine(fam_spec, num_slots=2, backend="scan", chunk_ticks=4)
+        solo_eng.submit(StreamSession(sid=sid, u_seq=fam_u[sid]))
+        solo = solo_eng.run()[sid]
+        assert np.array_equal(mixed[sid].states, solo.states), (
+            f"smoke: mixed-spec tenant {sid} ({fam_spec.topology}) deviates "
+            "from its dedicated engine"
+        )
+    print(
+        "smoke_families_tenancy,0.0,"
+        f"subengines_{mixed_eng.stats().sub_engines}_bitmatch_solo"
+    )
+
     # online learning end-to-end: a learning engine trains per-tenant
     # readouts while streaming; the learned weights must match the offline
     # fit_rls oracle run over the harvested states (scan backend: bitwise)

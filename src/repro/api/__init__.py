@@ -26,8 +26,24 @@ of `compile_plan`, and `ExecPlan(compilation_cache_dir=...)` extends the
 reuse across process restarts via JAX's persistent compilation cache.
 """
 
-from repro.api.spec import SimSpec, make_spec, LANE_TUNABLE, STRUCT_TUNABLE
-from repro.api.plan import ExecPlan, PLAN_IMPLS, PLAN_PRECISIONS, PLAN_TUNABLE
+from repro.api.spec import (
+    SimSpec,
+    TOPOLOGIES,
+    LANE_TUNABLE,
+    STRUCT_TUNABLE,
+    make_array_transient_spec,
+    make_spec,
+    make_time_multiplexed_spec,
+    validate_topology,
+)
+from repro.api.plan import (
+    ExecPlan,
+    FAMILY_IMPLS,
+    PLAN_IMPLS,
+    PLAN_PRECISIONS,
+    PLAN_TUNABLE,
+    check_plan_supports_topology,
+)
 from repro.api.compiled import CompiledSim, compile_plan
 from repro.api.cache import (
     PLAN_CACHE,
@@ -39,8 +55,14 @@ from repro.api.cache import (
 
 __all__ = [
     "SimSpec",
+    "TOPOLOGIES",
     "make_spec",
+    "make_time_multiplexed_spec",
+    "make_array_transient_spec",
+    "validate_topology",
     "ExecPlan",
+    "FAMILY_IMPLS",
+    "check_plan_supports_topology",
     "PLAN_IMPLS",
     "PLAN_PRECISIONS",
     "LANE_TUNABLE",

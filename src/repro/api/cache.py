@@ -71,22 +71,50 @@ __all__ = [
     "spec_structural_hash",
 ]
 
-_HASH_VERSION = b"spec-structural-v1"
+_HASH_VERSION = b"spec-structural-v2"  # v2: physics-family fields joined the hash
+
+#: Every SimSpec field spec_structural_hash accounts for. This is a FENCE:
+#: the hash refuses to run on a spec whose field set it does not cover, so
+#: adding a SimSpec field without deciding its hash treatment is a loud
+#: TypeError at the first cache lookup, never a silent cross-physics cache
+#: collision (pinned by tests/conformance/test_hash_guard.py).
+_STRUCTURAL_FIELDS = (
+    "params",
+    "w_cp",
+    "w_in",
+    "m0",
+    "dt",
+    "hold_steps",
+    "tableau",
+    "topology",
+    "readout_window",
+)
 
 
 def spec_structural_hash(spec: SimSpec) -> str:
     """Canonical hash of the compilation-relevant SimSpec fields.
 
     Two specs with the same hash compile to the same executable: same
-    shapes, dtypes, topology contents, timestep, hold window, and tableau.
+    shapes, dtypes, topology contents, timestep, hold window, tableau, and
+    physics family (topology tag + readout window — different families
+    trace different workers, so they must never share a cache line).
     Scalar param values are excluded (lane-resident inputs); ensemble-leaved
     params contribute shape only.
     """
+    unknown = set(spec._fields) - set(_STRUCTURAL_FIELDS)
+    if unknown:
+        raise TypeError(
+            "spec_structural_hash does not cover SimSpec field(s) "
+            f"{sorted(unknown)}; extend _STRUCTURAL_FIELDS in "
+            "repro/api/cache.py (and bump _HASH_VERSION) so new physics "
+            "fields key the cache instead of colliding"
+        )
     h = hashlib.blake2b(digest_size=16)
     h.update(_HASH_VERSION)
     h.update(
         f"|{spec.n}|{spec.n_in}|{np.dtype(spec.dtype).name}"
-        f"|{float(spec.dt)!r}|{int(spec.hold_steps)}|{spec.tableau}".encode()
+        f"|{float(spec.dt)!r}|{int(spec.hold_steps)}|{spec.tableau}"
+        f"|{spec.topology}|{int(spec.readout_window)}".encode()
     )
     for name in ("w_cp", "w_in", "m0"):
         a = np.asarray(getattr(spec, name))

@@ -54,7 +54,7 @@ from repro.kernels import ops
 from repro.kernels import ref as kref
 from repro.kernels import rls as krls
 
-from repro.api.plan import ExecPlan
+from repro.api.plan import ExecPlan, check_plan_supports_topology
 from repro.api.spec import SimSpec
 from repro.api import sharded as _sharded
 
@@ -474,6 +474,235 @@ def _integrate_planes(
 
 
 # ---------------------------------------------------------------------------
+# jit'd workers — physics families (SimSpec.topology != "coupled_array")
+#
+# One chunk worker per layout covers every family: topology/readout_window
+# are static arguments, so each family specializes its own executable while
+# sharing this single code path (the family analogue of the "capabilities
+# are fields, not entry points" rule). The coupled_array workers above are
+# untouched — family dispatch happens in CompiledSim, so pre-family plans
+# trace the identical graphs they always did.
+# ---------------------------------------------------------------------------
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("topology", "readout_window", "hold_steps", "tableau_name"),
+)
+def _tick_chunk_scan_family(
+    params_e, w_cp, w_in, m_planes, u_block, mask_block, dt,
+    *, topology, readout_window, hold_steps, tableau_name="rk4",
+):
+    """K-tick family chunk in the core (E, N, 3) layout — the family oracle.
+
+    topology="array_transient": `_tick_chunk_scan`'s coupled dynamics with
+    the hold window split (hold_steps - w) + w and the emitted state the
+    mean of the last w substeps' x-components — the same per-step op
+    sequence, so readout_window=1 is bit-identical to `_tick_chunk_scan`.
+
+    topology="time_multiplexed": one physical oscillator per lane
+    (uncoupled core field, w_cp=None); the inner scan over the N virtual
+    nodes is the delay line. Per tick the node drives are the masked input
+    field plus the delayed feedback a_cp * (W^cp @ x_prev) from the
+    previous tick's snapshots; row j of the state is node j's snapshot.
+    """
+    m = jnp.transpose(m_planes, (2, 1, 0))  # (E, N, 3)
+    tableau = integrators.TABLEAUX[tableau_name]
+
+    if topology == "time_multiplexed":
+
+        def field(mm, h):
+            return sto.llg_field(mm, params_e, None, h)  # single oscillator
+
+        step = integrators.make_step(field, tableau)
+
+        def per_tick(m_c, tick_in):
+            u_t, mask_t = tick_in
+            x_prev = m_c[..., 0]  # (E, N) previous tick's snapshots
+            h = params_e.a_in * jnp.einsum("ni,ei->en", w_in, u_t)
+            h = h + params_e.a_cp * jnp.einsum("nj,ej->en", w_cp, x_prev)
+            s0 = m_c[:, -1:, :]  # carried oscillator state (E, 1, 3)
+
+            def per_node(s, h_col):  # h_col (E,) — this node's drive
+                def inner(si, _):
+                    return step(si, dt, h_col[:, None]), None
+
+                s_new, _ = jax.lax.scan(inner, s, None, length=hold_steps)
+                return s_new, s_new[:, 0, :]  # snapshot (E, 3)
+
+            sT, snaps = jax.lax.scan(per_node, s0, jnp.transpose(h))
+            m_new = jnp.transpose(snaps, (1, 0, 2))  # (E, N, 3)
+            m_new = jnp.where(mask_t[:, None, None], m_new, m_c)
+            return m_new, jnp.transpose(m_new[..., 0])  # (N, E)
+
+        mT, states = jax.lax.scan(per_tick, m, (u_block, mask_block))
+        return jnp.transpose(mT, (2, 1, 0)), states  # (3, N, E), (K, N, E)
+
+    # array_transient
+    def field(mm, h):
+        return sto.llg_field(mm, params_e, w_cp, h)
+
+    step = integrators.make_step(field, tableau)
+    w = int(readout_window)
+
+    def per_tick(m_c, tick_in):
+        u_t, mask_t = tick_in
+        h_in = params_e.a_in * jnp.einsum("ni,ei->en", w_in, u_t)  # (E, N)
+
+        def inner(mi, _):
+            return step(mi, dt, h_in), None
+
+        m_mid = m_c
+        if hold_steps > w:
+            m_mid, _ = jax.lax.scan(inner, m_c, None, length=hold_steps - w)
+
+        def tail(mi, _):
+            mi2 = step(mi, dt, h_in)
+            return mi2, mi2[..., 0]  # (E, N)
+
+        m_new, xs = jax.lax.scan(tail, m_mid, None, length=w)
+        state = jnp.mean(xs, axis=0) if w > 1 else xs[0]
+        m_new = jnp.where(mask_t[:, None, None], m_new, m_c)
+        state = jnp.where(mask_t[:, None], state, m_c[..., 0])
+        return m_new, jnp.transpose(state)  # (N, E)
+
+    mT, states = jax.lax.scan(per_tick, m, (u_block, mask_block))
+    return jnp.transpose(mT, (2, 1, 0)), states  # (3, N, E), (K, N, E)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=(
+        "topology", "readout_window", "dt", "hold_steps", "impl", "n_inner",
+        "block_n", "block_e", "interpret", "precision",
+    ),
+)
+def _tick_chunk_planes_family(
+    params_e, w_cp, w_in, m_planes, u_block, mask_block,
+    *, topology, readout_window, dt, hold_steps, impl, n_inner, block_n,
+    block_e, interpret, precision="highest",
+):
+    """K-tick family chunk in the kernel (3, N, E) planes layout.
+
+    Every family computes the whole (K, N, E) input-field block with ONE
+    GEMM per chunk (`_input_field`, "mixed" reduces it) and casts W once
+    (`ops._coupling_operand`, "bf16_coupling"/"mixed" reduce it) — for
+    time_multiplexed the W cast lands on the delayed-feedback GEMM, the
+    family's one O(N^2) term. impl="ref" and impl="chunk" share one body
+    per family (kernels/ref.py), so they are bit-identical by construction;
+    array_transient under "fused"/"tiled" splits each hold window through
+    the Pallas launchers ((hold - w) fused steps + w single steps).
+    """
+    e = m_planes.shape[-1]
+    pv = kref.pack_params(params_e, e, m_planes.dtype)
+    a_in = jnp.reshape(params_e.a_in, (-1,)) * jnp.ones((e,), m_planes.dtype)
+    h_block = _input_field(w_in, u_block, a_in, precision)  # (K, N, E)
+    w_c = ops._coupling_operand(w_cp, precision)
+
+    if topology == "time_multiplexed":
+        return kref.tm_chunk_planes(
+            m_planes, w_c, pv, dt, hold_steps, h_block, mask_block
+        )
+
+    # array_transient
+    if impl in ("ref", "chunk"):
+        return kref.rk4_chunk_planes_window(
+            m_planes, w_c, pv, dt, hold_steps, readout_window,
+            h_block, mask_block,
+        )
+
+    w = int(readout_window)
+    kw = dict(
+        dt=dt, impl=impl, block_n=block_n, block_e=block_e,
+        interpret=interpret, precision=precision,
+    )
+
+    def per_tick(m_c, tick_in):
+        h_t, mask_t = tick_in
+        m_mid = m_c
+        if hold_steps > w:
+            m_mid = ops._integrate_planes_jit(
+                m_c, w_cp, pv, h_t, None,
+                n_steps=hold_steps - w,
+                n_inner=min(n_inner, hold_steps - w), **kw,
+            )
+
+        def tail(s, _):
+            s2 = ops._integrate_planes_jit(
+                s, w_cp, pv, h_t, None, n_steps=1, n_inner=1, **kw
+            )
+            return s2, s2[0]
+
+        m_new, xs = jax.lax.scan(tail, m_mid, None, length=w)  # xs (w, N, E)
+        state = jnp.mean(xs, axis=0) if w > 1 else xs[0]
+        m_new = jnp.where(mask_t[None, None, :], m_new, m_c)
+        state = jnp.where(mask_t[None, :], state, m_c[0])
+        return m_new, state
+
+    mT, states = jax.lax.scan(per_tick, m_planes, (h_block, mask_block))
+    return mT, states  # (3, N, E), (K, N, E)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=(
+        "learn", "knob", "topology", "readout_window", "hold_steps",
+        "tableau_name",
+    ),
+)
+def _tick_chunk_scan_family_learn(
+    params_e, w_cp, w_in, m_planes, u_block, mask_block, y_block,
+    lmask_block, p0, w0, dt,
+    *, learn, knob, topology, readout_window, hold_steps, tableau_name,
+):
+    """Family chunk + online readout update, one dispatch (core layout).
+
+    The learn tails are topology-blind — they consume the (K, N, E) states
+    block whatever physics produced it — so families inherit both learners
+    from the coupled path unchanged (learn="rls": knob=lam; "lms": knob=mu,
+    p0=None)."""
+    mT, states = _tick_chunk_scan_family(
+        params_e, w_cp, w_in, m_planes, u_block, mask_block, dt,
+        topology=topology, readout_window=readout_window,
+        hold_steps=hold_steps, tableau_name=tableau_name,
+    )
+    if learn == "lms":
+        wT, preds = _lms_chunk_tail(states, y_block, lmask_block, w0, knob)
+        return mT, states, wT, preds
+    pT, wT, preds = _learn_chunk_tail(states, y_block, lmask_block, p0, w0, knob)
+    return mT, states, pT, wT, preds
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=(
+        "learn", "knob", "topology", "readout_window", "dt", "hold_steps",
+        "impl", "n_inner", "block_n", "block_e", "interpret", "precision",
+    ),
+)
+def _tick_chunk_planes_family_learn(
+    params_e, w_cp, w_in, m_planes, u_block, mask_block, y_block,
+    lmask_block, p0, w0,
+    *, learn, knob, topology, readout_window, dt, hold_steps, impl, n_inner,
+    block_n, block_e, interpret, precision="highest",
+):
+    """Family chunk + online readout update, one dispatch (planes layout).
+    As everywhere else, the learn recursion runs in the state dtype —
+    reduced precision stops at the readout-learning boundary."""
+    mT, states = _tick_chunk_planes_family(
+        params_e, w_cp, w_in, m_planes, u_block, mask_block,
+        topology=topology, readout_window=readout_window, dt=dt,
+        hold_steps=hold_steps, impl=impl, n_inner=n_inner, block_n=block_n,
+        block_e=block_e, interpret=interpret, precision=precision,
+    )
+    if learn == "lms":
+        wT, preds = _lms_chunk_tail(states, y_block, lmask_block, w0, knob)
+        return mT, states, wT, preds
+    pT, wT, preds = _learn_chunk_tail(states, y_block, lmask_block, p0, w0, knob)
+    return mT, states, pT, wT, preds
+
+
+# ---------------------------------------------------------------------------
 # CompiledSim
 # ---------------------------------------------------------------------------
 
@@ -486,6 +715,8 @@ class CompiledSim:
         self.plan = plan
         self.impl = impl  # resolved: scan | ref | fused | tiled | chunk
         self.e = plan.ensemble
+        self.topology = spec.topology
+        self._readout_window = int(spec.readout_window)
         self._block_n = plan.block_n or ops.LANE
         self._block_e = plan.block_e or ops.LANE
         self._n_inner = plan.n_inner or spec.hold_steps
@@ -596,6 +827,13 @@ class CompiledSim:
             raise ValueError(
                 f"m0 must have shape {tuple(spec.m0.shape)}; got {tuple(m_start.shape)}"
             )
+        if self.topology != "coupled_array":
+            # families drive through their chunk worker: T ticks, one lane
+            mT, states = self._family_chunk_infer(
+                self.ensemble_params(), ops.to_planes(m_start),
+                u_seq[:, None, :], jnp.ones((u_seq.shape[0], 1), dtype=bool),
+            )
+            return ops.from_planes(mT, ()), states[:, :, 0]
         if self.impl == "scan":
             # a (1, 1)-leaved ensemble-of-one spec is legal; the solo scan
             # math wants scalar leaves (identical values, broadcast-free)
@@ -628,6 +866,13 @@ class CompiledSim:
         spec = self.spec
         m0_e = self._coerce_batch_m0(m0)
         params_e = self.ensemble_params(params)
+        if self.topology != "coupled_array":
+            u_e = self._coerce_batch_u(u_seq)
+            mT, states = self._family_chunk_infer(
+                params_e, ops.to_planes(m0_e), u_e,
+                jnp.ones((u_e.shape[0], self.e), dtype=bool),
+            )
+            return ops.from_planes(mT, (self.e,)), jnp.transpose(states, (0, 2, 1))
         if self.plan.sharded:
             # a shared series stays (T, N_in): replicated on every device,
             # contracted once per sample ('ni,i->n') instead of per lane
@@ -670,6 +915,14 @@ class CompiledSim:
         reproduces the legacy `ensemble.integrate_ensemble` exactly.
         """
         spec = self.spec
+        if self.topology == "time_multiplexed":
+            raise ValueError(
+                "integrate() free-runs the coupled array; a time_multiplexed "
+                "reservoir has no input-free virtual-node evolution — drive "
+                "it with a zero input series instead"
+            )
+        # array_transient falls through: its free-run dynamics ARE the
+        # coupled array's (the readout window only shapes emitted states)
         m0_e = self._coerce_batch_m0(m0)
         params_e = self.ensemble_params(params)
         if self.plan.sharded:
@@ -728,6 +981,13 @@ class CompiledSim:
         params_e = self.ensemble_params(params)
         if lane_mask is None:
             lane_mask = jnp.ones((self.e,), dtype=bool)
+        if self.topology != "coupled_array":
+            # a tick is a K=1 chunk: one body per family keeps serving's
+            # per-tick and chunked paths bit-identical by construction
+            mT, states = self._family_chunk_infer(
+                params_e, m_planes, u[None], jnp.asarray(lane_mask, bool)[None]
+            )
+            return mT, states[0]
         if self.plan.sharded:
             m = jnp.transpose(m_planes, (2, 1, 0))  # (E, N, 3)
             m_new, states = _sharded.tick_sharded(
@@ -846,6 +1106,11 @@ class CompiledSim:
         lmask_block = (
             mask_block if learn_mask is None else self._coerce_tick_mask(learn_mask, k)
         )
+        if self.topology != "coupled_array":
+            return self._family_chunk_learn(
+                params_e, m_planes, u_block, mask_block, targets, lmask_block,
+                p0, w0,
+            )
         if self.plan.learn == "lms":
             if p0 is not None:
                 raise ValueError(
@@ -910,11 +1175,83 @@ class CompiledSim:
         )
         return mT, states, (pT, wT), preds
 
+    def _family_chunk_infer(
+        self, params_e, m_planes, u_block, mask_block
+    ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+        """Inference chunk for the non-coupled families (compile_plan keeps
+        mesh plans out of here — families are unsharded by validation)."""
+        spec = self.spec
+        if self.impl == "scan":
+            return _tick_chunk_scan_family(
+                params_e, spec.w_cp, spec.w_in, m_planes, u_block, mask_block,
+                self._dt_scan, topology=self.topology,
+                readout_window=self._readout_window,
+                hold_steps=spec.hold_steps, tableau_name=spec.tableau,
+            )
+        return _tick_chunk_planes_family(
+            params_e, spec.w_cp, spec.w_in, m_planes, u_block, mask_block,
+            topology=self.topology, readout_window=self._readout_window,
+            dt=float(spec.dt), hold_steps=spec.hold_steps, impl=self.impl,
+            n_inner=self._n_inner, block_n=self._block_n,
+            block_e=self._block_e, interpret=self.plan.interpret,
+            precision=self.precision,
+        )
+
+    def _family_chunk_learn(
+        self, params_e, m_planes, u_block, mask_block, targets, lmask_block,
+        p0, w0,
+    ):
+        """Learning chunk for the non-coupled families (same (P, W)/preds
+        contract as the coupled learn paths)."""
+        spec = self.spec
+        learn = self.plan.learn
+        if learn == "lms":
+            if p0 is not None:
+                raise ValueError(
+                    "learn='lms' carries no P block; pass learn_state="
+                    "(None, W) (see init_learn_state)"
+                )
+            knob = self._mu
+        else:
+            if p0 is None or p0.shape != (self.e, spec.n + 1, spec.n + 1):
+                raise ValueError(
+                    f"learn_state must be (P ({self.e}, {spec.n + 1}, "
+                    f"{spec.n + 1}), W ({self.e}, {spec.n + 1}, n_out)); got "
+                    f"P={None if p0 is None else tuple(p0.shape)}"
+                )
+            knob = self._lam
+        if self.impl == "scan":
+            out = _tick_chunk_scan_family_learn(
+                params_e, spec.w_cp, spec.w_in, m_planes, u_block, mask_block,
+                targets, lmask_block, p0, w0, self._dt_scan,
+                learn=learn, knob=knob, topology=self.topology,
+                readout_window=self._readout_window,
+                hold_steps=spec.hold_steps, tableau_name=spec.tableau,
+            )
+        else:
+            out = _tick_chunk_planes_family_learn(
+                params_e, spec.w_cp, spec.w_in, m_planes, u_block, mask_block,
+                targets, lmask_block, p0, w0,
+                learn=learn, knob=knob, topology=self.topology,
+                readout_window=self._readout_window, dt=float(spec.dt),
+                hold_steps=spec.hold_steps, impl=self.impl,
+                n_inner=self._n_inner, block_n=self._block_n,
+                block_e=self._block_e, interpret=self.plan.interpret,
+                precision=self.precision,
+            )
+        if learn == "lms":
+            mT, states, wT, preds = out
+            return mT, states, (None, wT), preds
+        mT, states, pT, wT, preds = out
+        return mT, states, (pT, wT), preds
+
     def _tick_chunk_infer(
         self, params_e, m_planes, u_block, mask_block
     ) -> Tuple[jnp.ndarray, jnp.ndarray]:
         """Inference-only chunk body (plan.learn is None)."""
         spec = self.spec
+        if self.topology != "coupled_array":
+            return self._family_chunk_infer(params_e, m_planes, u_block, mask_block)
         if self.plan.sharded:
             m = jnp.transpose(m_planes, (2, 1, 0))  # (E, N, 3)
             m_new, states = _sharded.tick_chunk_sharded(
@@ -993,6 +1330,11 @@ class CompiledSim:
             raise NotImplementedError(
                 "AOT lowering covers unsharded plans; sharded plans warm by "
                 "executing one masked chunk (CompiledSim.warmup)"
+            )
+        if self.topology != "coupled_array":
+            raise NotImplementedError(
+                "AOT lowering covers coupled_array plans; family plans warm "
+                "by executing one masked chunk (CompiledSim.warmup)"
             )
         spec = self.spec
         params_e = self.ensemble_params()
@@ -1086,6 +1428,14 @@ def compile_plan(spec: SimSpec, plan: Optional[ExecPlan] = None, **overrides) ->
             f"unknown tableau {spec.tableau!r}; choose from {sorted(integrators.TABLEAUX)}"
         )
 
+    # physics-family validation: the spec's family invariants, then the
+    # plan/family pairing (api/plan.FAMILY_IMPLS — e.g. the coupled-array
+    # Pallas kernels cannot express the time-multiplexed delay line)
+    from repro.api.spec import validate_topology
+
+    validate_topology(spec)
+    check_plan_supports_topology(plan, spec.topology)
+
     # fail here, with the fix spelled out, instead of deep inside a scan
     # trace: ensemble-leaved params must match the plan's width
     leaf = jnp.asarray(spec.params.gamma)
@@ -1128,6 +1478,13 @@ def compile_plan(spec: SimSpec, plan: Optional[ExecPlan] = None, **overrides) ->
                 # the table's winner was measured on RK4 workloads; an
                 # auto plan with another tableau falls back to the oracle
                 # instead of erroring on a choice the user never made
+                impl = "ref"
+            if (
+                spec.topology == "time_multiplexed"
+                and impl in ("fused", "tiled")
+            ):
+                # the table's winner was measured on the coupled array;
+                # fall back rather than error on an auto-made choice
                 impl = "ref"
     if impl in ("fused", "tiled", "chunk") and spec.tableau != "rk4":
         raise ValueError(

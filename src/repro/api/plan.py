@@ -105,6 +105,48 @@ PLAN_IMPLS = ("auto", "scan", "ref", "fused", "tiled", "chunk")
 PLAN_LEARN = (None, "rls", "lms")
 PLAN_PRECISIONS = (None, "highest", "bf16_coupling", "mixed")
 
+# Which impls can execute which physics family (SimSpec.topology). The
+# coupled-array Pallas kernels (fused/tiled) bake the N x N coupling GEMM
+# into every RK stage; the time-multiplexed delay line has no such stage
+# GEMM (feedback is once per tick), so those impls cannot express it and
+# compile_plan refuses the pairing up front ("auto" resolves around it).
+# Mesh plans shard the coupled array's N axis; neither family decomposes
+# that way (the delay line is sequential in N, the transient window is a
+# readout detail), so families are unsharded — scale them across ensemble
+# lanes / engine replicas instead.
+FAMILY_IMPLS = {
+    "coupled_array": PLAN_IMPLS,
+    "time_multiplexed": ("auto", "scan", "ref", "chunk"),
+    "array_transient": ("auto", "scan", "ref", "fused", "tiled", "chunk"),
+}
+
+
+def check_plan_supports_topology(plan: "ExecPlan", topology: str) -> None:
+    """Refuse plan/physics-family pairings that have no executable mapping.
+
+    Called by compile_plan after spec validation; kept here so the support
+    table lives next to PLAN_IMPLS and stays in sync with new impls.
+    """
+    allowed = FAMILY_IMPLS.get(topology)
+    if allowed is None:
+        raise ValueError(
+            f"unknown topology {topology!r}; expected one of "
+            f"{tuple(FAMILY_IMPLS)}"
+        )
+    if topology == "coupled_array":
+        return
+    if plan.mesh is not None:
+        raise ValueError(
+            f"mesh plans shard the coupled array; topology {topology!r} is "
+            "unsharded — scale it across ensemble lanes or engine replicas"
+        )
+    if plan.impl not in allowed:
+        raise ValueError(
+            f"impl {plan.impl!r} cannot execute topology {topology!r}; "
+            f"supported impls: {allowed}"
+        )
+
+
 # ExecPlan knobs `repro.tune` may search over. All are STRUCTURAL: each is
 # either a static argument of the jit'd learn workers (learn_lam / learn_mu
 # specialize the compiled update) or folded into per-lane init state once at

@@ -18,6 +18,7 @@ from __future__ import annotations
 from typing import NamedTuple, Optional
 
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core import constants, coupling
 from repro.core.constants import STOParams
@@ -38,6 +39,30 @@ from repro.core.constants import STOParams
 LANE_TUNABLE = STOParams._fields
 STRUCT_TUNABLE = ("dt", "hold_steps")
 
+# The physics families one SimSpec can describe (docs/ARCHITECTURE.md
+# "Physics families"). Following the repo rule — capabilities are
+# SimSpec/ExecPlan fields, not new entry points — a family is a `topology`
+# value, not a new class:
+#
+#   coupled_array     the paper's N-coupled STO array (the default; every
+#                     pre-family spec is this, so hashes/semantics of
+#                     existing specs are unchanged).
+#   time_multiplexed  Riou et al. (arXiv:1904.1236): ONE oscillator, N
+#                     virtual nodes realized by masking its input over a
+#                     delay loop. m0 row j is virtual node j's snapshot;
+#                     the carried physical state is row N-1. w_in is the
+#                     input mask, w_cp mixes the PREVIOUS tick's snapshots
+#                     into per-node feedback (identity = the classic
+#                     delay-line self-feedback), and params.a_cp is the
+#                     feedback gain.
+#   array_transient   Kanao et al. (arXiv:1905.07937): coupled-array
+#                     dynamics, but each tick's reservoir state is the
+#                     mean of m_x over the last `readout_window` RK
+#                     substeps of the hold window (the transient), not the
+#                     endpoint alone. readout_window=1 is bit-identical to
+#                     coupled_array.
+TOPOLOGIES = ("coupled_array", "time_multiplexed", "array_transient")
+
 
 class SimSpec(NamedTuple):
     """Pure physics description of one reservoir (or an ensemble template).
@@ -49,12 +74,16 @@ class SimSpec(NamedTuple):
     """
 
     params: STOParams
-    w_cp: jnp.ndarray  # (N, N) coupling topology
-    w_in: jnp.ndarray  # (N, N_in) input topology
+    w_cp: jnp.ndarray  # (N, N) coupling topology (family: feedback mixing)
+    w_in: jnp.ndarray  # (N, N_in) input topology (family: input mask)
     m0: jnp.ndarray  # (N, 3) canonical initial magnetization
     dt: float
     hold_steps: int  # integration steps per input sample
     tableau: str = "rk4"
+    # Physics-family fields (appended with defaults so positional
+    # construction of pre-family specs keeps meaning what it meant).
+    topology: str = "coupled_array"  # one of TOPOLOGIES
+    readout_window: int = 0  # array_transient: trailing substeps averaged
 
     @property
     def n(self) -> int:
@@ -136,6 +165,11 @@ class SimSpec(NamedTuple):
         """Project back to the legacy Reservoir tuple (drops the tableau)."""
         from repro.core.reservoir import Reservoir
 
+        if self.topology != "coupled_array":
+            raise ValueError(
+                "to_reservoir is lossy for physics families: the legacy "
+                f"Reservoir tuple has no topology field (got {self.topology!r})"
+            )
         return Reservoir(
             params=self.params,
             w_cp=self.w_cp,
@@ -143,6 +177,35 @@ class SimSpec(NamedTuple):
             m0=self.m0,
             dt=self.dt,
             hold_steps=self.hold_steps,
+        )
+
+
+def validate_topology(spec: SimSpec) -> None:
+    """Family invariants every consumer (compile_plan, engines) enforces.
+
+    Raises ValueError on an unknown topology or a readout_window that does
+    not fit the family: array_transient needs 1 <= readout_window <=
+    hold_steps (the averaged transient tail), every other family requires
+    the field left at 0 — a non-default window on a family that ignores it
+    would silently hash/serve as if it mattered.
+    """
+    if spec.topology not in TOPOLOGIES:
+        raise ValueError(
+            f"unknown topology {spec.topology!r}; expected one of {TOPOLOGIES}"
+        )
+    w = spec.readout_window
+    if isinstance(w, bool) or not isinstance(w, int):
+        raise ValueError(f"readout_window must be an int; got {w!r}")
+    if spec.topology == "array_transient":
+        if not 1 <= w <= int(spec.hold_steps):
+            raise ValueError(
+                "array_transient requires 1 <= readout_window <= hold_steps"
+                f" ({spec.hold_steps}); got {w}"
+            )
+    elif w != 0:
+        raise ValueError(
+            f"readout_window is an array_transient field; topology "
+            f"{spec.topology!r} requires readout_window=0 (got {w})"
         )
 
 
@@ -155,6 +218,8 @@ def make_spec(
     dtype=jnp.float32,
     params: Optional[STOParams] = None,
     tableau: str = "rk4",
+    topology: str = "coupled_array",
+    readout_window: int = 0,
 ) -> SimSpec:
     """Build a SimSpec with the paper's Table-1 defaults (cf. make_reservoir)."""
     if params is None:
@@ -162,4 +227,65 @@ def make_spec(
     w_cp = jnp.asarray(coupling.make_coupling_matrix(n, seed=seed), dtype=dtype)
     w_in = jnp.asarray(coupling.make_input_matrix(n, n_in, seed=seed + 1), dtype=dtype)
     m0 = constants.initial_magnetization(n, dtype=dtype)
-    return SimSpec(params, w_cp, w_in, m0, dt, hold_steps, tableau)
+    spec = SimSpec(
+        params, w_cp, w_in, m0, dt, hold_steps, tableau,
+        topology=topology, readout_window=readout_window,
+    )
+    validate_topology(spec)
+    return spec
+
+
+def make_time_multiplexed_spec(
+    n_virtual: int,
+    n_in: int = 1,
+    seed: int = 0,
+    dt: float = constants.DT,
+    hold_steps: int = 10,
+    dtype=jnp.float32,
+    params: Optional[STOParams] = None,
+    tableau: str = "rk4",
+) -> SimSpec:
+    """A Riou-style time-multiplexed single-oscillator reservoir.
+
+    One physical oscillator; `n_virtual` virtual nodes, each holding the
+    input for `hold_steps` RK substeps (hold_steps here is the VIRTUAL-NODE
+    window theta, so one input sample occupies n_virtual * hold_steps
+    substeps of physical time). w_in is a random binary ±1 input mask over
+    virtual nodes (the paper's time-multiplexing mask); w_cp defaults to
+    the identity — node j's drive feeds back from node j's snapshot one
+    tick earlier, the classic delay-line loop — with params.a_cp the
+    feedback gain. Rows of m0 are per-virtual-node snapshots; every backend
+    carries the physical oscillator state as row n_virtual - 1.
+    """
+    if params is None:
+        params = constants.default_params(dtype)
+    rng = np.random.default_rng(seed)
+    mask = rng.choice((-1.0, 1.0), size=(n_virtual, n_in))
+    w_in = jnp.asarray(mask, dtype=dtype)
+    w_cp = jnp.eye(n_virtual, dtype=dtype)
+    m0 = constants.initial_magnetization(n_virtual, dtype=dtype)
+    spec = SimSpec(
+        params, w_cp, w_in, m0, dt, hold_steps, tableau,
+        topology="time_multiplexed", readout_window=0,
+    )
+    validate_topology(spec)
+    return spec
+
+
+def make_array_transient_spec(
+    n: int,
+    readout_window: int,
+    n_in: int = 1,
+    seed: int = 0,
+    dt: float = constants.DT,
+    hold_steps: int = 100,
+    dtype=jnp.float32,
+    params: Optional[STOParams] = None,
+    tableau: str = "rk4",
+) -> SimSpec:
+    """A Kanao-style array whose state is read from the transient window."""
+    return make_spec(
+        n, n_in=n_in, seed=seed, dt=dt, hold_steps=hold_steps, dtype=dtype,
+        params=params, tableau=tableau, topology="array_transient",
+        readout_window=readout_window,
+    )

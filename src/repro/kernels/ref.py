@@ -175,6 +175,113 @@ def rk4_chunk_planes(
 
 
 # ---------------------------------------------------------------------------
+# Physics families (SimSpec.topology) — planes-layout chunk bodies
+# ---------------------------------------------------------------------------
+
+
+def rk4_chunk_planes_window(
+    m,  # (3, N, E) state
+    w_cp,  # (N, N) — pre-cast by the caller for reduced-precision coupling
+    pvec,  # (NP, E)
+    dt,
+    hold_steps: int,
+    readout_window: int,
+    h_block,  # (K, N, E) per-tick input-drive x-fields
+    mask_block,  # (K, E) bool; False = lane frozen that tick
+):
+    """topology="array_transient" chunk body (Kanao et al., arXiv:1905.07937).
+
+    Identical coupled-array dynamics to `rk4_chunk_planes`; only the
+    emitted per-tick state differs — the mean of the m_x plane over the
+    LAST `readout_window` RK substeps of the hold window (the transient the
+    array readout samples), instead of the endpoint alone. The hold window
+    is split (hold_steps - w) + w with the same per-step op sequence, so
+    readout_window=1 is bit-identical to the coupled_array chunk body.
+    Returns (m' (3, N, E), states (K, N, E)).
+    """
+    dt_c = jnp.asarray(dt, m.dtype)
+    w = int(readout_window)
+
+    def per_tick(mm, tick_in):
+        h_t, mask_t = tick_in
+
+        def inner(mi, _):
+            return rk4_step_planes(mi, w_cp, pvec, dt_c, h_t), None
+
+        m_mid = mm
+        if hold_steps > w:
+            m_mid, _ = jax.lax.scan(inner, mm, None, length=hold_steps - w)
+
+        def tail(mi, _):
+            mi2 = rk4_step_planes(mi, w_cp, pvec, dt_c, h_t)
+            return mi2, mi2[0]
+
+        m_new, xs = jax.lax.scan(tail, m_mid, None, length=w)  # xs (w, N, E)
+        state = jnp.mean(xs, axis=0) if w > 1 else xs[0]
+        m_new = jnp.where(mask_t[None, None, :], m_new, mm)
+        state = jnp.where(mask_t[None, :], state, mm[0])
+        return m_new, state
+
+    mT, states = jax.lax.scan(per_tick, m, (h_block, mask_block))
+    return mT, states  # (3, N, E), (K, N, E)
+
+
+def tm_chunk_planes(
+    m,  # (3, N, E) virtual-node snapshots; row N-1 carries the oscillator
+    w_cp,  # (N, N) feedback mixing — pre-cast for reduced-precision coupling
+    pvec,  # (NP, E)
+    dt,
+    hold_steps: int,
+    h_block,  # (K, N, E) per-tick masked-input x-fields A_in (W^in u)
+    mask_block,  # (K, E) bool; False = lane frozen that tick
+):
+    """topology="time_multiplexed" chunk body (Riou et al., arXiv:1904.11236).
+
+    ONE physical oscillator per lane; N virtual nodes are its snapshots at
+    the ends of consecutive hold windows. Per tick the total per-node drive
+    is two GEMMs — the masked input field (precomputed h_block) plus the
+    delayed feedback a_cp * (W^cp @ x_prev), where x_prev is the PREVIOUS
+    tick's snapshot x-plane (w_cp=I is the classic delay-line
+    self-feedback) — and then the INNER SCAN IS THE DELAY LINE: sequential
+    over the N virtual nodes (each integrating the carried (3, E)
+    oscillator state hold_steps RK substeps under its scalar-per-lane
+    drive), trivially parallel across ensemble lanes. The reduced-precision
+    coupling policy maps onto the feedback GEMM exactly as it maps onto the
+    array coupling GEMM. Returns (m' (3, N, E), states (K, N, E)).
+    """
+    dt_c = jnp.asarray(dt, m.dtype)
+    n = m.shape[1]
+    p = _unpack(pvec)
+    w_zero = jnp.zeros((1, 1), m.dtype)  # single oscillator: no array coupling
+
+    def per_tick(mm, tick_in):
+        h_ext_t, mask_t = tick_in
+        x_prev = mm[0]  # (N, E) previous tick's snapshots
+        x_cp = x_prev if w_cp.dtype == mm.dtype else x_prev.astype(w_cp.dtype)
+        h_t = h_ext_t + p["a_cp"] * jnp.dot(
+            w_cp, x_cp, preferred_element_type=mm.dtype
+        )  # (N, E)
+        s0 = mm[:, n - 1 : n, :]  # carried oscillator state (3, 1, E)
+
+        def per_node(s, h_row):  # h_row (E,) — virtual node's drive
+            h_j = h_row[None, :]  # (1, E)
+
+            def inner(si, _):
+                return rk4_step_planes(si, w_zero, pvec, dt_c, h_j), None
+
+            s_new, _ = jax.lax.scan(inner, s, None, length=hold_steps)
+            return s_new, s_new[:, 0, :]  # snapshot (3, E)
+
+        sT, snaps = jax.lax.scan(per_node, s0, h_t)  # snaps (N, 3, E)
+        m_new = jnp.transpose(snaps, (1, 0, 2))  # (3, N, E)
+        m_new = jnp.where(mask_t[None, None, :], m_new, mm)
+        return m_new, m_new[0]
+
+    mT, states = jax.lax.scan(per_tick, m, (h_block, mask_block))
+    return mT, states  # (3, N, E), (K, N, E)
+
+
+# ---------------------------------------------------------------------------
 # Flash-attention oracle (LM substrate)
 # ---------------------------------------------------------------------------
 

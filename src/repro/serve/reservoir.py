@@ -54,6 +54,19 @@ alone — chunked or per-tick (tests/test_serve_chunked.py pins the K>1 /
 K=1 bit-equality); every other backend agrees with solo runs to the kernel
 test suite's tolerance (tests/test_serve_reservoir.py pins all of them).
 
+Tenancy is SPEC-LEVEL, not just params-level: a StreamSession may carry
+its own SimSpec. Sessions whose spec structurally matches the engine's
+template (same `repro.api.spec_structural_hash` — shapes, dtype, topology
+contents, physics family; scalar param values excluded) serve in a primary
+lane with the spec's params riding the lane. Sessions whose spec hashes
+differently — another physics family (`topology="time_multiplexed"` /
+"array_transient"), another N, dt, hold window, coupling matrix — land on
+an internal per-hash sub-engine compiled through the shared PLAN_CACHE, so
+a coupled-array tenant and a time-multiplexed tenant stream through ONE
+engine concurrently, each bit-identical to a solo run of its own spec
+(tests/conformance/test_mixed_tenants.py). Sub-engine sessions ride the
+same results map, push/append, checkpoint/restore, and stats surface.
+
 This is the serving front for time-multiplexed STO reservoir hardware
 (Riou et al., arXiv:1904.11236; Kanao et al., arXiv:1905.07937): each
 tenant's device parameters ride in a params lane, the shared simulator
@@ -72,7 +85,16 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.api import PLAN_CACHE, CompiledSim, ExecPlan, SimSpec, compile_plan
+from repro.api import (
+    FAMILY_IMPLS,
+    PLAN_CACHE,
+    CompiledSim,
+    ExecPlan,
+    SimSpec,
+    compile_plan,
+    spec_structural_hash,
+)
+from repro.api.cache import _params_equal
 from repro.core.constants import STOParams
 from repro.core.reservoir import Readout, Reservoir, coerce_input_series
 from repro.serve.scheduler import AutoscalePolicy, QueueDepthPolicy, SlotScheduler
@@ -131,6 +153,14 @@ class StreamSession:
     open: bool = False  # True: idle (don't finish) when input runs dry
     learn_w0: Optional[np.ndarray] = None  # (N+1, n_out) RLS weight resume
     learn_P0: Optional[np.ndarray] = None  # (N+1, N+1) inverse-Gram resume
+    # Spec-level multi-tenancy: a session that carries its OWN SimSpec is
+    # routed by structural hash — same hash as the engine's template means
+    # same compiled physics (the spec's scalar params become the session's
+    # lane values, unless `params` was set explicitly); a different hash
+    # (other topology family, other N/dt/hold_steps/w_cp/...) lands on an
+    # internal sub-engine compiled for that spec through the shared
+    # PLAN_CACHE. None = classic behavior: the engine's template spec.
+    spec: Optional[SimSpec] = None
 
     # engine-internal bookkeeping (set on admit)
     _slot: int = dataclasses.field(default=-1, repr=False)
@@ -193,6 +223,9 @@ class SessionCheckpoint:
     preds: Optional[np.ndarray]  # (t, q) harvested prefix
     P: Optional[np.ndarray]  # (S, S) in-flight RLS inverse-Gram
     Wl: Optional[np.ndarray]  # (S, q) in-flight learned weights, unpadded
+    # mixed-spec tenants: the session's own SimSpec (host-numpy leaves so
+    # the checkpoint still pickles); restore_session re-routes from it
+    spec: Optional[SimSpec] = None
 
 
 @dataclasses.dataclass
@@ -225,6 +258,10 @@ class EngineStats:
     chunk_median_s: Optional[float]  # median wall time of recent chunks
     chunks_timed: int
     ticks_per_sec: Optional[float]  # E * K / chunk_median_s
+    # spec-level multi-tenancy: internal sub-engines serving sessions whose
+    # SimSpec hash differs from the template's (appended with a default so
+    # stats pickled by older replicas still unpickle)
+    sub_engines: int = 0
 
     def to_dict(self) -> dict:
         return dataclasses.asdict(self)
@@ -274,6 +311,22 @@ def _apply_readouts_chunk(states_block, w_out):
     The stack stays device-side until the once-per-chunk harvest."""
     return jnp.stack(
         [_apply_readouts(states_block[t], w_out) for t in range(states_block.shape[0])]
+    )
+
+
+def _spec_host(spec: Optional[SimSpec]) -> Optional[SimSpec]:
+    """A SimSpec with every array leaf pulled to host numpy, so it rides a
+    SessionCheckpoint across the pickling replica transport unchanged.
+    Structural hashes are byte-identical (the hash canonicalizes through
+    numpy), so routing on restore lands on the same sub-engine key."""
+    if spec is None:
+        return None
+    params = type(spec.params)(*[np.asarray(leaf) for leaf in spec.params])
+    return spec._replace(
+        params=params,
+        w_cp=np.asarray(spec.w_cp),
+        w_in=np.asarray(spec.w_in),
+        m0=np.asarray(spec.m0),
     )
 
 
@@ -447,6 +500,7 @@ class ReservoirEngine:
             )
         self.sim = sim
         self.res = sim.spec
+        self._spec_hash = spec_structural_hash(sim.spec)
         self.chunk_ticks = sim.plan.chunk_ticks
         self.learn = sim.plan.learn
         self.store = SlotStore(
@@ -533,6 +587,12 @@ class ReservoirEngine:
         # wall time of recent step_chunk calls that launched work — the
         # stats() latency signal the fleet planner checks itself against
         self._chunk_times: deque = deque(maxlen=128)
+        # -- spec-level multi-tenancy ---------------------------------------
+        # sessions whose SimSpec structural hash differs from the template's
+        # serve on an internal sub-engine compiled for THEIR spec (one per
+        # distinct hash, drawn through the shared PLAN_CACHE); step_chunk
+        # advances them in lockstep and drains their results into ours
+        self._subengines: Dict[str, "ReservoirEngine"] = {}
 
     @property
     def num_slots(self) -> int:
@@ -560,7 +620,80 @@ class ReservoirEngine:
         pad = np.zeros(a.shape[:-1] + (self.store.n_out - q,), a.dtype)
         return np.concatenate([a, pad], axis=-1)
 
+    # -- spec-level multi-tenancy -------------------------------------------
+
+    def _route_spec(self, session: StreamSession) -> Optional["ReservoirEngine"]:
+        """Resolve a spec-carrying session to the engine that serves it.
+
+        Returns None when the session belongs on THIS engine (its spec
+        structurally matches the template: same shapes/dtype/topology
+        contents/family — the hash ignores scalar param values, which ride
+        the session's lane instead), or the per-hash sub-engine otherwise.
+        """
+        spec = session.spec
+        leaf = jnp.asarray(spec.params.gamma)
+        if leaf.ndim != 0:
+            raise ValueError(
+                f"session {session.sid}: a session spec must carry "
+                f"scalar-leaved params (per-lane values are the lane's job; "
+                f"ensemble-leaved sweeps belong on the engine template)"
+            )
+        h = spec_structural_hash(spec)
+        if h == self._spec_hash:
+            # structurally the template's physics: serve in a primary lane.
+            # The spec's scalar params become the lane values unless the
+            # session pinned its own params explicitly (explicit wins).
+            if session.params is None and not _params_equal(
+                spec.params, self.res.params
+            ):
+                session.params = spec.params
+            return None
+        sub = self._subengines.get(h)
+        if sub is None:
+            sub = self._make_subengine(spec)
+            self._subengines[h] = sub
+        return sub
+
+    def _make_subengine(self, spec: SimSpec) -> "ReservoirEngine":
+        """Compile + wrap a sub-engine for a structurally different spec.
+
+        The sub-plan is the template plan at the engine's min_slots width —
+        drawn through the process-wide PLAN_CACHE, so two engines (or two
+        lifetimes of one engine) serving the same foreign spec compile it
+        once. An impl the spec's physics family cannot execute (e.g. a
+        fused Pallas template serving a time_multiplexed tenant) falls back
+        to impl="auto", which resolves to a family-capable backend inside
+        compile_plan. Sharded templates refuse: families do not shard, and
+        silently serving a tenant unsharded on a mesh engine would lie
+        about its placement.
+        """
+        plan = self.sim.plan
+        if plan.mesh is not None:
+            raise ValueError(
+                "mixed-spec tenancy is not supported on sharded engines — "
+                "a sub-engine cannot inherit the mesh decomposition; serve "
+                f"the {spec.topology!r} spec from an unsharded engine"
+            )
+        impl = plan.impl
+        if impl not in FAMILY_IMPLS.get(spec.topology, ()):
+            impl = "auto"
+        sub_plan = dataclasses.replace(
+            plan, ensemble=self.min_slots, impl=impl
+        )
+        sim = PLAN_CACHE.get_or_compile(spec, sub_plan)
+        return ReservoirEngine(
+            sim,
+            n_out=self.store.n_out,
+            max_retained=self.max_retained,
+            prewarm=False,
+        )
+
     def submit(self, session: StreamSession) -> None:
+        if session.spec is not None:
+            sub = self._route_spec(session)
+            if sub is not None:
+                sub.submit(session)
+                return
         # xp=np: the engine assembles u blocks host-side, so the series must
         # stay a numpy array — coercing through the device would round-trip
         # every stream through HBM for nothing
@@ -959,6 +1092,11 @@ class ReservoirEngine:
                 "serving path only — drive the engine with run() or "
                 "step_chunk() (chunk_ticks=1 preserves per-tick semantics)"
             )
+        if self._subengines:
+            raise RuntimeError(
+                "mixed-spec tenants are served on the chunked path only — "
+                "drive the engine with run() or step_chunk()"
+            )
         self._admit_pending()
         running = self.scheduler.running
         if not running:
@@ -1220,7 +1358,18 @@ class ReservoirEngine:
         self._pending = plan
         if plan is not None:
             self._chunk_times.append(time.perf_counter() - t0)
-        return plan is not None
+        progress = plan is not None
+        # advance mixed-spec tenants in lockstep; their finished sessions
+        # surface through OUR results map so callers have one drain point
+        for sub in self._subengines.values():
+            if sub.step_chunk():
+                progress = True
+            if sub.results:
+                self.results.update(sub.pop_results())
+        if self._subengines and self.max_retained is not None:
+            while len(self.results) > self.max_retained:
+                self.results.pop(next(iter(self.results)))
+        return progress
 
     def run(
         self, sessions: Optional[List[StreamSession]] = None
@@ -1253,6 +1402,22 @@ class ReservoirEngine:
                 return None, sess
         raise KeyError(f"no live session with sid {sid}")
 
+    def _owner(self, sid: int) -> "ReservoirEngine":
+        """The engine actually holding sid: self, or the sub-engine its
+        spec routed it to. Raises KeyError when no engine knows it."""
+        try:
+            self._find_session(sid)
+            return self
+        except KeyError:
+            pass
+        for sub in self._subengines.values():
+            try:
+                sub._find_session(sid)
+                return sub
+            except KeyError:
+                continue
+        raise KeyError(f"no live session with sid {sid}")
+
     def append_ticks(
         self,
         sid: int,
@@ -1264,6 +1429,9 @@ class ReservoirEngine:
         The rows join the session's stream at its tail; an idle lane picks
         them up at the next chunk boundary. Learning sessions must push
         matching target rows (and inference sessions must not)."""
+        eng = self._owner(sid)
+        if eng is not self:
+            return eng.append_ticks(sid, u, targets)
         _, sess = self._find_session(sid)
         if not sess.open:
             raise ValueError(
@@ -1299,7 +1467,7 @@ class ReservoirEngine:
         """End an open stream: once its pushed input is exhausted the
         session finishes like any closed-stream session (result in
         `results`/`pop_results`)."""
-        _, sess = self._find_session(sid)
+        _, sess = self._owner(sid)._find_session(sid)
         sess.open = False
 
     def quiesce(self) -> None:
@@ -1313,6 +1481,10 @@ class ReservoirEngine:
             self._pending = None
         self._retire_finishers()
         self._finalize_awaiting()
+        for sub in self._subengines.values():
+            sub.quiesce()
+            if sub.results:
+                self.results.update(sub.pop_results())
 
     def checkpoint_session(self, sid: int) -> SessionCheckpoint:
         """Freeze a live session into a host-side SessionCheckpoint and
@@ -1322,6 +1494,9 @@ class ReservoirEngine:
         `restore_session`, resuming bit-identically on the scan backend.
         Quiesces the pipeline first."""
         self.quiesce()
+        eng = self._owner(sid)
+        if eng is not self:
+            return eng.checkpoint_session(sid)
         slot, sess = self._find_session(sid)
         q = sess._n_out
         learning = self.learn is not None and sess.targets is not None
@@ -1379,6 +1554,7 @@ class ReservoirEngine:
             preds=cat(sess._preds) if learning else None,
             P=P,
             Wl=Wl,
+            spec=_spec_host(sess.spec),
         )
         sess._states = []
         sess._outs = []
@@ -1410,8 +1586,12 @@ class ReservoirEngine:
             open=ckpt.open,
             learn_w0=ckpt.Wl,
             learn_P0=ckpt.P,
+            spec=ckpt.spec,
         )
-        self.submit(sess)  # validates + pads against THIS engine's store
+        # submit() re-routes a spec-carrying session (possibly onto a
+        # sub-engine of THIS engine) and validates/pads against whichever
+        # store it lands in
+        self.submit(sess)
         if ckpt.t:
             sess._t = ckpt.t
             sess._states = [] if ckpt.states is None else [ckpt.states]
@@ -1453,4 +1633,5 @@ class ReservoirEngine:
                 if not median
                 else self.num_slots * self.chunk_ticks / median
             ),
+            sub_engines=len(self._subengines),
         )

@@ -1,0 +1,139 @@
+"""Fixtures for the cross-backend conformance matrix (tests/conformance/).
+
+One place defines the family specs, the scan-impl oracle runners, and the
+per-cell summary collector every matrix test reports through. Each test is
+one CELL: (topology, impl, precision, learn, sharded) pinned against the
+family's oracle with an explicit exactness policy:
+
+  scan          the family ORACLE — the core (E, N, 3)-layout lax.scan that
+                reproduces solo `drive` math; cells check its invariants.
+  ref == chunk  BIT-EXACT: both execute the same planes-layout chunk body
+                (kernels/ref.py), so equality is by construction.
+  scan ~ ref    tolerance: the two layouts order FMA contractions
+                differently (XLA fusion), a ~1-ulp-per-step effect.
+  fused/tiled   Pallas kernels run in interpret mode off-TPU; tolerance.
+  bf16/mixed    reduced precision tracks "highest" to a loose relative L2.
+
+Set CONFORMANCE_MATRIX_OUT=<path.json> to write the per-cell summary
+artifact (the CI nightly leg uploads it): one record per reported cell
+with the measured deviation, so a regression shows WHERE in the matrix it
+landed, not just that some assert tripped.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+from typing import Dict, Optional
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.api import (
+    ExecPlan,
+    compile_plan,
+    make_array_transient_spec,
+    make_spec,
+    make_time_multiplexed_spec,
+)
+
+TOPOLOGIES = ("coupled_array", "time_multiplexed", "array_transient")
+
+# Small-but-nontrivial family shapes: enough nodes/substeps that layout or
+# masking bugs cannot hide in degenerate axes, small enough that the whole
+# matrix stays unit-test fast.
+_SPEC_BUILDERS = {
+    "coupled_array": lambda: make_spec(6, hold_steps=4, seed=0),
+    "time_multiplexed": lambda: make_time_multiplexed_spec(
+        5, hold_steps=3, seed=0
+    ),
+    "array_transient": lambda: make_array_transient_spec(
+        6, readout_window=2, hold_steps=4, seed=0
+    ),
+}
+_SPECS: Dict[str, object] = {}
+
+
+def family_spec(topology: str):
+    """The matrix's canonical small spec for one physics family (memoized —
+    every cell of a topology row sees the SAME spec object)."""
+    if topology not in _SPECS:
+        _SPECS[topology] = _SPEC_BUILDERS[topology]()
+    return _SPECS[topology]
+
+
+def drive_states(
+    spec,
+    impl: str,
+    u: np.ndarray,
+    *,
+    precision: Optional[str] = None,
+    interpret: bool = False,
+    chunk_ticks: int = 4,
+):
+    """Run one cell's sim over the stream; returns host (final_m, states)."""
+    sim = compile_plan(
+        spec,
+        ExecPlan(
+            impl=impl,
+            ensemble=1,
+            chunk_ticks=chunk_ticks,
+            precision=precision,
+            interpret=interpret,
+        ),
+    )
+    m, states = sim.drive(jnp.asarray(u, spec.dtype))
+    return np.asarray(m), np.asarray(states)
+
+
+def rel_l2(a: np.ndarray, b: np.ndarray) -> float:
+    """Relative L2 deviation of a from b (0.0 when bit-identical)."""
+    denom = float(np.linalg.norm(b.astype(np.float64)))
+    if denom == 0.0:
+        return float(np.linalg.norm(a.astype(np.float64)))
+    return float(np.linalg.norm(a.astype(np.float64) - b.astype(np.float64))) / denom
+
+
+@pytest.fixture(scope="session")
+def input_stream() -> np.ndarray:
+    """The matrix's shared 10-tick input stream (deterministic)."""
+    return np.random.default_rng(7).uniform(0.0, 1.0, 10).astype(np.float32)
+
+
+# ---------------------------------------------------------------------------
+# Per-cell summary artifact
+# ---------------------------------------------------------------------------
+
+_CELLS: list = []
+
+
+def record_cell(**cell) -> None:
+    """Append one matrix-cell record to the session summary. Tests call
+    this with at least topology/impl plus whatever was measured."""
+    _CELLS.append(cell)
+
+
+@pytest.fixture
+def matrix_cell():
+    return record_cell
+
+
+def pytest_sessionfinish(session, exitstatus):
+    out = os.environ.get("CONFORMANCE_MATRIX_OUT")
+    if not out or not _CELLS:
+        return
+    payload = {
+        "cells": sorted(
+            _CELLS,
+            key=lambda c: (
+                str(c.get("topology")),
+                str(c.get("impl")),
+                str(c.get("kind")),
+            ),
+        ),
+        "count": len(_CELLS),
+        "exit_status": int(exitstatus),
+    }
+    with open(out, "w") as f:
+        json.dump(payload, f, indent=2, sort_keys=True)

@@ -1,0 +1,117 @@
+"""PlanCache structural-hash guard (referenced by repro/api/cache.py).
+
+Two invariants keep the process-wide compile cache collision-free as the
+physics grows:
+
+  1. FENCE — `spec_structural_hash` refuses (TypeError) any spec whose
+     field set it does not cover. Adding a SimSpec field without deciding
+     its hash treatment fails at the first cache lookup instead of
+     silently serving one family's executable for another's spec.
+  2. SEPARATION — specs differing ONLY in a physics field (topology tag,
+     readout_window, coupling contents, ...) hash differently, while
+     scalar param VALUES (lane-resident runtime inputs) do not move the
+     hash at all.
+"""
+
+import collections
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.api import (
+    ExecPlan,
+    PlanCache,
+    make_array_transient_spec,
+    make_spec,
+    make_time_multiplexed_spec,
+    spec_structural_hash,
+)
+
+
+class TestFence:
+    def test_uncovered_field_raises_typerror(self):
+        """A spec with a field the hash doesn't know is rejected loudly."""
+        spec = make_spec(4, hold_steps=3)
+        plus = collections.namedtuple(
+            "SimSpecPlus", spec._fields + ("stray_physics_knob",)
+        )
+        fake = plus(*spec, 0.5)
+        with pytest.raises(TypeError, match="stray_physics_knob"):
+            spec_structural_hash(fake)
+
+    def test_error_names_the_fix(self):
+        spec = make_spec(4, hold_steps=3)
+        plus = collections.namedtuple("SimSpecPlus", spec._fields + ("zz",))
+        with pytest.raises(TypeError, match="_STRUCTURAL_FIELDS"):
+            spec_structural_hash(plus(*spec, None))
+
+
+class TestSeparation:
+    def test_families_hash_apart(self):
+        """The three families over comparable shapes never share a line."""
+        hashes = {
+            spec_structural_hash(make_spec(6, hold_steps=4)),
+            spec_structural_hash(
+                make_time_multiplexed_spec(6, hold_steps=4)
+            ),
+            spec_structural_hash(
+                make_array_transient_spec(6, readout_window=2, hold_steps=4)
+            ),
+        }
+        assert len(hashes) == 3
+
+    def test_topology_tag_alone_moves_the_hash(self):
+        """Same arrays, same scalars, same window — ONLY the family tag
+        differs (time_multiplexed shares coupled_array's readout_window=0,
+        so a field-for-field _replace isolates the tag)."""
+        ca = make_spec(6, hold_steps=4)
+        tm = ca._replace(topology="time_multiplexed")
+        assert spec_structural_hash(ca) != spec_structural_hash(tm)
+
+    def test_readout_window_alone_moves_the_hash(self):
+        a = make_array_transient_spec(6, readout_window=2, hold_steps=4)
+        b = make_array_transient_spec(6, readout_window=3, hold_steps=4)
+        assert spec_structural_hash(a) != spec_structural_hash(b)
+
+    def test_scalar_param_values_do_not_move_the_hash(self):
+        spec = make_spec(6, hold_steps=4)
+        tweaked = spec.with_knobs(a_cp=0.123, a_in=4.56)
+        assert spec_structural_hash(spec) == spec_structural_hash(tweaked)
+
+    def test_coupling_contents_move_the_hash(self):
+        a = make_spec(6, hold_steps=4, seed=0)
+        b = make_spec(6, hold_steps=4, seed=1)
+        assert spec_structural_hash(a) != spec_structural_hash(b)
+
+    def test_hash_is_host_device_agnostic(self):
+        """numpy-leaved and jnp-leaved twins (checkpoint transport) agree."""
+        spec = make_time_multiplexed_spec(5, hold_steps=3)
+        host = spec._replace(
+            params=type(spec.params)(
+                *[np.asarray(leaf) for leaf in spec.params]
+            ),
+            w_cp=np.asarray(spec.w_cp),
+            w_in=np.asarray(spec.w_in),
+            m0=np.asarray(spec.m0),
+        )
+        assert spec_structural_hash(spec) == spec_structural_hash(host)
+
+
+class TestCacheEndToEnd:
+    def test_families_never_share_a_cache_line(self):
+        """get_or_compile on two same-shape, different-family specs yields
+        two distinct CompiledSims under one plan key — the collision the
+        fence + separation invariants exist to prevent."""
+        cache = PlanCache(capacity=8)
+        plan = ExecPlan(impl="ref", ensemble=1, chunk_ticks=2)
+        ca = make_spec(5, hold_steps=3)
+        tm = make_time_multiplexed_spec(5, hold_steps=3)
+        sim_ca = cache.get_or_compile(ca, plan)
+        sim_tm = cache.get_or_compile(tm, plan)
+        assert sim_ca is not sim_tm
+        assert len(cache) == 2
+        assert cache.stats.misses == 2 and cache.stats.hits == 0
+        # and the same spec again IS the cached object
+        assert cache.get_or_compile(ca, plan) is sim_ca
+        assert cache.stats.hits == 1

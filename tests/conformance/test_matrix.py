@@ -1,0 +1,264 @@
+"""The unified cross-backend conformance matrix.
+
+Every physics family (SimSpec.topology) x implementation x precision x
+learn combination the repo claims to support is pinned here as one cell,
+each against the family's scan oracle (see conftest for the exactness
+policy). Guard cells pin the REFUSALS — combinations the plan/spec layer
+must reject loudly (time_multiplexed x Pallas, families x mesh, scan x
+reduced precision, readout_window misuse) — so an accidental silent
+acceptance is as much a regression as a numerical drift.
+
+Fast cells run on every push; @pytest.mark.slow cells (Pallas interpret
+mode, reduced precision, the wider learn grid) join on the nightly /
+full-matrix CI leg. The driver's plain `pytest -x -q` runs both.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from conftest import TOPOLOGIES, drive_states, family_spec, rel_l2
+from jax.sharding import Mesh
+
+from repro.api import ExecPlan, compile_plan, make_array_transient_spec, make_spec
+from repro.core.reservoir import fit_lms, fit_rls
+from repro.serve.reservoir import ReservoirEngine, StreamSession
+
+
+class TestInferCells:
+    """topology x impl inference cells, states + final magnetization."""
+
+    @pytest.mark.parametrize("topology", TOPOLOGIES)
+    def test_scan_oracle_invariants(self, topology, input_stream, matrix_cell):
+        """The oracle itself: finite, |m| = 1 preserved, right shapes."""
+        spec = family_spec(topology)
+        m, states = drive_states(spec, "scan", input_stream)
+        assert states.shape == (len(input_stream), spec.n)
+        assert m.shape == (spec.n, 3)
+        assert np.isfinite(states).all() and np.isfinite(m).all()
+        norms = np.linalg.norm(m, axis=-1)
+        np.testing.assert_allclose(norms, 1.0, atol=1e-4)
+        matrix_cell(
+            topology=topology, impl="scan", kind="oracle",
+            max_norm_err=float(np.abs(norms - 1.0).max()),
+        )
+
+    @pytest.mark.parametrize("topology", TOPOLOGIES)
+    def test_ref_tracks_scan(self, topology, input_stream, matrix_cell):
+        """Planes layout vs core layout: same math, different FMA order."""
+        spec = family_spec(topology)
+        m0, s0 = drive_states(spec, "scan", input_stream)
+        m1, s1 = drive_states(spec, "ref", input_stream)
+        np.testing.assert_allclose(s1, s0, rtol=2e-5, atol=2e-6)
+        np.testing.assert_allclose(m1, m0, rtol=2e-5, atol=2e-6)
+        matrix_cell(
+            topology=topology, impl="ref", kind="infer-vs-scan",
+            rel_l2=rel_l2(s1, s0),
+        )
+
+    @pytest.mark.parametrize("topology", TOPOLOGIES)
+    def test_chunk_bitexact_with_ref(self, topology, input_stream, matrix_cell):
+        """ref and chunk share ONE planes chunk body off-TPU — equality is
+        by construction, so the cell pins it bit-for-bit."""
+        spec = family_spec(topology)
+        m1, s1 = drive_states(spec, "ref", input_stream)
+        m2, s2 = drive_states(spec, "chunk", input_stream)
+        np.testing.assert_array_equal(s2, s1)
+        np.testing.assert_array_equal(m2, m1)
+        matrix_cell(
+            topology=topology, impl="chunk", kind="infer-vs-ref", rel_l2=0.0,
+        )
+
+    @pytest.mark.slow
+    @pytest.mark.parametrize("impl", ("fused", "tiled"))
+    @pytest.mark.parametrize(
+        "topology", ("coupled_array", "array_transient")
+    )
+    def test_pallas_interpret_tracks_ref(
+        self, topology, impl, input_stream, matrix_cell
+    ):
+        """Pallas kernels (interpret mode off-TPU) vs the planes reference.
+        time_multiplexed is ABSENT by design — its cell is the refusal
+        guard below."""
+        spec = family_spec(topology)
+        _, s1 = drive_states(spec, "ref", input_stream)
+        _, s2 = drive_states(spec, impl, input_stream, interpret=True)
+        np.testing.assert_allclose(s2, s1, rtol=1e-5, atol=1e-6)
+        matrix_cell(
+            topology=topology, impl=impl, kind="infer-vs-ref",
+            rel_l2=rel_l2(s2, s1), interpret=True,
+        )
+
+
+class TestEndpointCells:
+    """Family limit points that must coincide with the coupled array."""
+
+    @pytest.mark.parametrize("impl", ("scan", "chunk"))
+    def test_transient_window1_is_coupled_array(
+        self, impl, input_stream, matrix_cell
+    ):
+        """readout_window=1 averages exactly one substep — the hold-window
+        endpoint — so array_transient degenerates to coupled_array. Pinned
+        bit-exactly through the serving chunk path (both topologies
+        execute tick_chunk with identical graph shapes there)."""
+        ca = make_spec(6, hold_steps=4, seed=0)
+        at = make_array_transient_spec(6, readout_window=1, hold_steps=4, seed=0)
+        results = {}
+        for name, spec in (("ca", ca), ("at", at)):
+            eng = ReservoirEngine(
+                spec, num_slots=2, backend=impl, chunk_ticks=4
+            )
+            eng.submit(StreamSession(sid=1, u_seq=input_stream))
+            results[name] = eng.run()[1]
+        np.testing.assert_array_equal(
+            results["at"].states, results["ca"].states
+        )
+        np.testing.assert_array_equal(
+            results["at"].final_m, results["ca"].final_m
+        )
+        matrix_cell(
+            topology="array_transient", impl=impl,
+            kind="endpoint-w1-vs-coupled", rel_l2=0.0,
+        )
+
+
+class TestPrecisionCells:
+    @pytest.mark.slow
+    @pytest.mark.parametrize("precision", ("bf16_coupling", "mixed"))
+    @pytest.mark.parametrize("topology", TOPOLOGIES)
+    def test_reduced_precision_tracks_highest(
+        self, topology, precision, input_stream, matrix_cell
+    ):
+        """Reduced-precision GEMM policies on the ref impl stay within a
+        loose relative L2 of the bit-exact run, for every family (the
+        family bodies route their coupling/input GEMMs through the same
+        `_coupling_operand` / input-field casts the coupled array uses)."""
+        spec = family_spec(topology)
+        _, s_hi = drive_states(spec, "ref", input_stream)
+        _, s_lo = drive_states(spec, "ref", input_stream, precision=precision)
+        assert np.isfinite(s_lo).all()
+        dev = rel_l2(s_lo, s_hi)
+        assert dev < 5e-2, f"{topology}/{precision}: rel L2 {dev:.3e}"
+        matrix_cell(
+            topology=topology, impl="ref", kind="precision",
+            precision=precision, rel_l2=dev,
+        )
+
+
+class TestLearnCells:
+    """Streamed on-device learning vs the offline oracle, per family.
+
+    The learn tails are topology-blind — they consume the (K, N, E) states
+    block whatever physics produced it — so the streamed weights must
+    reproduce `fit_rls(states, y, block=K)` / `fit_lms(states, y)` run on
+    the SAME states. Bit-exact on the scan backend; the planes backends
+    get a tight tolerance (layout-order FMA differences in the states
+    feed the recursion).
+    """
+
+    def _served(self, topology, impl, learn, seed=11, t=12, k=4):
+        spec = family_spec(topology)
+        rng = np.random.default_rng(seed)
+        u = rng.uniform(0.0, 1.0, t).astype(np.float32)
+        y = rng.uniform(0.0, 1.0, t).astype(np.float32)
+        eng = ReservoirEngine(
+            spec, num_slots=2, backend=impl, chunk_ticks=k,
+            learn=learn, learn_reg=1e-6, learn_mu=0.4,
+        )
+        eng.submit(StreamSession(sid=1, u_seq=u, targets=y))
+        res = eng.run()[1]
+        states = jnp.asarray(res.states)
+        if learn == "rls":
+            w_ref = fit_rls(states, jnp.asarray(y), reg=1e-6, block=k).w_out
+        else:
+            w_ref = fit_lms(states, jnp.asarray(y), mu=0.4).w_out
+        return np.asarray(res.learned_readout.w_out), np.asarray(w_ref)
+
+    @pytest.mark.parametrize("topology", TOPOLOGIES)
+    def test_rls_scan_bitmatches_offline(self, topology, matrix_cell):
+        w, w_ref = self._served(topology, "scan", "rls")
+        np.testing.assert_array_equal(w, w_ref)
+        matrix_cell(
+            topology=topology, impl="scan", kind="learn", learn="rls",
+            rel_l2=0.0,
+        )
+
+    @pytest.mark.slow
+    @pytest.mark.parametrize("topology", TOPOLOGIES)
+    @pytest.mark.parametrize(
+        "impl,learn",
+        [("chunk", "rls"), ("scan", "lms"), ("ref", "lms")],
+    )
+    def test_learn_grid_tracks_offline(self, topology, impl, learn, matrix_cell):
+        w, w_ref = self._served(topology, impl, learn)
+        np.testing.assert_allclose(w, w_ref, rtol=1e-5, atol=1e-6)
+        matrix_cell(
+            topology=topology, impl=impl, kind="learn", learn=learn,
+            rel_l2=rel_l2(w, w_ref),
+        )
+
+
+class TestGuardCells:
+    """Refusal cells: the matrix's unsupported combinations must raise."""
+
+    @pytest.mark.parametrize("impl", ("fused", "tiled"))
+    def test_time_multiplexed_refuses_pallas(self, impl, matrix_cell):
+        spec = family_spec("time_multiplexed")
+        with pytest.raises(ValueError, match="cannot execute topology"):
+            compile_plan(spec, ExecPlan(impl=impl, ensemble=1))
+        matrix_cell(
+            topology="time_multiplexed", impl=impl, kind="guard-refused",
+        )
+
+    def test_time_multiplexed_auto_falls_back(self, input_stream):
+        """impl='auto' must RESOLVE around the refusal, not die on it."""
+        spec = family_spec("time_multiplexed")
+        sim = compile_plan(spec, ExecPlan(impl="auto", ensemble=1))
+        assert sim.impl in ("scan", "ref", "chunk")
+        _, states = sim.drive(jnp.asarray(input_stream, spec.dtype))
+        assert np.isfinite(np.asarray(states)).all()
+
+    @pytest.mark.parametrize(
+        "topology", ("time_multiplexed", "array_transient")
+    )
+    def test_families_refuse_mesh(self, topology, matrix_cell):
+        spec = family_spec(topology)
+        mesh = Mesh(
+            np.array(jax.devices()[:1]).reshape(1, 1), ("data", "model")
+        )
+        with pytest.raises(ValueError, match="mesh"):
+            compile_plan(spec, ExecPlan(ensemble=1, mesh=mesh))
+        matrix_cell(topology=topology, impl="mesh", kind="guard-refused")
+
+    def test_scan_refuses_reduced_precision(self):
+        spec = family_spec("coupled_array")
+        with pytest.raises(ValueError):
+            compile_plan(
+                spec, ExecPlan(impl="scan", ensemble=1, precision="mixed")
+            )
+
+    def test_time_multiplexed_refuses_integrate(self):
+        """integrate() free-runs the coupled array; a TM reservoir has no
+        meaning without the per-tick input mask."""
+        spec = family_spec("time_multiplexed")
+        sim = compile_plan(spec, ExecPlan(impl="ref", ensemble=1))
+        with pytest.raises(ValueError, match="time_multiplexed"):
+            sim.integrate(n_steps=2)
+
+    def test_coupled_refuses_readout_window(self):
+        with pytest.raises(ValueError, match="readout_window"):
+            make_spec(6, hold_steps=4, readout_window=2)
+
+    @pytest.mark.parametrize("window", (0, 5, -1))
+    def test_transient_window_bounds(self, window):
+        with pytest.raises(ValueError, match="readout_window"):
+            make_array_transient_spec(6, readout_window=window, hold_steps=4)
+
+    def test_unknown_topology_refused(self):
+        with pytest.raises(ValueError, match="topology"):
+            make_spec(6, hold_steps=4, topology="ring")
+
+    def test_family_spec_refuses_legacy_reservoir(self):
+        spec = family_spec("time_multiplexed")
+        with pytest.raises(ValueError, match="topology"):
+            spec.to_reservoir()

@@ -1,0 +1,202 @@
+"""Spec-level multi-tenancy: one engine, tenants with DIFFERENT SimSpecs.
+
+A StreamSession may carry its own SimSpec; the engine routes by structural
+hash — same hash serves in a primary lane (the spec's scalar params become
+the lane values), a different hash (other family / other shapes) lands on
+an internal sub-engine drawn through the shared PLAN_CACHE. The pinned
+property: every tenant's streamed result is BIT-IDENTICAL to running its
+spec alone on a dedicated engine — tenancy is an execution arrangement,
+never a numerical one.
+"""
+
+import pickle
+
+import numpy as np
+import pytest
+
+from repro.api import (
+    make_array_transient_spec,
+    make_spec,
+    make_time_multiplexed_spec,
+)
+from repro.serve.reservoir import ReservoirEngine, StreamSession
+
+
+def _solo(spec, sid, u, **session_kw):
+    eng = ReservoirEngine(spec, num_slots=4, backend="scan", chunk_ticks=4)
+    eng.submit(StreamSession(sid=sid, u_seq=u, **session_kw))
+    return eng.run()[sid]
+
+
+class TestMixedSpecs:
+    def test_three_families_one_engine_bitexact_vs_solo(self):
+        rng = np.random.default_rng(0)
+        spec_ca = make_spec(8, hold_steps=5)
+        spec_tm = make_time_multiplexed_spec(6, hold_steps=4)
+        spec_at = make_array_transient_spec(
+            8, readout_window=3, hold_steps=5, seed=3
+        )
+        u1 = rng.uniform(0, 1, 13).astype(np.float32)
+        u2 = rng.uniform(0, 1, 17).astype(np.float32)
+        u3 = rng.uniform(0, 1, 11).astype(np.float32)
+
+        eng = ReservoirEngine(
+            spec_ca, num_slots=4, backend="scan", chunk_ticks=4
+        )
+        eng.submit(StreamSession(sid=1, u_seq=u1))
+        eng.submit(StreamSession(sid=2, u_seq=u2, spec=spec_tm))
+        eng.submit(StreamSession(sid=3, u_seq=u3, spec=spec_at))
+        res = eng.run()
+        assert sorted(res) == [1, 2, 3]
+        assert eng.stats().sub_engines == 2
+
+        for sid, spec, u in ((1, spec_ca, u1), (2, spec_tm, u2), (3, spec_at, u3)):
+            solo = _solo(spec, sid, u)
+            np.testing.assert_array_equal(res[sid].states, solo.states)
+            np.testing.assert_array_equal(res[sid].final_m, solo.final_m)
+
+    def test_same_hash_spec_rides_a_primary_lane(self):
+        """A session spec that structurally matches the template routes to
+        the primary batch — its scalar params become the lane values, and
+        no sub-engine is built."""
+        rng = np.random.default_rng(1)
+        base = make_spec(8, hold_steps=5)
+        tweaked = base.with_knobs(a_cp=0.7, a_in=1.3)
+        u = rng.uniform(0, 1, 13).astype(np.float32)
+
+        eng = ReservoirEngine(base, num_slots=4, backend="scan", chunk_ticks=4)
+        eng.submit(StreamSession(sid=9, u_seq=u, spec=tweaked))
+        res = eng.run()[9]
+        assert eng.stats().sub_engines == 0
+        solo = _solo(tweaked, 9, u)
+        np.testing.assert_array_equal(res.states, solo.states)
+
+    def test_explicit_session_params_beat_spec_params(self):
+        base = make_spec(8, hold_steps=5)
+        tweaked = base.with_knobs(a_cp=0.7)
+        u = np.random.default_rng(2).uniform(0, 1, 9).astype(np.float32)
+        eng = ReservoirEngine(base, num_slots=2, backend="scan", chunk_ticks=4)
+        # params pinned explicitly: the spec's scalars must NOT override
+        eng.submit(
+            StreamSession(sid=1, u_seq=u, params=base.params, spec=tweaked)
+        )
+        res = eng.run()[1]
+        solo = _solo(base, 1, u)
+        np.testing.assert_array_equal(res.states, solo.states)
+
+    def test_one_subengine_per_distinct_hash(self):
+        rng = np.random.default_rng(3)
+        spec_ca = make_spec(8, hold_steps=5)
+        spec_tm = make_time_multiplexed_spec(6, hold_steps=4)
+        eng = ReservoirEngine(
+            spec_ca, num_slots=4, backend="scan", chunk_ticks=4
+        )
+        for sid in (1, 2, 3):
+            eng.submit(
+                StreamSession(
+                    sid=sid,
+                    u_seq=rng.uniform(0, 1, 8).astype(np.float32),
+                    spec=spec_tm,
+                )
+            )
+        res = eng.run()
+        assert sorted(res) == [1, 2, 3]
+        assert eng.stats().sub_engines == 1
+
+    def test_ensemble_leaved_session_spec_refused(self):
+        from repro.core.ensemble import broadcast_params
+
+        spec_ca = make_spec(8, hold_steps=5)
+        swept = spec_ca._replace(
+            params=broadcast_params(spec_ca.params, 4)
+        )
+        eng = ReservoirEngine(spec_ca, num_slots=2, backend="scan", chunk_ticks=4)
+        with pytest.raises(ValueError, match="scalar-leaved"):
+            eng.submit(
+                StreamSession(
+                    sid=1,
+                    u_seq=np.ones(4, np.float32),
+                    spec=swept,
+                )
+            )
+
+    def test_per_tick_step_refuses_mixed_specs(self):
+        spec_ca = make_spec(8, hold_steps=5)
+        spec_tm = make_time_multiplexed_spec(6, hold_steps=4)
+        eng = ReservoirEngine(spec_ca, num_slots=2, backend="scan")
+        eng.submit(
+            StreamSession(
+                sid=1, u_seq=np.ones(4, np.float32), spec=spec_tm
+            )
+        )
+        with pytest.raises(RuntimeError, match="chunked path"):
+            eng.step()
+
+
+class TestMixedSpecLifecycle:
+    def test_learning_tenant_checkpoint_migrates_bitexact(self):
+        """A learning time_multiplexed tenant on a coupled-array engine,
+        checkpointed mid-stream, pickled, restored into a FRESH engine —
+        the whole stream (states, predictions, learned weights) matches a
+        never-migrated solo run bit-for-bit."""
+        rng = np.random.default_rng(1)
+        spec_ca = make_spec(8, hold_steps=5)
+        spec_tm = make_time_multiplexed_spec(6, hold_steps=4)
+        u = rng.uniform(0, 1, 16).astype(np.float32)
+        y = rng.uniform(0, 1, 16).astype(np.float32)
+
+        src = ReservoirEngine(
+            spec_ca, num_slots=4, backend="scan", chunk_ticks=4, learn="rls"
+        )
+        src.submit(
+            StreamSession(
+                sid=5, u_seq=u, targets=y, learn_washout=2, spec=spec_tm
+            )
+        )
+        for _ in range(3):
+            src.step_chunk()
+        ckpt = pickle.loads(pickle.dumps(src.checkpoint_session(5)))
+        assert ckpt.spec is not None and ckpt.spec.topology == "time_multiplexed"
+        assert 0 < ckpt.t < len(u)
+
+        dst = ReservoirEngine(
+            spec_ca, num_slots=4, backend="scan", chunk_ticks=4, learn="rls"
+        )
+        dst.restore_session(ckpt)
+        res = dst.run()[5]
+
+        solo_eng = ReservoirEngine(
+            spec_tm, num_slots=4, backend="scan", chunk_ticks=4, learn="rls"
+        )
+        solo_eng.submit(
+            StreamSession(sid=5, u_seq=u, targets=y, learn_washout=2)
+        )
+        solo = solo_eng.run()[5]
+        np.testing.assert_array_equal(res.states, solo.states)
+        np.testing.assert_array_equal(res.predictions, solo.predictions)
+        np.testing.assert_array_equal(
+            np.asarray(res.learned_readout.w_out),
+            np.asarray(solo.learned_readout.w_out),
+        )
+
+    def test_push_stream_reaches_subengine_tenant(self):
+        rng = np.random.default_rng(4)
+        spec_ca = make_spec(8, hold_steps=5)
+        spec_tm = make_time_multiplexed_spec(6, hold_steps=4)
+        u_all = rng.uniform(0, 1, 12).astype(np.float32)
+
+        eng = ReservoirEngine(
+            spec_ca, num_slots=2, backend="scan", chunk_ticks=4
+        )
+        eng.submit(
+            StreamSession(sid=7, u_seq=u_all[:6], open=True, spec=spec_tm)
+        )
+        for _ in range(3):
+            eng.step_chunk()
+        eng.append_ticks(7, u_all[6:])
+        eng.close_session(7)
+        res = eng.run()[7]
+
+        solo = _solo(spec_tm, 7, u_all)
+        np.testing.assert_array_equal(res.states, solo.states)
+        np.testing.assert_array_equal(res.final_m, solo.final_m)
