@@ -400,6 +400,73 @@ def smoke(save_dispatch_table: bool = False) -> None:
         f"smoke_tune_revisit,0.0,speedup_{tune_revisit_speedup:.1f}x"
         f"_combo_compiles_{first_compiles}_then_{second_compiles}"
     )
+    # chaos gate: a fleet drain with one replica crashed mid-stream must
+    # lose zero sessions and return every output — states, predictions,
+    # learned readout weights — bit-identical to an unfaulted fleet. A
+    # within-run correctness gate (no timings), so container noise cannot
+    # touch it; the crash is injected deterministically via FaultPlan.
+    from repro.serve.fleet import Fault, FaultPlan, FleetRouter, LocalReplica
+
+    chaos_kw = dict(n=16, num_slots=4, hold_steps=5, seed=83_001,
+                    backend="scan", chunk_ticks=4, learn="rls")
+    chaos_rng = np.random.default_rng(9)
+
+    def _chaos_sessions():
+        out = []
+        for i in range(6):
+            u = chaos_rng.uniform(0, 0.5, (18, 1)).astype(np.float32)
+            y = chaos_rng.uniform(0, 0.5, (18, 1)).astype(np.float32)
+            out.append((i, u, y))
+        return out
+
+    chaos_streams = _chaos_sessions()
+
+    def _chaos_drain(faulted: bool):
+        router = FleetRouter(checkpoint_every=2)
+        plan = FaultPlan((Fault("crash", at_chunk=3),)) if faulted else None
+        router.add_replica(
+            LocalReplica(faults=plan, **chaos_kw),
+            respawn=lambda: LocalReplica(**chaos_kw),
+        )
+        router.add_replica(LocalReplica(**chaos_kw))
+        for sid, u, y in chaos_streams:
+            router.submit(chaos_kw["n"], StreamSession(
+                sid=sid, u_seq=u.copy(), targets=y.copy(), learn_washout=2))
+        try:
+            results = router.drain()
+            return results, router.fault_stats()
+        finally:
+            router.close()
+
+    chaos_clean, _ = _chaos_drain(faulted=False)
+    chaos_hit, chaos_faults = _chaos_drain(faulted=True)
+    assert chaos_faults["replica_deaths"] == 1, (
+        "smoke: the injected replica crash never fired"
+    )
+    assert chaos_faults["failovers"] == 1 and chaos_faults["sessions_lost"] == 0, (
+        f"smoke: chaos drain lost sessions "
+        f"(failovers={chaos_faults['failovers']}, "
+        f"lost={chaos_faults['sessions_lost']})"
+    )
+    assert sorted(chaos_hit) == sorted(chaos_clean)
+    for sid in chaos_clean:
+        assert np.array_equal(chaos_hit[sid].states, chaos_clean[sid].states), (
+            f"smoke: recovered session {sid} states deviate from the "
+            f"unfaulted fleet — failover is not bit-exact"
+        )
+        assert np.array_equal(
+            chaos_hit[sid].predictions, chaos_clean[sid].predictions
+        ), f"smoke: recovered session {sid} predictions deviate"
+        assert np.array_equal(
+            np.asarray(chaos_hit[sid].learned_readout.w_out),
+            np.asarray(chaos_clean[sid].learned_readout.w_out),
+        ), f"smoke: recovered session {sid} learned weights deviate"
+    print(
+        f"smoke_chaos,0.0,crashed_1_recovered_"
+        f"{chaos_faults['sessions_recovered']}_lost_"
+        f"{chaos_faults['sessions_lost']}_replayed_"
+        f"{chaos_faults['replayed_ticks']}_bitmatch_clean"
+    )
     print(
         f"smoke_perf_gates,0.0,pipelined_min_"
         f"{min(c['pipelined_speedup'] for c in smoke_bench['cells']):.1f}x"

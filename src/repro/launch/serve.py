@@ -238,10 +238,14 @@ def main_fleet(args):
     else:
         print(f"planner: {bench} not found — admission control disabled")
 
-    router = FleetRouter(planner=planner)
-    replicas = start_fleet(
-        args.replicas,
+    router = FleetRouter(
+        planner=planner,
+        checkpoint_every=args.checkpoint_every or None,
+    )
+    fleet_kw = dict(
         transport=args.transport,
+        rpc_timeout_s=args.rpc_timeout,
+        rpc_retries=args.rpc_retries,
         n=args.n,
         num_slots=args.slots,
         hold_steps=args.hold_steps,
@@ -250,8 +254,17 @@ def main_fleet(args):
         precision=args.precision,
         compilation_cache_dir=args.compilation_cache_dir,
     )
+    replicas = start_fleet(args.replicas, **fleet_kw)
+
+    def respawn():
+        # failover replacement: same config, drawn warm through the
+        # process-wide plan cache (or the persistent compile cache for
+        # process transports pointed at --compilation-cache-dir)
+        (r,) = start_fleet(1, **fleet_kw)
+        return r
+
     for r in replicas:
-        router.add_replica(r)
+        router.add_replica(r, respawn=respawn if args.checkpoint_every else None)
 
     rng = np.random.default_rng(1)
     streams = [
@@ -267,9 +280,9 @@ def main_fleet(args):
             results = await fleet.drain_results()
             dt = time.time() - t0
             stats = fleet.stats()[args.n]
-            return results, dt, stats
+            return results, dt, stats, fleet.fault_stats()
 
-    results, dt, stats = asyncio.run(serve())
+    results, dt, stats, faults = asyncio.run(serve())
     ticks = sum(s.session_ticks for s in stats)
     print(
         f"fleet: {args.replicas}x(N={args.n}, E={args.slots}) "
@@ -285,6 +298,11 @@ def main_fleet(args):
         f"{dt:.2f}s ({ticks / dt:.1f} ticks/s incl. compile; per-replica "
         f"occupancy {[round(s.occupancy, 2) for s in stats]})"
     )
+    if args.checkpoint_every or any(faults.values()):
+        print(
+            "fault tolerance: "
+            + ", ".join(f"{k}={v}" for k, v in sorted(faults.items()))
+        )
 
 
 def main(argv=None):
@@ -341,6 +359,17 @@ def main(argv=None):
                     default="local",
                     help="replica transport: in-process event-loop tasks or "
                          "one OS process per replica (pipe, chunk batches)")
+    ap.add_argument("--checkpoint-every", type=int, default=0,
+                    help="auto-checkpoint live fleet sessions every K "
+                         "router rounds (0: failover off); a crashed "
+                         "replica's sessions then restore bit-identically "
+                         "onto a respawned replacement")
+    ap.add_argument("--rpc-timeout", type=float, default=120.0,
+                    help="per-RPC reply deadline for process replicas; a "
+                         "hung child trips it and is treated as dead")
+    ap.add_argument("--rpc-retries", type=int, default=3,
+                    help="send-side RPC retries (exponential backoff) "
+                         "before a process replica is declared dead")
     ap.add_argument("--bench", default=None,
                     help="BENCH_serve.json to calibrate the capacity planner "
                          "from (default: ./BENCH_serve.json if present)")

@@ -9,12 +9,22 @@ admission control, and the capacity planner (`planner.py`) turns the
 measured BENCH_serve.json grid into an analytical
 `sessions_per_sec(N, E, ...)` model for sizing all of it.
 
+Fault tolerance is layered onto the same pieces (docs/ARCHITECTURE.md
+"Failure domains"): replica supervision (RPC deadlines, send retries,
+health states) detects failures, the router's checkpoint-based failover
+(`FleetRouter(checkpoint_every=...)`) recovers sessions bit-identically
+onto respawned replicas, the engine's nan guard quarantines a divergent
+tenant's lane without touching co-tenants, and `faults.py` injects
+deterministic crash/hang/delay/drop/NaN faults so every one of those
+paths is tested.
+
 Rule of thumb (docs/ARCHITECTURE.md): execution capabilities are
 ExecPlan fields; PLACEMENT — which replica, which pool, how many — is
 fleet fields.
 """
 
-from .frontend import AdmissionError, FleetFrontend
+from .faults import CRASH_EXIT_CODE, FAULT_KINDS, Fault, FaultPlan, FaultRuntime
+from .frontend import AdmissionError, FleetFrontend, OverloadError
 from .planner import (
     CapacityModel,
     FleetPlan,
@@ -24,21 +34,35 @@ from .planner import (
     usable_cores,
 )
 from .replica import (
+    HEALTH_DEAD,
+    HEALTH_DEGRADED,
+    HEALTH_HEALTHY,
     LocalReplica,
     ProcessReplica,
     ReplicaError,
     make_engine,
     start_fleet,
+    validate_supervision,
 )
-from .router import FleetRouter
+from .router import FleetFaultStats, FleetRouter
 
 __all__ = [
     "AdmissionError",
+    "CRASH_EXIT_CODE",
     "CapacityModel",
+    "FAULT_KINDS",
+    "Fault",
+    "FaultPlan",
+    "FaultRuntime",
+    "FleetFaultStats",
     "FleetFrontend",
     "FleetPlan",
     "FleetRouter",
+    "HEALTH_DEAD",
+    "HEALTH_DEGRADED",
+    "HEALTH_HEALTHY",
     "LocalReplica",
+    "OverloadError",
     "ProcessReplica",
     "ReplicaError",
     "ReplicaSpec",
@@ -47,4 +71,5 @@ __all__ = [
     "measure_probe_rates",
     "start_fleet",
     "usable_cores",
+    "validate_supervision",
 ]

@@ -377,6 +377,23 @@ class CapacityModel:
         cores = usable_cores() if cores is None else cores
         return self.sessions_per_sec(n, e, **kw) * min(replicas, max(cores, 1))
 
+    def degraded_fleet_sessions_per_sec(
+        self,
+        n: int,
+        e: int,
+        replicas: int,
+        cores: Optional[int] = None,
+        **kw,
+    ) -> float:
+        """Sustained capacity with ONE replica removed — the admission
+        ceiling a pool should enforce while a replica is unhealthy or
+        being respawned (the fleet frontend's degraded mode sheds new
+        streams above it rather than queueing behind the recovery)."""
+        kw.setdefault("sustained", True)
+        return self.fleet_sessions_per_sec(
+            n, e, replicas=max(replicas - 1, 1), cores=cores, **kw
+        )
+
     # -- self-assessment ----------------------------------------------------
 
     def prediction_error(self) -> dict:

@@ -172,6 +172,10 @@ class StreamSession:
     _finished_tick: int = dataclasses.field(default=-1, repr=False)
     _n_out: int = dataclasses.field(default=1, repr=False)  # session width
     _restored: bool = dataclasses.field(default=False, repr=False)
+    # set by the nan guard when this tenant's lane went non-finite; the
+    # session is force-retired at the next boundary with the message on
+    # its SessionResult.error
+    _error: Optional[str] = dataclasses.field(default=None, repr=False)
 
 
 @dataclasses.dataclass
@@ -190,6 +194,11 @@ class SessionResult:
     predictions: Optional[np.ndarray] = None  # (T, n_out) a-priori per tick
     learned_readout: Optional[Readout] = None  # final trained W (washout=0)
     learn_nmse: Optional[float] = None  # online NMSE after learn_washout
+    # structured failure: set when the engine quarantined this tenant's
+    # lane (non-finite state/outputs detected). The harvested arrays above
+    # then hold the clean prefix BEFORE the offending chunk; co-tenant
+    # lanes are untouched (tests/test_fleet_faults.py pins bit-equality).
+    error: Optional[str] = None
 
 
 @dataclasses.dataclass
@@ -262,6 +271,12 @@ class EngineStats:
     # SimSpec hash differs from the template's (appended with a default so
     # stats pickled by older replicas still unpickle)
     sub_engines: int = 0
+    # fault tolerance: tenant lanes the nan guard quarantined (sub-engines
+    # included), and the owning replica's health (`healthy | degraded |
+    # dead` — stamped by the replica transport, "healthy" for a bare
+    # engine). Defaults keep older pickled stats loadable.
+    quarantined_lanes: int = 0
+    health: str = "healthy"
 
     def to_dict(self) -> dict:
         return dataclasses.asdict(self)
@@ -439,6 +454,7 @@ class ReservoirEngine:
         precision: Optional[str] = None,
         compilation_cache_dir: Optional[str] = None,
         prewarm: bool = True,
+        nan_guard: bool = True,
     ):
         if isinstance(res, CompiledSim):
             sim = res
@@ -582,6 +598,15 @@ class ReservoirEngine:
         self._mask_dev: Optional[jnp.ndarray] = None
         self._lmask_np: Optional[np.ndarray] = None
         self._lmask_dev: Optional[jnp.ndarray] = None
+        # -- tenant lane quarantine -----------------------------------------
+        # nan_guard=True: every harvested chunk's state/output/prediction
+        # blocks are scanned for non-finite values (one aggregate isfinite
+        # per block on the cheap path); an offending tenant's lane is
+        # QUARANTINED — force-retired at the next boundary with a
+        # structured SessionResult.error — while co-tenant lanes stream on
+        # bit-identically (lanes are independent columns of the E axis).
+        self.nan_guard = bool(nan_guard)
+        self._quarantine: List[Tuple[int, StreamSession]] = []
         # the launched-but-unharvested chunk (the pipeline's second buffer)
         self._pending: Optional[_ChunkPlan] = None
         # wall time of recent step_chunk calls that launched work — the
@@ -686,6 +711,7 @@ class ReservoirEngine:
             n_out=self.store.n_out,
             max_retained=self.max_retained,
             prewarm=False,
+            nan_guard=self.nan_guard,
         )
 
     def submit(self, session: StreamSession) -> None:
@@ -848,15 +874,21 @@ class ReservoirEngine:
         device->host transfers, and re-uploading the history just so the
         caller can pull it back down would round-trip every finished
         session's full state through the device."""
+        # empty accumulators (a lane quarantined before its first harvest)
+        # yield (0, width) arrays so error results keep uniform shapes
         states = None
         if sess.collect_states:
-            states = np.concatenate(
-                [np.atleast_2d(np.asarray(s)) for s in sess._states]
+            states = (
+                np.concatenate([np.atleast_2d(np.asarray(s)) for s in sess._states])
+                if sess._states
+                else np.zeros((0, self.store.n), self.store.dtype)
             )
         outputs = None
         if sess.readout is not None:
-            outs = np.concatenate(
-                [np.atleast_2d(np.asarray(o)) for o in sess._outs]
+            outs = (
+                np.concatenate([np.atleast_2d(np.asarray(o)) for o in sess._outs])
+                if sess._outs
+                else np.zeros((0, sess._n_out), self.store.dtype)
             )
             outputs = outs[sess.readout.washout :]
         predictions = None
@@ -864,8 +896,10 @@ class ReservoirEngine:
         learn_nmse = None
         if sess.targets is not None:
             q = sess._n_out
-            predictions = np.concatenate(
-                [np.atleast_2d(np.asarray(p)) for p in sess._preds]
+            predictions = (
+                np.concatenate([np.atleast_2d(np.asarray(p)) for p in sess._preds])
+                if sess._preds
+                else np.zeros((0, q), self.store.dtype)
             )
             if learned_w is not None:
                 # washout=0: the trained readout applies to arbitrary
@@ -891,6 +925,7 @@ class ReservoirEngine:
             predictions=predictions,
             learned_readout=learned_readout,
             learn_nmse=learn_nmse,
+            error=sess._error,
         )
         sess._states = []
         sess._outs = []
@@ -1155,6 +1190,82 @@ class ReservoirEngine:
         self.store.retire_many(slots)
         self._finishing = []
 
+    def _scan_for_nonfinite(
+        self,
+        plan: _ChunkPlan,
+        states_np: Optional[np.ndarray],
+        outs_np: Optional[np.ndarray],
+        preds_np: Optional[np.ndarray],
+    ) -> None:
+        """Per-chunk nan guard over the harvested blocks. The cheap path is
+        one aggregate isfinite per block; only when that trips does the
+        per-lane isolation run. An offending tenant is marked for
+        quarantine — its lane retires at the next boundary with a
+        structured error, its already-harvested prefix intact. Co-tenant
+        lanes are untouched by construction: every lane is an independent
+        column of the ensemble axis (the batched GEMMs never mix columns),
+        so a NaN cannot cross lanes and the guard itself performs no
+        device work. A session with no harvested block at all (no states
+        collected, no readout, no targets) has no surface to scan — its
+        divergence shows up in final_m instead."""
+        blocks = [b for b in (states_np, outs_np, preds_np) if b is not None]
+        if not blocks or all(np.isfinite(b).all() for b in blocks):
+            return
+        for sess, slot, n in plan.entries:
+            if n == 0 or sess._error is not None:
+                continue
+            bad = []
+            if (
+                states_np is not None
+                and sess.collect_states
+                and not np.isfinite(states_np[:n, :, slot]).all()
+            ):
+                bad.append("states")
+            if (
+                outs_np is not None
+                and sess.readout is not None
+                and not np.isfinite(outs_np[:n, slot, : sess._n_out]).all()
+            ):
+                bad.append("outputs")
+            if (
+                preds_np is not None
+                and sess.targets is not None
+                and not np.isfinite(preds_np[:n, slot, : sess._n_out]).all()
+            ):
+                bad.append("predictions")
+            if bad:
+                sess._error = (
+                    f"non_finite_state: session {sess.sid} (lane {slot}) "
+                    f"produced non-finite {'/'.join(bad)} in the chunk "
+                    f"ending at tick {sess._t}; tenant quarantined "
+                    f"(co-tenant lanes unaffected)"
+                )
+                self.scheduler.stats.quarantined_lanes += 1
+                self._quarantine.append((slot, sess))
+
+    def _retire_quarantined(self) -> None:
+        """Force-retire lanes the nan guard flagged: record an error-bearing
+        SessionResult (clean harvested prefix + structured error) and free
+        the slot. A flagged session that also finished naturally was
+        already retired by the finisher path — its result still carries
+        the error via `_record_result`."""
+        if not self._quarantine:
+            return
+        for slot, sess in self._quarantine:
+            if self.scheduler.running.get(slot) is not sess:
+                continue  # finished (or detached) since it was flagged
+            self.scheduler.retire(slot)
+            sess._finished_tick = self.tick_count
+            final_m = np.asarray(self.store.state_column(slot)).copy()
+            learned_w = None
+            if self.learn is not None and sess.targets is not None:
+                learned_w = np.asarray(
+                    self.store.learn_w_columns([slot])[0]
+                ).copy()
+            self._record_result(sess, slot, final_m, learned_w=learned_w)
+            self.store.retire(slot)
+        self._quarantine = []
+
     def _assemble_chunk(self) -> Optional[_ChunkPlan]:
         """Host-side boundary work: finalize the previous chunk's finishers,
         autoscale, admit, and build the next K-tick u/mask block.
@@ -1166,6 +1277,10 @@ class ReservoirEngine:
         # were masked off after their last tick, so the chunk-output column
         # IS their final state — snapshot + free in one gather/scatter pair.
         self._retire_finishers()
+
+        # 1b) lanes the nan guard flagged at the last harvest: force-retire
+        # them (error result) before admissions so their slots refill
+        self._retire_quarantined()
 
         # 2) resize at the boundary (slots now reflect retirements)
         if self.autoscale is not None:
@@ -1292,6 +1407,8 @@ class ReservoirEngine:
             if plan.any_learn and plan.preds_block is not None
             else None
         )
+        if self.nan_guard:
+            self._scan_for_nonfinite(plan, states_np, outs_np, preds_np)
         # .copy(): a bare slice is a VIEW pinning the whole (K, N, E) block
         # for the session's lifetime — a long-running collector would retain
         # every chunk block it ever touched instead of its own lane.
@@ -1299,6 +1416,9 @@ class ReservoirEngine:
         # off here so accumulators stay at session width.
         for sess, slot, n in plan.entries:
             if n == 0:  # idle open stream — nothing served this chunk
+                continue
+            if sess._error is not None:
+                # quarantined: keep the clean prefix, drop the poisoned rows
                 continue
             if sess.collect_states:
                 sess._states.append(states_np[:n, :, slot].copy())  # (n, N)
@@ -1486,23 +1606,23 @@ class ReservoirEngine:
             if sub.results:
                 self.results.update(sub.pop_results())
 
-    def checkpoint_session(self, sid: int) -> SessionCheckpoint:
-        """Freeze a live session into a host-side SessionCheckpoint and
-        remove it from this engine (detach — not a retirement; no
-        SessionResult is recorded here). The checkpoint restores into any
-        engine compiled for the same reservoir spec via
-        `restore_session`, resuming bit-identically on the scan backend.
-        Quiesces the pipeline first."""
-        self.quiesce()
-        eng = self._owner(sid)
-        if eng is not self:
-            return eng.checkpoint_session(sid)
-        slot, sess = self._find_session(sid)
+    def _freeze_session(
+        self, slot: Optional[int], sess: StreamSession, detach: bool
+    ) -> SessionCheckpoint:
+        """Build a host-side SessionCheckpoint of one live session (the
+        pipeline must be quiesced: slot columns current, nothing in
+        flight). detach=True removes the session from this engine (the
+        migration path); detach=False leaves it serving untouched — every
+        array that could later mutate is copied or replaced-on-write
+        (u_seq/targets only ever grow by reassignment in append_ticks;
+        prefix blocks concatenate into fresh arrays), so a non-destructive
+        snapshot never aliases live engine state."""
         q = sess._n_out
         learning = self.learn is not None and sess.targets is not None
         if slot is None:
             # still queued: nothing on device yet
-            self.scheduler.remove_queued(sess)
+            if detach:
+                self.scheduler.remove_queued(sess)
             m = None if sess.m0 is None else np.asarray(sess.m0)
             P = Wl = None
         else:
@@ -1520,8 +1640,9 @@ class ReservoirEngine:
                 Wl = np.asarray(self.store.learn_w_columns([slot])[0])[:, :q]
             else:
                 P = Wl = None
-            self.scheduler.detach(slot)
-            self.store.retire(slot)
+            if detach:
+                self.scheduler.detach(slot)
+                self.store.retire(slot)
 
         def cat(blocks):
             if not blocks:
@@ -1556,10 +1677,48 @@ class ReservoirEngine:
             Wl=Wl,
             spec=_spec_host(sess.spec),
         )
-        sess._states = []
-        sess._outs = []
-        sess._preds = []
+        if detach:
+            sess._states = []
+            sess._outs = []
+            sess._preds = []
         return ckpt
+
+    def checkpoint_session(self, sid: int) -> SessionCheckpoint:
+        """Freeze a live session into a host-side SessionCheckpoint and
+        remove it from this engine (detach — not a retirement; no
+        SessionResult is recorded here). The checkpoint restores into any
+        engine compiled for the same reservoir spec via
+        `restore_session`, resuming bit-identically on the scan backend.
+        Quiesces the pipeline first."""
+        self.quiesce()
+        eng = self._owner(sid)
+        if eng is not self:
+            return eng.checkpoint_session(sid)
+        slot, sess = self._find_session(sid)
+        return self._freeze_session(slot, sess, detach=True)
+
+    def snapshot_sessions(self) -> List[SessionCheckpoint]:
+        """Non-destructive checkpoints of EVERY live session (running and
+        queued, sub-engines included) — the periodic auto-checkpoint the
+        fleet failover layer rides: the router calls this every
+        `checkpoint_every` pump rounds and keeps the checkpoints PARENT
+        side, so they survive the replica process dying. Quiesces the
+        pipeline first; every session keeps serving afterwards, and its
+        stream is bit-identical to one that was never snapshotted
+        (tests/test_fleet_faults.py pins this). Sessions already flagged
+        by the nan guard are excluded — failover must not resurrect a
+        poisoned stream."""
+        self.quiesce()
+        out: List[SessionCheckpoint] = []
+        for slot, sess in list(self.scheduler.running.items()):
+            if sess._error is None:
+                out.append(self._freeze_session(slot, sess, detach=False))
+        for sess in list(self.scheduler.queue):
+            if sess._error is None:
+                out.append(self._freeze_session(None, sess, detach=False))
+        for sub in self._subengines.values():
+            out.extend(sub.snapshot_sessions())
+        return out
 
     def restore_session(self, ckpt: SessionCheckpoint) -> StreamSession:
         """Resume a checkpointed session on THIS engine: re-submit it with
@@ -1634,4 +1793,11 @@ class ReservoirEngine:
                 else self.num_slots * self.chunk_ticks / median
             ),
             sub_engines=len(self._subengines),
+            quarantined_lanes=(
+                sched.stats.quarantined_lanes
+                + sum(
+                    s.scheduler.stats.quarantined_lanes
+                    for s in self._subengines.values()
+                )
+            ),
         )

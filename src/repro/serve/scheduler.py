@@ -52,6 +52,10 @@ class SchedulerStats:
     # sessions detached mid-stream (fleet checkpoint/migration) — they
     # leave without counting as retired, so occupancy stays honest
     detached: int = 0
+    # tenant lanes the engine's nan guard force-retired (non-finite
+    # state/output detected in a harvested chunk; the session's result
+    # carries a structured error and co-tenant lanes are untouched)
+    quarantined_lanes: int = 0
 
 
 class SlotScheduler:
